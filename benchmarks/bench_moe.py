@@ -1,0 +1,162 @@
+"""Fig. 9/10 + Table 6: MoE dispatch/combine latency and derived decode speed.
+
+DeepSeek-V3/R1 microbenchmark geometry (§7.4.3): 7168-byte fp8 tokens +
+56 fp32 scales dispatched to 8 random experts; decode batch 128; prefill
+chunk 4096.  EP in {8, 16, 32, 64}, 8 GPUs/node, EFA and CX-7.
+
+A DeepEP-style baseline rides along: ordered-RC per-token writes (no
+private/contiguous two-phase, more packets, no route exchange needed
+because RC ordering carries implicit structure) — modeled as one WRITE per
+token with the same fabric.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import Fabric, ScatterDst
+from repro.moekit import MoEConfig, MoEEndpoint, make_endpoints
+
+TOKEN_BYTES = 7168 + 56 * 4       # fp8 payload + fp32 scales
+TOP_K = 8
+E_TOTAL = 256                      # DeepSeek-V3 routed experts (EP<=64 -> >=4/rank)
+
+
+def _inputs(cfg: MoEConfig, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    tokens, eids = [], []
+    for r in range(cfg.n_ranks):
+        tokens.append(rng.integers(0, 255, (cfg.max_tokens, cfg.token_bytes),
+                                   dtype=np.uint8))
+        eids.append(np.stack([
+            rng.choice(cfg.n_experts, cfg.top_k, replace=False)
+            for _ in range(cfg.max_tokens)]).astype(np.int32))
+    return tokens, eids
+
+
+def bench_dispatch_combine(ep: int, batch: int, nic: str,
+                           t_priv: int = 32, rounds: int = 3) -> Dict[str, float]:
+    cfg = MoEConfig(n_ranks=ep, n_experts=max(E_TOTAL, ep), top_k=TOP_K,
+                    max_tokens=batch, token_bytes=TOKEN_BYTES, t_priv=t_priv)
+    fab = Fabric(seed=1)
+    eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=8)
+    disp, comb = [], []
+    for rnd in range(rounds):
+        tokens, eids = _inputs(cfg, seed=rnd)
+        state = {"d": 0}
+
+        def make_cb(r):
+            def cb():
+                state["d"] += 1
+                # combine echoes the received tokens straight back
+                ctx = eps[r]._last_ctx
+                slabs = eps[r].gather_expert_tokens(ctx)
+                eps[r].combine(ctx, slabs, lambda: None)
+            return cb
+
+        for r in range(ep):
+            eps[r].dispatch(tokens[r], eids[r], make_cb(r))
+        fab.run()
+        disp.append(np.median([e.stats["dispatch_us"] for e in eps]))
+        comb.append(np.median([e.stats["combine_us"] for e in eps]))
+    return {"dispatch_us": float(np.median(disp)),
+            "combine_us": float(np.median(comb))}
+
+
+def bench_deepep_style(ep: int, batch: int, nic: str = "cx7") -> Dict[str, float]:
+    """Ordered-RC per-token WRITEs (DeepEP's strategy, §6.4): lower latency
+    to first transfer, more per-token work and packets."""
+    cfg = MoEConfig(n_ranks=ep, n_experts=max(E_TOTAL, ep), top_k=TOP_K,
+                    max_tokens=batch, token_bytes=TOKEN_BYTES)
+    fab = Fabric(seed=2)
+    eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=8)
+    tokens, eids = _inputs(cfg)
+    done = []
+    t0 = fab.now
+    GPU_PER_TOKEN_US = 0.1      # SM-driven per-token issue cost
+    for r in range(ep):
+        e = eps[r]
+        fe = eids[r].reshape(-1)
+        ft = np.repeat(np.arange(cfg.max_tokens), cfg.top_k)
+        dest = fe // cfg.e_local
+        # one WRITE per token copy, issued progressively (no route exchange)
+        for i in np.argsort(dest, kind="stable"):
+            d = int(dest[i])
+            sd = ScatterDst(len=cfg.token_bytes, src=int(ft[i]) * cfg.token_bytes,
+                            dst=(eps[d].d_shared, int(i) * cfg.token_bytes))
+            fab.loop.schedule(i * GPU_PER_TOKEN_US,
+                              lambda e=e, sd=sd: e.engine.submit_scatter(
+                                  e.h_send, [sd], imm=0x99))
+    # receiver: every rank expects its incoming token count
+    for r in range(ep):
+        incoming = sum(int(((eids[s] // cfg.e_local) == r).sum())
+                       for s in range(ep))
+        eps[r].engine.expect_imm_count(0x99, incoming,
+                                       lambda: done.append(fab.now))
+    t = fab.run()
+    return {"dispatch_us": (np.median(done) - t0) if done else t}
+
+
+# paper Fig. 9 anchors (us, EP64 decode, approximate bar heights)
+PAPER_EP64 = {"cx7": {"dispatch": 163.0, "combine": 318.0},
+              "efa": {"dispatch": 212.0, "combine": 413.0}}
+
+
+def run(report) -> None:
+    for nic in ("cx7", "efa"):
+        for ep in (8, 16, 32, 64):
+            r = bench_dispatch_combine(ep, 128, nic)
+            note = ""
+            if ep == 64:
+                p = PAPER_EP64[nic]
+                note = (f" (paper ~{p['dispatch']:.0f}/{p['combine']:.0f}us)")
+            report(f"moe_decode_ep{ep}_{nic}_dispatch", r["dispatch_us"],
+                   f"us dispatch; combine {r['combine_us']:.0f}us{note}")
+    # DeepEP-style ordered-RC baseline at EP32 decode
+    d = bench_deepep_style(32, 128, "cx7")
+    ours = bench_dispatch_combine(32, 128, "cx7")
+    report("moe_deepep_style_ep32", d["dispatch_us"],
+           f"us per-token-RC dispatch vs ours {ours['dispatch_us']:.0f}us "
+           f"(bulk transfers win at scale)")
+    # prefill-sized chunk (Fig. 10): 4096 tokens
+    pre = bench_dispatch_combine(16, 4096 // 16, "cx7", rounds=1)
+    report("moe_prefill_ep16_cx7", pre["dispatch_us"],
+           f"us dispatch (256 tok/rank chunk); combine {pre['combine_us']:.0f}us")
+    bench_dual_batch_overlap(report)
+
+
+# DeepSeek-V3-class decode compute per token per MoE layer (us) — attention
+# + shared expert + grouped GEMM at EP=DP=64 (derived from the paper's ~32
+# tok/s end-to-end at batch 128 over 61 layers).
+COMPUTE_US_PER_TOKEN = 7.0
+
+
+def bench_dual_batch_overlap(report) -> None:
+    """Table 7 analog: dual-batch overlap pipelines one half-batch's compute
+    with the other's dispatch/combine.  Effective per-layer time:
+      no overlap: t_comp(B) + t_comm(B)
+      dual-batch: t_comp(B/2) + t_comm(B/2) + max(t_comp(B/2), t_comm(B/2))
+    Low-latency kernels gain modestly at large B; a high-latency
+    implementation (pplx-style, modeled as 8x our comm latency) DEGRADES —
+    the paper's conclusion that dispatch latency still matters even in
+    throughput regimes."""
+    for batch in (128, 64, 32):
+        r_full = bench_dispatch_combine(64, batch, "efa", rounds=2)
+        r_half = bench_dispatch_combine(64, batch // 2, "efa", rounds=2)
+        comm_f = r_full["dispatch_us"] + r_full["combine_us"]
+        comm_h = r_half["dispatch_us"] + r_half["combine_us"]
+        comp_f = COMPUTE_US_PER_TOKEN * batch
+        comp_h = comp_f / 2
+        t_no = comp_f + comm_f
+        t_dual = comp_h + comm_h + max(comp_h, comm_h)
+        ours = t_no / t_dual
+        # high-latency implementation: same compute, 8x comm
+        t_no_hl = comp_f + 8 * comm_f
+        t_dual_hl = comp_h + 8 * comm_h + max(comp_h, 8 * comm_h)
+        theirs = t_no_hl / t_dual_hl
+        report(f"dual_batch_overlap_b{batch}", t_dual,
+               f"us/layer dual-batch vs {t_no:.0f} no-overlap "
+               f"(gain {ours:.2f}x ours; {theirs:.2f}x at 8x comm latency; "
+               f"paper: modest gains for ours, degradation for pplx)")

@@ -1,0 +1,72 @@
+"""Table 2 / Fig. 8: point-to-point WRITE throughput vs message size.
+
+Single WRITEs are issued serially (submit -> completion -> next), paged
+WRITEs are pipelined, matching the paper's methodology (ib_write_bw /
+fi_rma_bw counterparts).  Paper-measured values ride along so the report
+shows the calibration error of the fabric model.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Fabric, Pages
+
+# paper Table 2 (Gbps, op/s)
+PAPER_SINGLE = {"efa": {65536: 16, 262144: 54, 1048576: 145, 33554432: 336},
+                "cx7": {65536: 44, 262144: 116, 1048576: 245, 33554432: 378}}
+PAPER_PAGED = {"efa": {1024: (17, 2.11e6), 8192: (138, 2.10e6),
+                       16384: (274, 2.08e6), 65536: (364, 0.69e6)},
+               "cx7": {1024: (91, 11.10e6), 8192: (320, 4.89e6),
+                       16384: (367, 2.80e6), 65536: (370, 0.71e6)}}
+
+
+def bench_single(nic: str, size: int, iters: int = 8) -> float:
+    """Serial single-write throughput (Gbps)."""
+    fab = Fabric(seed=0)
+    a = fab.add_engine("a", nic=nic)
+    b = fab.add_engine("b", nic=nic)
+    src = np.zeros(size, np.uint8)
+    dst = np.zeros(size, np.uint8)
+    hs, _ = a.reg_mr(src)
+    _, dd = b.reg_mr(dst)
+    t0 = fab.now
+    state = {"n": 0}
+
+    def issue() -> None:
+        if state["n"] < iters:
+            state["n"] += 1
+            a.submit_single_write(size, None, (hs, 0), (dd, 0), on_done=issue)
+
+    issue()
+    t = fab.run() - t0
+    return size * iters * 8e-3 / t          # Gbps (us domain)
+
+
+def bench_paged(nic: str, page: int, n_pages: int = 4096):
+    """Pipelined paged-write throughput (Gbps, op/s)."""
+    fab = Fabric(seed=0)
+    a = fab.add_engine("a", nic=nic)
+    b = fab.add_engine("b", nic=nic)
+    src = np.zeros(max(n_pages * page, 1), np.uint8)
+    dst = np.zeros(max(n_pages * page, 1), np.uint8)
+    hs, _ = a.reg_mr(src)
+    _, dd = b.reg_mr(dst)
+    idx = tuple(range(n_pages))
+    t0 = fab.now
+    a.submit_paged_writes(page, 1, (hs, Pages(idx, page)), (dd, Pages(idx, page)))
+    t = fab.run() - t0
+    return n_pages * page * 8e-3 / t, n_pages / (t * 1e-6)
+
+
+def run(report) -> None:
+    for nic in ("efa", "cx7"):
+        for size, paper in PAPER_SINGLE[nic].items():
+            gbps = bench_single(nic, size)
+            report(f"p2p_single_{nic}_{size >> 10}KiB", gbps,
+                   f"Gbps (paper {paper}; err {100 * (gbps - paper) / paper:+.0f}%)")
+        for page, (paper_gbps, paper_ops) in PAPER_PAGED[nic].items():
+            gbps, ops = bench_paged(nic, page)
+            report(f"p2p_paged_{nic}_{page >> 10 or 1}KiB", gbps,
+                   f"Gbps {ops / 1e6:.2f}Mop/s (paper {paper_gbps} Gbps "
+                   f"{paper_ops / 1e6:.2f}M; err {100 * (gbps - paper_gbps) / paper_gbps:+.0f}%)")

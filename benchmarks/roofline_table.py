@@ -1,0 +1,41 @@
+"""Render the §Roofline table from the dry-run JSON artifacts."""
+
+import json
+import pathlib
+import sys
+
+OUT = pathlib.Path(__file__).resolve().parent / "out" / "dryrun"
+
+
+def rows(mesh="pod16x16"):
+    out = []
+    for f in sorted(OUT.glob(f"*_{mesh}*.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") != "ok":
+            continue
+        if d.get("moe_mode") not in (None, "a2a") or "_v" in f.stem.split(mesh)[-1]:
+            pass
+        out.append(d)
+    return out
+
+
+def fmt(mesh="pod16x16", variant=None):
+    print(f"| arch | shape | t_compute s | t_memory s | t_collective s | "
+          f"dominant | useful | peak mem/dev GB |")
+    print("|---|---|---|---|---|---|---|---|")
+    seen = set()
+    for d in rows(mesh):
+        tag = (d["arch"], d["shape"])
+        if tag in seen:
+            continue
+        seen.add(tag)
+        pm = d.get("memory_analysis", {})
+        mem = (pm.get("argument_size_in_bytes", 0) + pm.get("temp_size_in_bytes", 0)
+               + pm.get("output_size_in_bytes", 0) - pm.get("alias_size_in_bytes", 0))
+        print(f"| {d['arch']} | {d['shape']} | {d['t_compute']:.3g} | "
+              f"{d['t_memory']:.3g} | {d['t_collective']:.3g} | {d['dominant']} | "
+              f"{d['useful_flops_ratio']:.2f} | {mem / 2**30:.2f} |")
+
+
+if __name__ == "__main__":
+    fmt(*(sys.argv[1:] or ["pod16x16"]))

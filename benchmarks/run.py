@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+``python -m benchmarks.run [p2p|kvcache|rlweights|moe|ablation ...]``
+runs a subset (default: all).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (bench_ablation, bench_kvcache, bench_moe, bench_p2p,
+                   bench_rlweights)
+    modules = {
+        "p2p": bench_p2p,              # Table 2 / Fig. 8
+        "kvcache": bench_kvcache,      # Table 3 / Table 4
+        "rlweights": bench_rlweights,  # Table 5
+        "moe": bench_moe,              # Fig. 9/10 / Table 6
+        "ablation": bench_ablation,    # Fig. 11 / Table 8/9
+    }
+    wanted = sys.argv[1:] or list(modules)
+    rows = []
+
+    def report(name: str, us, derived: str = "") -> None:
+        rows.append((name, us, derived))
+        print(f"{name},{0.0 if us is None else float(us):.3f},{derived}")
+
+    for key in wanted:
+        mod = modules[key]
+        t0 = time.time()
+        print(f"# == {key}: {mod.__doc__.splitlines()[0]} ==")
+        mod.run(report)
+        print(f"# {key} done in {time.time() - t0:.1f}s")
+    print(f"# total: {len(rows)} measurements")
+
+
+if __name__ == "__main__":
+    main()

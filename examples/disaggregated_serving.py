@@ -1,0 +1,53 @@
+"""Disaggregated serving demo (paper §4): prefillers + decoders + scheduler.
+
+Two prefill nodes and two decode nodes serve a batch of requests over the
+simulated EFA fabric; KV pages move layer-by-layer via paged WRITEIMM,
+decode starts on the ImmCounter, and the generations are verified against a
+monolithic run of the same model.
+
+    PYTHONPATH=src python examples/disaggregated_serving.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import Fabric
+from repro.models import decode_step, init_params, prefill
+from repro.serving import Decoder, Prefiller, Scheduler
+
+cfg = get_config("gemma3-1b").reduced()
+params = init_params(cfg, jax.random.PRNGKey(0))
+
+fab = Fabric(seed=1)
+prefillers = [Prefiller(fab, f"prefill{i}", cfg, params, nic="efa")
+              for i in range(2)]
+decoders = [Decoder(fab, f"decode{i}", cfg, params, nic="efa")
+            for i in range(2)]
+sched = Scheduler(fab, prefillers, decoders)
+
+rng = np.random.default_rng(0)
+requests = [rng.integers(0, cfg.vocab, size=24 + 8 * i) for i in range(4)]
+rids = [sched.submit(ids, n_decode=4) for ids in requests]
+fab.run()
+
+for rid, ids in zip(rids, requests):
+    dec = decoders[rid % len(decoders)]
+    r = dec.results[rid]
+    # monolithic reference
+    lg, cache = prefill(params, jnp.asarray(ids)[None], cfg,
+                        max_len=len(ids) + 64, moe_mode="dense")
+    toks = [int(jnp.argmax(lg[0]))]
+    pos = len(ids)
+    for _ in range(3):
+        lg, cache = decode_step(params, jnp.asarray([[toks[-1]]]),
+                                jnp.asarray([pos], jnp.int32), cache, cfg,
+                                moe_mode="dense")
+        toks.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    ok = r["tokens"] == toks
+    print(f"req {rid}: prompt {len(ids):3d} tok  TTFT {r['ttft_us']:7.1f}us  "
+          f"tokens {r['tokens']}  match_monolithic={ok}")
+    assert ok
+print("disaggregated == monolithic for all requests ✓")

@@ -1,0 +1,3 @@
+"""repro: fabric-lib (RDMA P2P for LLM systems) reproduced as a JAX/TPU framework."""
+
+__version__ = "1.0.0"

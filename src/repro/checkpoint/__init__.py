@@ -1,0 +1,4 @@
+from . import ckpt
+from .ckpt import restore, save
+
+__all__ = ["ckpt", "save", "restore"]

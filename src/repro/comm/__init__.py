@@ -1,0 +1,13 @@
+"""TPU-native mappings of the paper's point-to-point patterns.
+
+``moe_a2a``   — §6 dispatch/combine as shard_map all-to-all (+ Pallas pack)
+``reshard``   — §5 weight-transfer schedules as collective-permute plans
+``context``   — ambient mesh plumbing
+"""
+
+from .context import current_mesh, data_axes, use_mesh
+from .moe_a2a import moe_a2a, moe_ep_psum
+from .reshard import build_reshard, fsdp_to_tp, reshard_plan
+
+__all__ = ["use_mesh", "current_mesh", "data_axes", "moe_a2a", "moe_ep_psum",
+           "fsdp_to_tp", "reshard_plan", "build_reshard"]

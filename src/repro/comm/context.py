@@ -1,0 +1,30 @@
+"""Mesh context: lets deeply-nested layers (MoE a2a) find the active mesh."""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: jax.sharding.Mesh):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def data_axes(mesh: jax.sharding.Mesh):
+    """Batch-sharding axes of a production mesh ((pod,)data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

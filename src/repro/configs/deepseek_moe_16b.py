@@ -1,0 +1,21 @@
+"""DeepSeekMoE-16B: fine-grained MoE, 2 shared + 64 routed top-6.
+[arXiv:2401.06066]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    source="arXiv:2401.06066",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=10944,             # dense FFN of the first (dense) layer, per the model card
+    vocab=102400,
+    n_routed=64,
+    n_shared=2,
+    top_k=6,
+    d_ff_expert=1408,
+    first_k_dense=1,
+)

@@ -1,0 +1,25 @@
+"""Gemma3-1B: 5:1 local:global attention, 128k-class context.
+[hf:google/gemma-3-1b-pt]
+
+The 5:1 sliding-window pattern makes this the one *dense* arch that runs
+long_500k (assignment rule): local layers attend within a 1024-token window;
+global layers use a sequence-sharded KV cache at 500k.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    source="hf:google/gemma-3-1b-pt",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    d_head=256,
+    d_ff=6912,
+    vocab=262144,
+    window=1024,
+    global_every=6,          # 5 local : 1 global
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,15 @@
+"""Granite-8B (code): llama-architecture dense GQA decoder. [arXiv:2405.04324]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b",
+    family="dense",
+    source="arXiv:2405.04324",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=49152,
+)

@@ -1,0 +1,26 @@
+"""Llama-3.2-Vision-90B: text decoder with interleaved cross-attention image
+layers. [hf:meta-llama/Llama-3.2-11B-Vision]
+
+Backbone only (assignment carve-out): the ViT vision encoder is a stub —
+``input_specs()`` supplies precomputed patch embeddings of shape
+(batch, vision_seq, vision_dim); a learned projector maps them to d_model.
+Pattern: every 5th layer is cross-attention (20 of 100).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=128256,
+    rope_theta=500_000.0,
+    cross_every=5,
+    vision_seq=1601,         # 1 tile x (40x40 patches + cls), ViT-H/14 @ 560px
+    vision_dim=1280,
+)

@@ -1,0 +1,20 @@
+"""Mamba2-780m: attention-free SSD (state-space duality). [arXiv:2405.21060]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    source="arXiv:2405.21060",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_ngroups=1,
+    ssm_dconv=4,
+)

@@ -1,0 +1,20 @@
+"""MusicGen-large: decoder-only transformer over EnCodec tokens.
+[arXiv:2306.05284]
+
+Backbone only (assignment carve-out): the EnCodec audio codec is a stub —
+``input_specs()`` supplies token ids of the codec vocabulary directly.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    source="arXiv:2306.05284",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=2048,
+)

@@ -1,0 +1,21 @@
+"""Qwen3-30B-A3B: 128-expert top-8 MoE, GQA kv=4. [hf:Qwen/Qwen3-30B-A3B]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_head=128,
+    d_ff=6144,              # unused (no dense layers); kept for reference
+    vocab=151936,
+    n_routed=128,
+    n_shared=0,
+    top_k=8,
+    d_ff_expert=768,
+    first_k_dense=0,
+)

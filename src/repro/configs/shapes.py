@@ -1,0 +1,59 @@
+"""Assigned input shapes and per-arch input specs (ShapeDtypeStructs).
+
+``input_specs(cfg, shape_name)`` returns stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — used by the multi-pod
+dry-run.  Decode shapes describe ``serve_step`` inputs (ONE new token plus a
+KV/state cache of ``seq_len``), not ``train_step``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> bool:
+    """Assignment rule: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False
+    return True
+
+
+def token_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the data-batch inputs of a step."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:  # decode: one new token per sequence
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    if cfg.family == "vlm":
+        # Stub modality frontend (assignment carve-out): precomputed patch
+        # embeddings replace the ViT encoder.
+        specs["vision_emb"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_seq, cfg.vision_dim), dtype)
+    return specs

@@ -1,0 +1,15 @@
+"""StableLM-3B: dense decoder, MHA-style kv=32. [hf:stabilityai/stablelm-2-1_6b]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    family="dense",
+    source="hf:stabilityai/stablelm-2-1_6b",
+    n_layers=32,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=6912,
+    vocab=50304,
+)

@@ -1,0 +1,28 @@
+"""Zamba2-1.2B: Mamba2 backbone + shared attention block. [arXiv:2411.15242]
+
+Hybrid: 38 Mamba2 layers with ONE shared attention(+FFN) block applied after
+every ``attn_every`` SSM layers (parameters reused at each application, as in
+Zamba2).  long_500k adaptation (DESIGN.md §4): the shared attention block
+uses a sliding window at 500k contexts; Zamba2 proper uses full attention,
+which is quadratic and excluded by the assignment's long-context rule.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32000,
+    ssm_state=64,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_ngroups=1,
+    attn_every=6,
+    window=4096,            # shared-attn sliding window (500k adaptation)
+)

@@ -1,0 +1,19 @@
+"""fabric-lib core: portable point-to-point communication (paper §3).
+
+The simulated-fabric reproduction of the TransferEngine: reliable-but-
+unordered transports (RC/SRD), multi-NIC DomainGroups, the Fig. 2 API and
+the ImmCounter completion primitive.
+"""
+
+from .domain import MrDesc, MrHandle, NetAddr, Pages, ScatterDst
+from .engine import Fabric, Flag, TransferEngine, NIC_PRESETS
+from .imm_counter import ImmCounter
+from .netsim import CX7, EFA_100, EFA_200, EventLoop, NicSpec
+from .uvm import UvmWatcher
+
+__all__ = [
+    "Fabric", "TransferEngine", "Flag", "NIC_PRESETS",
+    "MrDesc", "MrHandle", "NetAddr", "Pages", "ScatterDst",
+    "ImmCounter", "UvmWatcher",
+    "EventLoop", "NicSpec", "CX7", "EFA_100", "EFA_200",
+]

@@ -1,0 +1,367 @@
+"""TransferEngine: the Fig. 2 API over the simulated fabric.
+
+One ``TransferEngine`` per node manages a ``DomainGroup`` per GPU (worker
+threads in the paper; event-loop continuations here).  A ``Fabric`` owns the
+event loop and routes descriptors between engines.
+
+Faithfulness notes:
+* There are NO ordering guarantees across any operations — all completion
+  notification goes through the ImmCounter or sender-side callbacks.
+* ``submit_send`` copies the payload at submission (caller may reuse the
+  buffer immediately); one-sided WRITEs are zero-copy in the paper — the
+  simulator snapshots at post time, modeling the "don't touch src until
+  completion" contract.
+* SEND/RECV uses only the first NIC of a group (paper §3.3).
+* Large single WRITEs are striped across all NICs; paged writes, scatter and
+  barrier rotate across NICs (paper §3.4 "Sharding inside a DOMAINGROUP").
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .domain import (DomainGroup, MemoryRegion, MrDesc, MrHandle, NetAddr,
+                     Pages, ScatterDst)
+from .imm_counter import ImmCounter
+from .netsim import ENQUEUE_US, EventLoop, NicSpec, CX7, EFA_100, EFA_200
+from .transport import WireOp
+from .uvm import UvmWatcher
+
+# Extra per-WR posting overhead on the scatter/barrier path (WR templating
+# still leaves per-peer descriptor setup; calibrated to Table 9).
+SCATTER_EXTRA_US = {"cx7": 0.045, "efa": 0.0, "efa4": 0.0, "nvlink": 0.02}
+
+NIC_PRESETS: Dict[str, Tuple[NicSpec, int]] = {
+    # name -> (per-NIC spec, NICs per GPU)
+    "cx7": (CX7, 1),          # H100 + 1 x 400 Gbps ConnectX-7
+    "efa": (EFA_200, 2),      # H200 + 2 x 200 Gbps EFA (p5en)
+    "efa4": (EFA_100, 4),     # H100 + 4 x 100 Gbps EFA (p5)
+}
+
+
+class Flag:
+    """Atomic-flag completion target (paper: ``OnDone::Flag``)."""
+
+    def __init__(self) -> None:
+        self._set = False
+
+    def set(self) -> None:
+        self._set = True
+
+    def is_set(self) -> bool:
+        return self._set
+
+
+OnDone = Union[Callable[[], None], Flag, None]
+
+
+def _fire(done: OnDone) -> None:
+    if done is None:
+        return
+    if isinstance(done, Flag):
+        done.set()
+    else:
+        done()
+
+
+class TransferEngine:
+    def __init__(self, fabric: "Fabric", node: str, nic: str, num_devices: int):
+        self.fabric = fabric
+        self.loop = fabric.loop
+        self.node = node
+        spec, default_n = NIC_PRESETS[nic]
+        self.nic_name = nic
+        self.groups: Dict[int, DomainGroup] = {}
+        self.counters: Dict[int, ImmCounter] = {}
+        self._recv_pools: Dict[int, List] = {}
+        self._pending_sends: Dict[int, List] = {}
+        for dev in range(num_devices):
+            addr = NetAddr(node, dev)
+            seed = fabric.seed ^ (hash(addr) & 0xFFFF)
+            self.groups[dev] = DomainGroup(self.loop, addr, [spec] * default_n, seed)
+            self.counters[dev] = ImmCounter()
+            fabric._register_group(addr, self.groups[dev], self)
+
+    # -- identity ---------------------------------------------------------
+    def main_address(self) -> NetAddr:
+        return NetAddr(self.node, 0)
+
+    def address(self, device: int = 0) -> NetAddr:
+        return NetAddr(self.node, device)
+
+    # -- memory region management ------------------------------------------
+    def reg_mr(self, buf: np.ndarray, device: int = 0) -> Tuple[MrHandle, MrDesc]:
+        """Register a flat uint8 buffer; returns (local handle, peer desc)."""
+        return self.groups[device].register(buf, device)
+
+    def region_of(self, handle: MrHandle) -> MemoryRegion:
+        return self.fabric.group(handle.owner).region(handle.region_id)
+
+    # -- two-sided SEND/RECV ------------------------------------------------
+    def submit_recvs(self, length: int, count: int,
+                     cb: Callable[[bytes], None], device: int = 0) -> None:
+        pool = self._recv_pools.setdefault(device, [])
+        for _ in range(count):
+            pool.append((length, cb))
+        # Drain sends that arrived before receives were posted (the fabric
+        # queues them, as a NIC would RNR-retry).
+        addr = self.address(device)
+        pending = self._pending_sends.pop(device, [])
+        for payload in pending:
+            self._deliver_send(device, payload)
+
+    def _deliver_send(self, device: int, payload: bytes) -> None:
+        pool = self._recv_pools.get(device, [])
+        if not pool:
+            self._pending_sends.setdefault(device, []).append(payload)
+            return
+        length, cb = pool.pop(0)
+        if len(payload) > length:
+            raise ValueError(f"SEND of {len(payload)} bytes exceeds posted RECV of {length}")
+        cb(payload)
+        # Buffer is automatically re-posted after the callback (paper §3.3).
+        pool.append((length, cb))
+
+    def submit_send(self, addr: NetAddr, msg: bytes,
+                    cb: OnDone = None, device: int = 0) -> None:
+        """RPC-style two-sided send; copies ``msg`` at submission."""
+        payload = bytes(msg)
+        src = self.groups[device]
+        dst_group, dst_engine = self.fabric._lookup(addr)
+
+        def on_delivered(op: WireOp, now: float) -> None:
+            dst_engine._deliver_send(addr.dev, payload)
+
+        op = WireOp(kind="send", payload=None, dst_region=None, dst_offset=0,
+                    imm=None, on_delivered=on_delivered,
+                    on_sent=(lambda now: _fire(cb)) if cb is not None else None,
+                    nbytes=len(payload))
+        # SEND/RECV uses only the first NIC in the group.
+        self.loop.schedule(ENQUEUE_US, lambda: src.post_write(dst_group, op, nic_index=0))
+
+    # -- completion notification --------------------------------------------
+    def expect_imm_count(self, imm: int, count: int,
+                         cb: Callable[[], None], device: int = 0) -> None:
+        self.counters[device].expect(imm, count, cb)
+
+    def imm_value(self, imm: int, device: int = 0) -> int:
+        return self.counters[device].value(imm)
+
+    # -- one-sided WRITE ------------------------------------------------------
+    def _post_logical_write(self, src_group: DomainGroup, payload: Optional[bytes],
+                            dst: MrDesc, dst_offset: int, imm: Optional[int],
+                            on_done: OnDone, stripe: bool, nic_rr: Optional[int] = None,
+                            extra_post_us: float = 0.0,
+                            synthetic_bytes: Optional[int] = None) -> None:
+        """Post one logical WRITE, striping across NICs when ``stripe``.
+
+        ``synthetic_bytes``: timing-only write of that size (no payload copy)
+        — used by cluster-scale benchmarks where materialising terabytes of
+        real bytes is pointless; all protocol behaviour is identical."""
+        dst_group, dst_engine = self.fabric._lookup(dst.owner)
+        dst_region = dst_group.region(dst.region_id) if synthetic_bytes is None else None
+        nbytes = (len(payload) if payload is not None else 0) \
+            if synthetic_bytes is None else synthetic_bytes
+        parts = src_group.split_across_nics(nbytes) if stripe else [(None, 0, nbytes)]
+        n_parts = len(parts)
+        state = {"delivered": 0, "sent": 0}
+
+        def on_delivered(op: WireOp, now: float) -> None:
+            state["delivered"] += 1
+            if state["delivered"] == n_parts and imm is not None:
+                dst_engine.counters[dst.owner.dev].increment(imm, now)
+
+        def on_sent(now: float) -> None:
+            state["sent"] += 1
+            if state["sent"] == n_parts:
+                _fire(on_done)
+
+        for nic_index, off, ln in parts:
+            chunk = payload[off:off + ln] if payload is not None else None
+            op = WireOp(kind="write", payload=chunk, dst_region=dst_region,
+                        dst_offset=dst_offset + off, imm=imm,
+                        on_delivered=on_delivered, on_sent=on_sent, nbytes=ln)
+            idx = nic_index if stripe else (nic_rr if nic_rr is not None else None)
+            src_group.post_write(dst_group, op, nic_index=idx,
+                                 extra_post_us=extra_post_us)
+
+    def submit_single_write(self, length: int, imm: Optional[int],
+                            src: Tuple[MrHandle, int], dst: Tuple[MrDesc, int],
+                            on_done: OnDone = None) -> None:
+        handle, src_off = src
+        desc, dst_off = dst
+        src_group = self.fabric.group(handle.owner)
+        payload = src_group.region(handle.region_id).read_bytes(src_off, length)
+        self.loop.schedule(
+            ENQUEUE_US,
+            lambda: self._post_logical_write(src_group, payload, desc, dst_off,
+                                             imm, on_done, stripe=True))
+
+    def submit_paged_writes(self, page_len: int, imm: Optional[int],
+                            src: Tuple[MrHandle, Pages], dst: Tuple[MrDesc, Pages],
+                            on_done: OnDone = None) -> None:
+        """One WRITE per page; pages rotate across NICs.
+
+        Each page's WRITEIMM increments the receiver's counter by one (the
+        KvCache protocol counts ``n_pages * n_layers + 1`` total events).
+        """
+        handle, src_pages = src
+        desc, dst_pages = dst
+        if len(src_pages.indices) != len(dst_pages.indices):
+            raise ValueError("src/dst page counts differ")
+        src_group = self.fabric.group(handle.owner)
+        region = src_group.region(handle.region_id)
+        src_offs = src_pages.resolve(page_len)
+        dst_offs = dst_pages.resolve(page_len)
+        n = len(src_offs)
+        if n == 0:
+            _fire(on_done)
+            return
+        state = {"sent": 0}
+
+        def page_done() -> None:
+            state["sent"] += 1
+            if state["sent"] == n:
+                _fire(on_done)
+
+        def post_all() -> None:
+            for k, (so, do) in enumerate(zip(src_offs, dst_offs)):
+                payload = region.read_bytes(so, page_len)
+                self._post_logical_write(src_group, payload, desc, do, imm,
+                                         page_done, stripe=False,
+                                         nic_rr=k % len(src_group.domains))
+
+        self.loop.schedule(ENQUEUE_US, post_all)
+
+    # -- peer groups: scatter / barrier ---------------------------------------
+    def add_peer_group(self, addrs: Sequence[NetAddr]) -> int:
+        return self.fabric._add_peer_group(list(addrs))
+
+    def submit_scatter(self, handle: MrHandle, dsts: Sequence[ScatterDst],
+                       imm: Optional[int] = None, on_done: OnDone = None,
+                       device: int = 0) -> None:
+        """WRITE a distinct slice of ``handle`` to each peer (paper §3.3).
+
+        WR-templating in the paper amortises descriptor setup; posting cost
+        is modeled by the DomainGroup's per-WR posting delay (Table 9).
+        """
+        src_group = self.groups[device]
+        region = src_group.region(handle.region_id)
+        n = len(dsts)
+        if n == 0:
+            _fire(on_done)
+            return
+        state = {"sent": 0}
+
+        def one_done() -> None:
+            state["sent"] += 1
+            if state["sent"] == n:
+                _fire(on_done)
+
+        extra = SCATTER_EXTRA_US.get(self.nic_name, 0.0)
+
+        def post_all() -> None:
+            for k, sd in enumerate(dsts):
+                payload = region.read_bytes(sd.src, sd.len)
+                desc, off = sd.dst
+                self._post_logical_write(src_group, payload, desc, off, imm,
+                                         one_done, stripe=False,
+                                         nic_rr=k % len(src_group.domains),
+                                         extra_post_us=extra)
+
+        self.loop.schedule(ENQUEUE_US, post_all)
+
+    def submit_synthetic_write(self, nbytes: int, imm: Optional[int],
+                               dst: MrDesc, on_done: OnDone = None,
+                               device: int = 0) -> None:
+        """Timing-only single write (no payload) — cluster-scale benches."""
+        src_group = self.groups[device]
+        self.loop.schedule(
+            ENQUEUE_US,
+            lambda: self._post_logical_write(src_group, None, dst, 0, imm,
+                                             on_done, stripe=True,
+                                             synthetic_bytes=nbytes))
+
+    def submit_barrier(self, dsts: Sequence[MrDesc], imm: int,
+                       on_done: OnDone = None, device: int = 0) -> None:
+        """Immediate-only zero-length WRITE to each peer.
+
+        EFA diverges from the RDMA spec and requires a valid descriptor even
+        for zero-sized writes — callers must therefore pass real MrDescs.
+        """
+        src_group = self.groups[device]
+        n = len(dsts)
+        if n == 0:
+            _fire(on_done)
+            return
+        state = {"sent": 0}
+
+        def one_done() -> None:
+            state["sent"] += 1
+            if state["sent"] == n:
+                _fire(on_done)
+
+        def post_all() -> None:
+            for k, desc in enumerate(dsts):
+                self._post_logical_write(src_group, b"", desc, 0, imm,
+                                         one_done, stripe=False,
+                                         nic_rr=k % len(src_group.domains))
+
+        self.loop.schedule(ENQUEUE_US, post_all)
+
+    # -- UVM watcher -----------------------------------------------------------
+    def alloc_uvm_watcher(self, cb: Callable[[int, int], None]) -> UvmWatcher:
+        return UvmWatcher(self.loop, cb)
+
+    # -- stats -------------------------------------------------------------------
+    def bytes_sent(self, device: int = 0) -> int:
+        return sum(d.nic.bytes_sent for d in self.groups[device].domains)
+
+
+class Fabric:
+    """A simulated cluster: nodes x GPUs x NICs sharing one event loop."""
+
+    def __init__(self, seed: int = 0):
+        self.loop = EventLoop()
+        self.seed = seed
+        self._groups: Dict[NetAddr, Tuple[DomainGroup, TransferEngine]] = {}
+        self._peer_groups: List[List[NetAddr]] = []
+        self._nic_kind: Optional[str] = None
+
+    def add_engine(self, node: str, nic: str = "cx7", num_devices: int = 1) -> TransferEngine:
+        if self._nic_kind is None:
+            self._nic_kind = nic
+        elif self._nic_kind != nic:
+            # Paper restriction: all peers use the same number of NICs per GPU.
+            raise ValueError("all engines in a fabric must use the same NIC kind")
+        return TransferEngine(self, node, nic, num_devices)
+
+    def _register_group(self, addr: NetAddr, group: DomainGroup, engine: TransferEngine) -> None:
+        if addr in self._groups:
+            raise ValueError(f"duplicate address {addr}")
+        self._groups[addr] = (group, engine)
+
+    def _lookup(self, addr: NetAddr) -> Tuple[DomainGroup, TransferEngine]:
+        return self._groups[addr]
+
+    def group(self, addr: NetAddr) -> DomainGroup:
+        return self._groups[addr][0]
+
+    def _add_peer_group(self, addrs: List[NetAddr]) -> int:
+        self._peer_groups.append(addrs)
+        return len(self._peer_groups) - 1
+
+    # -- execution helpers -------------------------------------------------------
+    def run(self) -> float:
+        return self.loop.run_until_idle()
+
+    def run_until(self, pred: Callable[[], bool]) -> float:
+        return self.loop.run_until(pred)
+
+    @property
+    def now(self) -> float:
+        return self.loop.now

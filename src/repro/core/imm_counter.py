@@ -1,0 +1,53 @@
+"""ImmCounter: order-agnostic completion notification (paper §3.3).
+
+Per-immediate counters are incremented on completion-queue events.  The key
+property — proven by the hypothesis tests — is that correctness never
+depends on delivery *order*: a consumer registers ``expect_imm_count(imm,
+count, cb)`` and the callback fires exactly when ``count`` WRITEIMM payloads
+carrying ``imm`` have *fully landed*, no matter how the transport permuted
+them.
+
+Counters can be observed three ways, mirroring the paper: a callback
+(dedicated thread in the paper, event-loop continuation here), an atomic
+flag (``wait()`` polling), or direct inspection (GDRCopy-style).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class ImmCounter:
+    def __init__(self) -> None:
+        self.counts: Dict[int, int] = {}
+        # imm -> list of (threshold, callback, fired?)
+        self._watchers: Dict[int, List[List]] = {}
+        self.events: List[Tuple[float, int]] = []  # (time, imm) audit trail
+
+    def expect(self, imm: int, count: int, cb: Callable[[], None]) -> None:
+        if count <= 0:
+            cb()
+            return
+        w = [count, cb, False]
+        self._watchers.setdefault(imm, []).append(w)
+        self._maybe_fire(imm)
+
+    def increment(self, imm: int, now: float, by: int = 1) -> None:
+        self.counts[imm] = self.counts.get(imm, 0) + by
+        self.events.append((now, imm))
+        self._maybe_fire(imm)
+
+    def value(self, imm: int) -> int:
+        return self.counts.get(imm, 0)
+
+    def reset(self, imm: int) -> None:
+        self.counts.pop(imm, None)
+        self._watchers.pop(imm, None)
+
+    def _maybe_fire(self, imm: int) -> None:
+        have = self.counts.get(imm, 0)
+        for w in self._watchers.get(imm, []):
+            if not w[2] and have >= w[0]:
+                w[2] = True
+                w[1]()

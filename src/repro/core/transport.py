@@ -1,0 +1,108 @@
+"""Transport semantics: reliable-ordered (RC) vs reliable-unordered (SRD).
+
+The paper's key insight is that ConnectX RC and AWS EFA SRD share *reliable
+but unordered* delivery as a common denominator (Table 1).  We model both:
+
+* ``RC``    — reliable, in-order per queue pair (ConnectX).  fabric-lib
+              deliberately IGNORES the ordering guarantee.
+* ``SRD``   — reliable, connectionless, out-of-order (EFA).  Per-packet
+              delivery times receive deterministic pseudo-random jitter, so
+              packets of different WRITEs (and chunks of one WRITE) arrive
+              in a permuted order.
+
+Atomicity contract (paper §3.3 "Completion Notification"): the CQE carrying
+the immediate value of a WRITEIMM is raised only after the *entire* payload
+of that WRITE is visible in the destination buffer — regardless of the
+ordering of other in-flight WRITEs.  The simulator enforces exactly this and
+nothing more, which is what the property tests probe.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from .netsim import EventLoop, NicQueue, NicSpec
+
+
+@dataclass
+class WireOp:
+    """One WRITE (or SEND) as it crosses the wire."""
+
+    kind: str                      # "write" | "send" | "barrier"
+    payload: Optional[bytes]       # snapshot of the source bytes (None for 0-size)
+    dst_region: Optional[object]   # resolved on the receiver (MemoryRegion)
+    dst_offset: int
+    imm: Optional[int]
+    on_delivered: Callable[["WireOp", float], None]  # receiver-side hook
+    on_sent: Optional[Callable[[float], None]] = None  # sender-side CQE hook
+    nbytes: int = 0
+
+
+class Channel:
+    """A unidirectional transport channel between two Domains over one NIC.
+
+    Chunks ops to the NIC MTU, applies transport ordering semantics, and
+    delivers payload bytes into the destination memory region at the
+    simulated arrival time.  The immediate/CQE for an op fires when its last
+    chunk has been delivered (RDMA spec: payload before immediate).
+    """
+
+    def __init__(self, loop: EventLoop, nic: NicQueue, seed: int, ordered: Optional[bool] = None):
+        self.loop = loop
+        self.nic = nic
+        self.spec = nic.spec
+        self.ordered = self.spec.ordered if ordered is None else ordered
+        self.rng = np.random.default_rng(seed)
+        self._last_delivery = 0.0  # for RC in-order enforcement
+
+    MAX_CHUNKS = 64  # coarse chunking: bounds event count for GB-scale writes
+
+    def post(self, op: WireOp) -> None:
+        nbytes = op.nbytes
+        mtu = self.spec.mtu_bytes
+        nchunks = min(max(1, (nbytes + mtu - 1) // mtu), self.MAX_CHUNKS)
+        per = -(-max(nbytes, 1) // nchunks)
+        remaining = [nchunks]  # chunks not yet delivered
+        last_tx = 0.0
+
+        def deliver_chunk(idx: int, arrive: float) -> None:
+            if self.ordered:
+                # RC: monotonic delivery per channel.
+                arrive = max(arrive, self._last_delivery)
+                self._last_delivery = arrive
+            else:
+                # SRD: deterministic pseudo-random reordering jitter.
+                arrive = arrive + float(self.rng.uniform(0.0, self.spec.srd_jitter_us))
+
+            def land() -> None:
+                if op.payload is not None and op.dst_region is not None:
+                    lo = idx * per
+                    hi = min(nbytes, lo + per)
+                    if hi > lo:
+                        op.dst_region.write_bytes(op.dst_offset + lo, op.payload[lo:hi])
+                remaining[0] -= 1
+                if remaining[0] == 0:
+                    # Entire payload visible => CQE/immediate may fire.
+                    op.on_delivered(op, self.loop.now)
+
+            self.loop.schedule_at(arrive, land)
+
+        for i in range(nchunks):
+            lo = i * per
+            hi = min(nbytes, lo + per) if nbytes else 0
+            sz = max(0, hi - lo)
+            # Zero-size barrier writes still consume a descriptor (the paper
+            # notes EFA requires a valid descriptor even for imm-only writes).
+            # Per-op fixed cost is charged once (first chunk only).
+            tx_done = self.nic.submit(max(sz, 1),
+                                      lambda arrive, i=i: deliver_chunk(i, arrive),
+                                      charge_fixed=(i == 0))
+            last_tx = max(last_tx, tx_done)
+
+        if op.on_sent is not None:
+            # Sender-side completion: after the NIC has serialised everything
+            # plus the transport's completion round trip (ack).
+            self.loop.schedule_at(last_tx + self.spec.rtt_us, lambda: op.on_sent(self.loop.now))

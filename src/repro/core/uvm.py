@@ -1,0 +1,54 @@
+"""UvmWatcher: host-initiated transfers driven by GPU progress (paper §3.3).
+
+The paper allocates a unified-memory word that device kernels increment
+(CUDA-graph compatible); a dedicated CPU thread polls it via GDRCopy and
+invokes a callback with (old, new) — changes may be coalesced, so the
+callback must handle skipped intermediate values.
+
+In the simulator the "GPU" is the serving engine advancing through layers in
+virtual time; ``store()`` models the device-side ``scalar_inc_`` and the
+poller delivers the callback after a PCIe polling delay.  Coalescing is
+faithfully modeled: if several stores land before the poller wakes, the
+callback observes a single (old, new) jump.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from .netsim import EventLoop, PCIE_POLL_US
+
+
+class UvmWatcher:
+    def __init__(self, loop: EventLoop, cb: Callable[[int, int], None],
+                 poll_us: float = PCIE_POLL_US):
+        self.loop = loop
+        self.cb = cb
+        self.poll_us = poll_us
+        self.value = 0            # device-visible word
+        self._observed = 0        # last value seen by the poller
+        self._poll_scheduled = False
+
+    def store(self, value: int) -> None:
+        """Device-side write (e.g. after a layer's attention output proj)."""
+        self.value = value
+        self._schedule_poll()
+
+    def inc(self) -> None:
+        self.store(self.value + 1)
+
+    def _schedule_poll(self) -> None:
+        if self._poll_scheduled:
+            return
+        self._poll_scheduled = True
+
+        def poll() -> None:
+            self._poll_scheduled = False
+            old, new = self._observed, self.value
+            if new != old:
+                self._observed = new
+                self.cb(old, new)
+            if self.value != self._observed:  # raced with another store
+                self._schedule_poll()
+
+        self.loop.schedule(self.poll_us, poll)

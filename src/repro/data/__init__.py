@@ -1,0 +1,3 @@
+from .pipeline import Batcher, FileCorpus, SyntheticCorpus
+
+__all__ = ["Batcher", "SyntheticCorpus", "FileCorpus"]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hotspots the paper optimises.
+
+Each kernel ships with a pure-jnp oracle (``ref.py``) and a jit'd wrapper
+(``ops.py``).  On CPU the kernels run in ``interpret=True`` mode.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

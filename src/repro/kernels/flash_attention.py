@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window).
+
+The §Perf analysis showed flash-block temporaries (scores, selects,
+accumulator updates) dominating the memory term of every attention-heavy
+combo when expressed as plain-XLA chunked attention — on TPU those tensors
+belong in VMEM.  This kernel keeps the (block_q x block_k) score tile, the
+running (m, l) statistics and the output accumulator in VMEM scratch; HBM
+traffic is exactly q/k/v blocks in + output out.
+
+Grid: (batch*kv_heads*q_groups, Sq/block_q, Sk/block_k), kv-block
+innermost so the accumulator carries across the k dimension in scratch.
+Causality and the optional static window skip fully-masked tiles via
+@pl.when.  MXU-aligned tiles: block_q=block_k=128 minimum.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  block_q: int, block_k: int, causal: bool, window: int,
+                  n_kb: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q0 = qi * block_q
+    k0 = ki * block_k
+    # tile-level skip: fully-masked tiles cost nothing
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k0 <= q0 + block_q - 1)
+    if window > 0:
+        run = jnp.logical_and(run, k0 + block_k - 1 >= q0 - window + 1)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_sc[...]
+        l_prev = l_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_prev * corr + p.sum(1, keepdims=True)
+        m_sc[...] = m_new
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_kb - 1)
+    def _emit():
+        denom = jnp.maximum(l_sc[...], 1e-20)
+        o_ref[0] = (acc_sc[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, H, Sk, D) (kv heads pre-broadcast).
+
+    Returns (B, H, Sq, D).  ``window``: 0 => full; >0 => sliding window.
+    Scale (1/sqrt(D)) is applied inside.
+    """
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = D ** -0.5
+    q = (q * scale).reshape(B * H, Sq, D)
+    k = k.reshape(B * H, Sk, D)
+    v = v.reshape(B * H, Sk, D)
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq //= 2
+    bk = min(block_k, Sk)
+    while Sk % bk:
+        bk //= 2
+    n_kb = Sk // bk
+
+    grid = (B * H, Sq // bq, n_kb)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=bq, block_k=bk,
+                          causal=causal, window=window, n_kb=n_kb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out.reshape(B, H, Sq, D)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: MoE combine (weighted gather-reduce to token order).
+
+The TPU-native analogue of the paper's §6 combine *receiver*: every token
+gathers its top-k expert outputs from the packed receive buffer and reduces
+them with the router gates.  Formulating combine as an inverse-permutation
+gather (rather than a scatter-add) keeps it deterministic and atomics-free —
+the same trick the paper uses by centralising routing info at dispatch so
+combine needs a single contiguous scatter.
+
+Accumulation is fp32 regardless of the payload dtype (the paper calls out
+DeepEP's bf16 accumulation as an accuracy trade-off; we keep fp32).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def _combine_kernel(inv_ref, gates_ref, ye_ref, o_ref, *, block_t: int, top_k: int):
+    """Grid: (T // block_t, D // block_d).
+
+    inv_ref: (T*K,) int32 scalar-prefetch (row of ye for token t's k-th pick,
+    -1 => dropped); gates_ref: (T*K,) fp32 scalar-prefetch; ye_ref:
+    (M, block_d); o_ref: (block_t, block_d).
+    """
+    t0 = pl.program_id(0) * block_t
+
+    def token(i, _):
+        acc = jnp.zeros((o_ref.shape[1],), jnp.float32)
+
+        def pick(j, acc):
+            flat = (t0 + i) * top_k + j
+            row = inv_ref[flat]
+            g = gates_ref[flat]
+            safe = jnp.maximum(row, 0)
+            contrib = ye_ref[safe, :].astype(jnp.float32) * g
+            return acc + jnp.where(row >= 0, contrib, 0.0)
+
+        acc = jax.lax.fori_loop(0, top_k, pick, acc)
+        o_ref[i, :] = acc.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, block_t, token, 0)
+
+
+def moe_combine(ye: jax.Array, inv: jax.Array, gates: jax.Array, *,
+                block_t: int = 128, block_d: int = 512,
+                interpret: bool = False) -> jax.Array:
+    """ye: (M, D); inv, gates: (T, K) -> (T, D) fp32-accumulated combine."""
+    M, D = ye.shape
+    T, K = inv.shape
+    pd = (-D) % LANE
+    if pd:
+        ye = jnp.pad(ye, ((0, 0), (0, pd)))
+    Dp = ye.shape[1]
+    bt = min(block_t, T)
+    while T % bt:
+        bt //= 2
+    bd = min(block_d, Dp)
+    while Dp % bd:
+        bd //= 2
+
+    grid = (T // bt, Dp // bd)
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, block_t=bt, top_k=K),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[pl.BlockSpec((M, bd), lambda i, j, inv, g: (0, j))],
+            out_specs=pl.BlockSpec((bt, bd), lambda i, j, inv, g: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, Dp), ye.dtype),
+        interpret=interpret,
+    )(inv.reshape(-1), gates.reshape(-1).astype(jnp.float32), ye)
+    return out[:, :D]

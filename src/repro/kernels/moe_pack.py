@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: MoE dispatch pack (token gather by permutation).
+
+The TPU-native analogue of the paper's §6 dispatch *send* kernel: tokens are
+copied from their natural order into a contiguous per-expert send buffer so
+each peer receives one dense slab (paper Fig. 7: "dispatch into private and
+contiguous buffers").  On TPU the "peers" are expert-parallel shards and the
+slab is handed to ``ragged_all_to_all``; this kernel produces it.
+
+Layout: rows are gathered with a scalar-prefetched permutation; the feature
+dimension is tiled at 128 lanes so copies are VPU/VREG aligned.  ``perm``
+rows of -1 emit zeros (capacity padding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def _pack_kernel(perm_ref, x_ref, o_ref, *, block_m: int):
+    """Grid: (M // block_m, D // block_d).
+
+    perm_ref: (M,) scalar-prefetch; x_ref: (T, block_d) — all rows of x for
+    the current feature tile; o_ref: (block_m, block_d).
+    """
+    m0 = pl.program_id(0) * block_m
+
+    def body(i, _):
+        row = perm_ref[m0 + i]
+        safe = jnp.maximum(row, 0)
+        data = x_ref[safe, :]
+        o_ref[i, :] = jnp.where(row >= 0, data, jnp.zeros_like(data))
+        return 0
+
+    jax.lax.fori_loop(0, block_m, body, 0)
+
+
+def moe_pack(x: jax.Array, perm: jax.Array, *, block_m: int = 128,
+             block_d: int = 512, interpret: bool = False) -> jax.Array:
+    """x: (T, D), perm: (M,) -> (M, D) packed rows (−1 ⇒ zeros)."""
+    T, D = x.shape
+    M = perm.shape[0]
+    pm = (-M) % block_m
+    pd = (-D) % LANE
+    if pd:
+        x = jnp.pad(x, ((0, 0), (0, pd)))
+    if pm:
+        perm = jnp.pad(perm, ((0, pm),), constant_values=-1)
+    Dp, Mp = x.shape[1], perm.shape[0]
+    bd = min(block_d, Dp)
+    while Dp % bd:
+        bd //= 2
+    bm = min(block_m, Mp)
+
+    grid = (Mp // bm, Dp // bd)
+    out = pl.pallas_call(
+        functools.partial(_pack_kernel, block_m=bm),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((T, bd), lambda i, j, perm: (0, j))],
+            out_specs=pl.BlockSpec((bm, bd), lambda i, j, perm: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, Dp), x.dtype),
+        interpret=interpret,
+    )(perm, x)
+    return out[:M, :D]

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels are validated against (shape/dtype
+sweeps + hypothesis property tests assert allclose).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_pack(x: jax.Array, perm: jax.Array) -> jax.Array:
+    """Gather rows of ``x`` into packed order.
+
+    x: (T, D); perm: (M,) int32, source row per packed row, -1 => zero row.
+    Returns (M, D).
+    """
+    gathered = jnp.take(x, jnp.maximum(perm, 0), axis=0)
+    return jnp.where((perm >= 0)[:, None], gathered, 0).astype(x.dtype)
+
+
+def moe_combine(ye: jax.Array, inv: jax.Array, gates: jax.Array) -> jax.Array:
+    """Weighted combine of expert outputs back into token order.
+
+    ye: (M, D) packed expert outputs; inv: (T, K) packed-row index of token
+    t's k-th expert output (-1 => dropped); gates: (T, K) combine weights.
+    Returns (T, D) = sum_k gates[t,k] * ye[inv[t,k]].
+    """
+    T, K = inv.shape
+    rows = jnp.take(ye, jnp.maximum(inv, 0), axis=0)          # (T,K,D)
+    w = jnp.where(inv >= 0, gates, 0.0).astype(ye.dtype)
+    return jnp.einsum("tkd,tk->td", rows, w)
+
+
+def paged_copy(src: jax.Array, src_idx: jax.Array, dst: jax.Array,
+               dst_idx: jax.Array) -> jax.Array:
+    """dst[dst_idx[i]] = src[src_idx[i]] for each page i.
+
+    src: (Ps, E); dst: (Pd, E); indices: (P,). Returns updated dst.
+    """
+    pages = jnp.take(src, src_idx, axis=0)
+    return dst.at[dst_idx].set(pages)
+
+
+def ssd_intra(xw: jax.Array, cum: jax.Array, Br: jax.Array, Cr: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Intra-chunk SSD block (matches models.ssm.ssd_chunked's intra term).
+
+    xw:  (b, nc, cl, h, p)  dt-weighted inputs
+    cum: (b, nc, cl, h)     cumulative dt*A within the chunk (<= 0)
+    Br, Cr: (b, nc, cl, h, n)
+    Returns (y_intra (b,nc,cl,h,p), states (b,nc,h,p,n)).
+    """
+    cl = xw.shape[2]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    ii, jj = jnp.arange(cl)[:, None], jnp.arange(cl)[None, :]
+    L = jnp.where((ii >= jj)[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcihn,bcjhn->bcijh", Cr, Br)
+    y = jnp.einsum("bcijh,bcjhp->bcihp", CB * L, xw)
+    decay = jnp.exp(cum[:, :, -1:, :] - cum)
+    states = jnp.einsum("bcjhn,bcjhp->bchpn", Br * decay[..., None], xw)
+    return y, states
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0) -> jax.Array:
+    """Dense oracle for the flash kernel.  q,k,v: (B, H, S, D)."""
+    D = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    qpos = jnp.arange(q.shape[2])[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((q.shape[2], k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

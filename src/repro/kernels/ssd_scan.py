@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk block.
+
+Compute hotspot of the SSM/hybrid architectures: for each (batch x chunk,
+head) tile it forms the decay-masked score matrix (C B^T) ⊙ L on the MXU,
+applies it to the dt-weighted inputs, and emits the chunk-final state
+contribution — the block-diagonal half of the state-space-duality algorithm
+(arXiv:2405.21060).  Chunk length and head width are chosen MXU-aligned
+(cl=128, p=64|128, n=128 by default).
+
+The inter-chunk recurrence stays a lax.scan outside the kernel (it is O(nc)
+sequential and tiny).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(xw_ref, cum_ref, b_ref, c_ref, y_ref, st_ref):
+    """Blocks (one (batch*chunk, head) tile):
+    xw: (cl, p); cum: (cl, 1); b, c: (cl, n); y: (cl, p); st: (p, n)."""
+    cum = cum_ref[0, 0].astype(jnp.float32)                # (cl, 1)
+    xw = xw_ref[0, 0].astype(jnp.float32)
+    b = b_ref[0, 0].astype(jnp.float32)
+    c = c_ref[0, 0].astype(jnp.float32)
+    cl = cum.shape[0]
+
+    seg = cum - cum.T                                       # (cl, cl) = cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (cl, cl)
+    y_ref[0, 0] = ((cb * L) @ xw).astype(y_ref.dtype)
+
+    decay = jnp.exp(cum[-1:] - cum)                          # (cl, 1)
+    bw = b * decay                                           # (cl, n)
+    st = jax.lax.dot_general(xw, bw, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (p, n)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+
+
+def ssd_intra_flat(xw: jax.Array, cum: jax.Array, Br: jax.Array, Cr: jax.Array,
+                   *, interpret: bool = False):
+    """Flat layout: xw (BC, H, cl, P); cum (BC, H, cl, 1); Br/Cr (BC, H, cl, N).
+    Returns (y (BC,H,cl,P), states (BC,H,P,N)), both fp32."""
+    BC, H, cl, P = xw.shape
+    N = Br.shape[-1]
+    grid = (BC, H)
+    y, st = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, cl, P), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, cl, 1), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, cl, N), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, cl, N), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, cl, P), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BC, H, cl, P), jnp.float32),
+            jax.ShapeDtypeStruct((BC, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xw, cum, Br, Cr)
+    return y, st

@@ -1,0 +1,100 @@
+"""Jitted step builders: train_step / prefill_step / decode_step per arch.
+
+Each builder returns (fn, in_shardings, out_shardings) ready for
+``jax.jit(...).lower(...)`` — used both by the real trainer/server and by
+the multi-pod dry-run (with ShapeDtypeStruct stand-ins).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.shapes import InputShape
+from ..models import model as M
+from ..models import sharding as S
+from ..optim import AdamWConfig, adamw_update, init_adamw
+from ..comm.context import use_mesh
+
+
+def _ns(mesh, tree):
+    return S.named(mesh, tree)
+
+
+def build_train_step(cfg, mesh, shape: InputShape, *,
+                     moe_mode: str = "a2a", use_kernel: bool = False,
+                     remat: bool = True, opt_cfg: Optional[AdamWConfig] = None):
+    """Returns (jitted_fn, (param_shd, opt_shd, batch_shd)).
+
+    fn(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    pspec = S.param_spec_tree(cfg, mesh)
+    ospec = S.opt_spec_tree(cfg, mesh)
+    bspec = S.batch_spec_tree(cfg, mesh, shape)
+
+    def step(params, opt_state, batch):
+        with use_mesh(mesh):
+            def loss(p):
+                return M.loss_fn(p, batch, cfg, moe_mode=moe_mode,
+                                 use_kernel=use_kernel, remat=remat)
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            params2, opt2, om = adamw_update(grads, opt_state, params, opt_cfg)
+            metrics = dict(metrics, loss=l, **om)
+            return params2, opt2, metrics
+
+    shardings = (_ns(mesh, pspec), _ns(mesh, ospec), _ns(mesh, bspec))
+    fn = jax.jit(step, in_shardings=shardings,
+                 out_shardings=(shardings[0], shardings[1], None),
+                 donate_argnums=(0, 1))
+    return fn, shardings
+
+
+def build_prefill_step(cfg, mesh, shape: InputShape, *,
+                       moe_mode: str = "a2a", use_kernel: bool = False):
+    """fn(params, batch) -> (last_logits, cache)"""
+    pspec = S.param_spec_tree(cfg, mesh)
+    bspec = S.batch_spec_tree(cfg, mesh, shape)
+    cspec = S.cache_spec_tree(cfg, mesh, shape.global_batch, shape.seq_len)
+
+    def step(params, batch):
+        with use_mesh(mesh):
+            return M.prefill(params, batch["tokens"], cfg,
+                             max_len=shape.seq_len,
+                             vision_emb=batch.get("vision_emb"),
+                             moe_mode=moe_mode, use_kernel=use_kernel)
+
+    shardings = (_ns(mesh, pspec), _ns(mesh, bspec))
+    fn = jax.jit(step, in_shardings=shardings,
+                 out_shardings=(None, _ns(mesh, cspec)))
+    return fn, shardings + (_ns(mesh, cspec),)
+
+
+def build_decode_step(cfg, mesh, shape: InputShape, *, moe_mode: str = "a2a"):
+    """fn(params, cache, tokens, positions) -> (logits, cache).
+
+    ONE new token per sequence against a cache of shape.seq_len (the
+    assignment's serve_step for decode_32k / long_500k).
+    """
+    pspec = S.param_spec_tree(cfg, mesh)
+    cspec = S.cache_spec_tree(cfg, mesh, shape.global_batch, shape.seq_len)
+    bspec = S.batch_spec_tree(cfg, mesh, shape)
+    tok_spec = bspec["tokens"]
+    pos_spec = P(tok_spec[0])
+
+    def step(params, cache, tokens, positions):
+        with use_mesh(mesh):
+            return M.decode_step(params, tokens, positions, cache, cfg,
+                                 moe_mode=moe_mode)
+
+    cs = _ns(mesh, cspec)
+    shardings = (_ns(mesh, pspec), cs,
+                 NamedSharding(mesh, tok_spec), NamedSharding(mesh, pos_spec))
+    fn = jax.jit(step, in_shardings=shardings, out_shardings=(None, cs),
+                 donate_argnums=(1,))
+    return fn, shardings

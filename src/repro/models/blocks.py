@@ -1,0 +1,52 @@
+"""Per-layer blocks and stacked-parameter initialisation.
+
+Layers are stored STACKED (leading axis = layer) and executed with
+``jax.lax.scan`` so the compiled HLO contains each layer body once — this is
+what keeps 100-layer lowering tractable for the 512-device dry-run.
+
+Heterogeneous layer patterns are expressed as per-layer *metadata arrays*
+(scan xs), never as per-layer param structure differences:
+  * gemma3  — ``windows[l]``: -1 full attention, >0 sliding window
+  * vlm     — ``is_cross[l]``: kv source = vision embeddings (lax.cond)
+  * deepseek— leading dense layers are unrolled (different FFN shape)
+  * zamba2  — grouped scans over mamba layers + ONE shared attn block
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import init_attn
+from .common import split_keys
+from .mlp import init_mlp, mlp_forward
+from .moe import init_moe, moe_forward
+from .ssm import init_mamba
+
+
+def stacked_init(init_fn, key, n: int):
+    """Initialise ``n`` layers of identical structure, stacked on axis 0."""
+    keys = jnp.stack(split_keys(key, n))
+    return jax.vmap(init_fn)(keys)
+
+
+def layer_metadata(cfg) -> Dict[str, jnp.ndarray]:
+    """Per-layer static metadata as arrays (scan xs)."""
+    kinds = cfg.layer_kinds()
+    ffns = cfg.ffn_kinds()
+    n = cfg.n_layers
+    windows = []
+    for k in kinds:
+        if k == "local":
+            windows.append(cfg.window)
+        elif k in ("global", "attn", "cross"):
+            windows.append(-1)
+        else:
+            windows.append(0)
+    return {
+        "window": jnp.asarray(windows, jnp.int32),
+        "is_cross": jnp.asarray([k == "cross" for k in kinds], jnp.bool_),
+        "is_moe": jnp.asarray([f == "moe" for f in ffns], jnp.bool_),
+    }

@@ -1,0 +1,25 @@
+"""Dense SwiGLU feed-forward block."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm, split_keys
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Dict[str, jax.Array]:
+    ks = split_keys(key, 3)
+    return {
+        "norm": jnp.zeros((d_model,), dtype),
+        "wg": dense_init(ks[0], (d_model, d_ff), dtype),
+        "wu": dense_init(ks[1], (d_model, d_ff), dtype),
+        "wd": dense_init(ks[2], (d_ff, d_model), dtype, scale=d_ff ** -0.5),
+    }
+
+
+def mlp_forward(p: Dict[str, jax.Array], x: jax.Array, eps: float) -> jax.Array:
+    h = rms_norm(x, p["norm"], eps)
+    return (jax.nn.silu(h @ p["wg"]) * (h @ p["wu"])) @ p["wd"]

@@ -1,0 +1,192 @@
+"""Mamba2 SSD (state-space duality) mixer.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060 §6):
+block-diagonal intra-chunk "attention" with decay kernel + a low-rank
+inter-chunk recurrence over chunk states.  Decode is the O(1) recurrent
+state update.  The intra-chunk block is the compute hotspot and has a Pallas
+kernel (``repro.kernels.ssd_scan``); this module is the pure-jnp reference
+used everywhere correctness matters.
+
+State layout: ssd state (B, H, P, N); conv state (B, dconv-1, conv_dim).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm, split_keys
+
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_mamba(key, cfg, dtype) -> Dict[str, jax.Array]:
+    D, di, H = cfg.d_model, cfg.d_inner, cfg.ssm_nheads
+    g, N = cfg.ssm_ngroups, cfg.ssm_state
+    cd = conv_dim(cfg)
+    d_in_proj = 2 * di + 2 * g * N + H
+    ks = split_keys(key, 4)
+    return {
+        "norm": jnp.zeros((D,), dtype),
+        "in_proj": dense_init(ks[0], (D, d_in_proj), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_dconv, cd), dtype, scale=cfg.ssm_dconv ** -0.5),
+        "conv_b": jnp.zeros((cd,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "out_norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, D), dtype, scale=di ** -0.5),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv.  x: (B,S,C), w: (K,C).  ``state``: (B,K-1,C)
+    carry-in from a previous segment (zeros for a fresh sequence)."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for k in range(K):
+        y = y + xp[:, k:k + S].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _expand_groups(t: jax.Array, H: int) -> jax.Array:
+    """(b, ..., G, N) -> (b, ..., H, N) by repeating each group."""
+    G = t.shape[-2]
+    return jnp.repeat(t, H // G, axis=-2)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                use_kernel: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (already softplus'ed); A: (H,) negative;
+    Bm, Cm: (B,S,G,N).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))      # dt=0 => identity step
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc, cl = Sp // chunk, chunk
+
+    xr = x.reshape(Bsz, nc, cl, H, P).astype(jnp.float32)
+    dtr = dt.reshape(Bsz, nc, cl, H).astype(jnp.float32)
+    Br = _expand_groups(Bm.reshape(Bsz, nc, cl, -1, N), H).astype(jnp.float32)
+    Cr = _expand_groups(Cm.reshape(Bsz, nc, cl, -1, N), H).astype(jnp.float32)
+
+    dA = dtr * A                                           # (b,nc,cl,h), <= 0
+    cum = jnp.cumsum(dA, axis=2)
+    xw = xr * dtr[..., None]                               # dt-weighted input
+
+    # ---- intra-chunk (block-diagonal) term -------------------------------
+    if use_kernel:
+        from ..kernels import ops as kops
+        y_intra, states = kops.ssd_intra(xw, cum, Br, Cr)
+    else:
+        seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (b,nc,i,j,h)
+        ii, jj = jnp.arange(cl)[:, None], jnp.arange(cl)[None, :]
+        L = jnp.where((ii >= jj)[None, None, :, :, None], jnp.exp(seg), 0.0)
+        CB = jnp.einsum("bcihn,bcjhn->bcijh", Cr, Br)
+        y_intra = jnp.einsum("bcijh,bcjhp->bcihp", CB * L, xw)
+        # chunk-final states: decay from position j to end of chunk
+        decay = jnp.exp(cum[:, :, -1:, :] - cum)               # (b,nc,cl,h)
+        states = jnp.einsum("bcjhn,bcjhp->bchpn", Br * decay[..., None], xw)
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (b,nc,h)
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        st_k, dec_k = inp
+        s_out = s * dec_k[0][:, :, None, None] + st_k
+        return s_out, s                                     # emit carry-IN
+
+    (s_final, prev_states) = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)[:, None]))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Cr * jnp.exp(cum)[..., None], prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, s_final
+
+
+def mamba_prefill(p: Dict[str, jax.Array], x: jax.Array, cfg, *,
+                  conv_state: Optional[jax.Array] = None,
+                  ssd_state: Optional[jax.Array] = None,
+                  use_kernel: bool = False):
+    """x: (B,S,D) -> (out (B,S,D), (conv_state, ssd_state))."""
+    B, S, D = x.shape
+    di, H, P = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    g, N, K = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_dconv
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * N], axis=-1)
+    new_conv_state = jnp.concatenate(
+        [jnp.zeros((B, max(0, K - 1 - S), xBC.shape[-1]), xBC.dtype),
+         xBC[:, max(0, S - (K - 1)):]], axis=1) if K > 1 else None
+    if conv_state is not None and K > 1:
+        # stitch carry-in for continued sequences
+        new_conv_state = jnp.concatenate([conv_state, xBC], axis=1)[:, -(K - 1):]
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state))
+    xs, Bm, Cm = jnp.split(xBC, [di, di + g * N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    Bm = Bm.reshape(B, S, g, N)
+    Cm = Cm.reshape(B, S, g, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, s_final = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk,
+                             init_state=ssd_state, use_kernel=use_kernel)
+    y = y + (p["D"][:, None] * xs.astype(jnp.float32))
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, (new_conv_state, s_final.astype(jnp.float32))
+
+
+def mamba_decode(p: Dict[str, jax.Array], x: jax.Array, cfg, *,
+                 conv_state: jax.Array, ssd_state: jax.Array):
+    """One-token recurrent step.  x: (B,1,D).
+
+    Returns (out (B,1,D), (conv_state, ssd_state))."""
+    B, _, D = x.shape
+    di, H, P = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    g, N, K = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_dconv
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = h[:, 0] @ p["in_proj"]                          # (B, d_in_proj)
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * N], axis=-1)
+    conv_in = jnp.concatenate([conv_state, xBC[:, None]], axis=1)  # (B,K,cd)
+    new_conv_state = conv_in[:, 1:]
+    y_conv = jnp.einsum("bkc,kc->bc", conv_in.astype(jnp.float32),
+                        p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(y_conv)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + g * N], axis=-1)
+    xs = xs.reshape(B, H, P)
+    Bm = _expand_groups(Bm.reshape(B, g, N), H)              # (B,H,N)
+    Cm = _expand_groups(Cm.reshape(B, g, N), H)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                  # (B,H)
+    xw = xs.astype(jnp.float32) * dt[..., None]              # (B,H,P)
+    new_state = (ssd_state * decay[..., None, None]
+                 + jnp.einsum("bhp,bhn->bhpn", xw, Bm))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cm) + p["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None]
+    return out, (new_conv_state, new_state)

@@ -1,0 +1,4 @@
+from .dispatch import MoEConfig, MoEEndpoint
+from .driver import make_endpoints, oracle, run_moe_layer
+
+__all__ = ["MoEConfig", "MoEEndpoint", "make_endpoints", "run_moe_layer", "oracle"]

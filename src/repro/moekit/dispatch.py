@@ -1,0 +1,347 @@
+"""Host-proxy MoE dispatch/combine over the TransferEngine (paper §6).
+
+Protocol per rank and MoE layer invocation:
+
+  dispatch:
+    1. count tokens per expert (GPU kernel; modeled as KERNEL_LAUNCH_US)
+    2. scatter ROUTES — the full (E,) per-expert counts — to every peer
+    3. speculatively scatter the first T_priv tokens per destination into
+       private per-source buffers (hides route latency — Fig. 11 ablation)
+    4. once all peers' routes arrive (ImmCounter), every rank knows every
+       (source, expert) block offset in the contiguous shared buffer;
+       scatter the REMAINING tokens at exact offsets
+    5. receiver completion = ImmCounter over token writes; shuffle into the
+       (E_local, capacity) grouped-GEMM layout
+    => <=2 WRITEs per inter-node peer, as in the paper.
+
+  combine:
+    expert outputs are returned with a SINGLE scatter per source (routing
+    info is reused; block layout is deterministic), then each source
+    un-permutes and reduces with its gates in fp32.
+
+Payload bytes move for real; tests validate the packed layout and the
+combined output against a dense oracle.  Same-node peers ride NVLink.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import Fabric, MrDesc, NetAddr, ScatterDst, TransferEngine
+
+KERNEL_LAUNCH_US = 15.0      # launch -> first transfer (paper §6.2)
+ROUTE_PROC_US = 20.0         # host-side route processing before the second
+                             # round of transfers ("tens of microseconds",
+                             # §6.2) — the latency the private buffers hide
+ROUTE_IMM = 0x520
+TOK_IMM = 0x521
+COMB_IMM = 0x522
+BARRIER_IMM = 0x523
+
+
+@dataclass
+class MoEConfig:
+    n_ranks: int
+    n_experts: int             # global
+    top_k: int
+    max_tokens: int            # T per rank
+    token_bytes: int           # payload bytes per token (e.g. 7168 fp8)
+    t_priv: int = 32           # private-buffer tokens per (src, dst) pair
+
+    @property
+    def e_local(self) -> int:
+        return self.n_experts // self.n_ranks
+
+    @property
+    def recv_cap(self) -> int:
+        # paper bound (§6.1): N * T * max(R, E/N) tokens can land on a rank
+        return self.n_ranks * self.max_tokens * max(self.top_k, self.e_local)
+
+
+class MoEEndpoint:
+    """One expert-parallel rank: buffers + proxy logic."""
+
+    def __init__(self, fabric: Fabric, cfg: MoEConfig, rank: int,
+                 engine: TransferEngine):
+        self.fabric = fabric
+        self.cfg = cfg
+        self.rank = rank
+        self.engine = engine
+        tb, N, T = cfg.token_bytes, cfg.n_ranks, cfg.max_tokens
+        cap = N * T * max(cfg.top_k, cfg.e_local)
+        # registered buffers
+        self.routes_buf = np.zeros(N * cfg.n_experts * 4, np.uint8)
+        self.priv_buf = np.zeros(N * cfg.t_priv * tb, np.uint8)
+        self.shared_buf = np.zeros(cap * tb, np.uint8)
+        self.comb_buf = np.zeros(T * cfg.top_k * tb, np.uint8)
+        self.h_routes, self.d_routes = engine.reg_mr(self.routes_buf)
+        self.h_priv, self.d_priv = engine.reg_mr(self.priv_buf)
+        self.h_shared, self.d_shared = engine.reg_mr(self.shared_buf)
+        self.h_comb, self.d_comb = engine.reg_mr(self.comb_buf)
+        # send staging (combine may return up to recv_cap tokens)
+        self.send_buf = np.zeros(cfg.recv_cap * tb + N * cfg.n_experts * 4, np.uint8)
+        self.h_send, self.d_send = engine.reg_mr(self.send_buf)
+        self.peers: List["MoEEndpoint"] = []
+        self.stats: Dict[str, float] = {}
+        self.round = 0          # per-layer round: scopes imm values
+
+    # -- wiring ------------------------------------------------------------
+    def connect(self, peers: List["MoEEndpoint"]) -> None:
+        self.peers = peers
+
+    # -- dispatch ------------------------------------------------------------
+    def dispatch(self, tokens: np.ndarray, eids: np.ndarray,
+                 on_complete: Callable[[], None]) -> Dict:
+        """tokens: (T, token_bytes) uint8; eids: (T, top_k) int32 global ids.
+
+        Returns a context dict used later by combine; ``on_complete`` fires
+        when this rank has received ALL tokens routed to its local experts
+        (and can run its grouped GEMM)."""
+        cfg = self.cfg
+        N, E, R = cfg.n_ranks, cfg.n_experts, cfg.top_k
+        T = tokens.shape[0]
+        t0 = self.fabric.now
+        self.round += 1
+        route_imm = ROUTE_IMM + (self.round << 8)
+        tok_imm = TOK_IMM + (self.round << 8)
+
+        # 1. per-expert counts
+        counts = np.bincount(eids.reshape(-1), minlength=E).astype(np.int32)
+
+        # flat assignment list in (dest_rank, expert, token) order
+        fe = eids.reshape(-1)
+        ft = np.repeat(np.arange(T), R)
+        order = np.lexsort((ft, fe))            # stable by expert then token
+        fe_s, ft_s = fe[order], ft[order]
+        dest = fe_s // cfg.e_local
+
+        ctx = {"counts": counts, "fe_s": fe_s, "ft_s": ft_s, "t0": t0,
+               "T": T, "sent_at": None}
+        self._last_ctx = ctx
+
+        def proxy_phase1() -> None:
+            # 2. scatter routes to all peers (small payload, all NICs)
+            off = 0
+            rb = self.send_buf[-N * E * 4:]
+            rb.view(np.int32)[:E] = counts
+            route_dsts = []
+            for p in self.peers:
+                route_dsts.append(ScatterDst(
+                    len=E * 4, src=len(self.send_buf) - N * E * 4,
+                    dst=(p.d_routes, self.rank * E * 4)))
+            self.engine.submit_scatter(self.h_send, route_dsts, imm=route_imm)
+
+            # 3. speculative private-buffer tokens (first t_priv per dest)
+            tb = cfg.token_bytes
+            priv_dsts, priv_meta = [], {}
+            send_off = 0
+            for r in range(N):
+                rows = np.nonzero(dest == r)[0]
+                take = rows[:cfg.t_priv]
+                priv_meta[r] = take
+                if take.size == 0:
+                    continue
+                for i, idx in enumerate(take):
+                    self.send_buf[send_off + i * tb: send_off + (i + 1) * tb] = \
+                        tokens[ft_s[idx]]
+                priv_dsts.append(ScatterDst(
+                    len=take.size * tb, src=send_off,
+                    dst=(self.peers[r].d_priv, self.rank * cfg.t_priv * tb)))
+                send_off += take.size * tb
+            if priv_dsts:
+                self.engine.submit_scatter(self.h_send, priv_dsts, imm=tok_imm)
+            ctx["priv_meta"] = priv_meta
+            ctx["send_off"] = send_off
+
+        self.fabric.loop.schedule(KERNEL_LAUNCH_US, proxy_phase1)
+
+        # 4. wait for ALL routes, then send remaining tokens at exact offsets
+        def on_routes() -> None:
+            self.fabric.loop.schedule(ROUTE_PROC_US, lambda: process_routes())
+
+        def process_routes() -> None:
+            all_counts = self.routes_buf.view(np.int32).reshape(N, E)
+            ctx["all_counts"] = all_counts.copy()
+            tb = cfg.token_bytes
+            send_off = ctx["send_off"]
+            shared_dsts = []
+            for r in range(N):
+                rows = np.nonzero(dest == r)[0]
+                rest = rows[cfg.t_priv:]
+                if rest.size == 0:
+                    continue
+                # offset of MY block for expert e at receiver r:
+                #   sum_{e' local-before e} total(e') + sum_{s'<me} cnt[s'][e]
+                base = send_off
+                for i, idx in enumerate(rest):
+                    self.send_buf[send_off + i * tb: send_off + (i + 1) * tb] = \
+                        tokens[ft_s[idx]]
+                # tokens in `rest` are expert-sorted; split per expert
+                split_start = 0
+                for e in np.unique(fe_s[rest]):
+                    blk = rest[fe_s[rest] == e]
+                    e_loc = e % cfg.e_local
+                    e0 = r * cfg.e_local
+                    tot_before = int(all_counts[:, e0:e].sum()) if e > e0 else 0
+                    src_before = int(all_counts[:self.rank, e].sum())
+                    # skip this source's private tokens of expert e
+                    n_priv_e = int((fe_s[ctx["priv_meta"][r]] == e).sum())
+                    dst_tok = tot_before + src_before + n_priv_e
+                    shared_dsts.append(ScatterDst(
+                        len=blk.size * tb,
+                        src=base + split_start * tb,
+                        dst=(self.peers[r].d_shared, dst_tok * tb)))
+                    split_start += blk.size
+                send_off += rest.size * tb
+            if shared_dsts:
+                self.engine.submit_scatter(self.h_send, shared_dsts, imm=tok_imm,
+                                           on_done=lambda: ctx.__setitem__(
+                                               "sent_at", self.fabric.now))
+            else:
+                ctx["sent_at"] = self.fabric.now
+
+            # receiver completion: expected #token WRITEs to me.  Private
+            # writes are one per source; shared writes are one per
+            # (source, expert) pair with residual tokens after the private
+            # prefix — all derivable from the exchanged routes.
+            my_counts = all_counts[:, self.rank * cfg.e_local:
+                                   (self.rank + 1) * cfg.e_local]
+            per_src = my_counts.sum(1)
+            n_writes = int((per_src > 0).sum())
+            for s in range(N):
+                cum = 0
+                for e_loc in range(cfg.e_local):
+                    cnt = int(my_counts[s, e_loc])
+                    priv = max(0, min(cfg.t_priv - cum, cnt))
+                    if cnt - priv > 0:
+                        n_writes += 1
+                    cum += cnt
+            ctx["my_counts"] = my_counts.copy()
+
+            def tokens_done() -> None:
+                self.stats["dispatch_us"] = self.fabric.now - t0
+                on_complete()
+
+            self.engine.expect_imm_count(tok_imm, n_writes, tokens_done)
+
+        self.engine.expect_imm_count(route_imm, N, on_routes)
+        return ctx
+
+    # -- receiver shuffle --------------------------------------------------------
+    def gather_expert_tokens(self, ctx: Dict) -> List[np.ndarray]:
+        """Shuffle received bytes into per-local-expert dense slabs
+        (the paper's receiver half feeding the Grouped GEMM)."""
+        cfg = self.cfg
+        tb = cfg.token_bytes
+        N = cfg.n_ranks
+        all_counts = ctx["all_counts"]
+        out = []
+        for e_loc in range(cfg.e_local):
+            e = self.rank * cfg.e_local + e_loc
+            rows = []
+            e0 = self.rank * cfg.e_local
+            tot_before = int(all_counts[:, e0:e].sum()) if e > e0 else 0
+            src_before = 0
+            for s in range(N):
+                cnt = int(all_counts[s, e])
+                if cnt == 0:
+                    continue
+                # how many of source s's tokens for ME (all local experts)
+                # went into its private buffer, and of those, expert e's?
+                peer_ctx = self.peers[s]._last_ctx
+                take = peer_ctx["priv_meta"][self.rank]
+                fe_s = peer_ctx["fe_s"]
+                n_priv_e = int((fe_s[take] == e).sum())
+                # private rows for (s, e): position of e within take
+                sel = np.nonzero(fe_s[take] == e)[0]
+                for i in sel:
+                    lo = (s * cfg.t_priv + i) * tb
+                    rows.append(self.priv_buf[lo:lo + tb])
+                # shared rows
+                dst_tok = tot_before + src_before + n_priv_e
+                for i in range(cnt - n_priv_e):
+                    lo = (dst_tok + i) * tb
+                    rows.append(self.shared_buf[lo:lo + tb])
+                src_before += cnt
+            out.append(np.stack(rows) if rows else
+                       np.zeros((0, tb), np.uint8))
+        return out
+
+    # -- combine ----------------------------------------------------------------
+    def combine(self, ctx: Dict, expert_out: List[np.ndarray],
+                on_complete: Callable[[], None]) -> None:
+        """Send processed tokens back to their sources: ONE scatter."""
+        cfg = self.cfg
+        tb = cfg.token_bytes
+        N = cfg.n_ranks
+        all_counts = ctx["all_counts"]
+        t0 = self.fabric.now
+        comb_imm = COMB_IMM + (self.round << 8)
+
+        # stage: per source, concat its tokens across my local experts in
+        # (expert, source-order) layout — deterministic for the source too
+        send_off = 0
+        dsts = []
+        for s in range(N):
+            src_rows = []
+            for e_loc in range(cfg.e_local):
+                e = self.rank * cfg.e_local + e_loc
+                cnt = int(all_counts[s, e])
+                if cnt == 0:
+                    continue
+                before = int(all_counts[:s, e].sum())
+                src_rows.append(expert_out[e_loc][before:before + cnt])
+            if not src_rows:
+                continue
+            blob = np.concatenate(src_rows).reshape(-1)
+            self.send_buf[send_off:send_off + blob.size] = blob
+            # destination offset: source's comb_buf is laid out by
+            # (expert, its own token order) across ALL experts; my segment
+            # starts after all lower-ranked experts' counts from s
+            e0 = self.rank * cfg.e_local
+            before_tok = int(all_counts[s, :e0].sum())
+            dsts.append(ScatterDst(len=blob.size, src=send_off,
+                                   dst=(self.peers[s].d_comb, before_tok * tb)))
+            send_off += blob.size
+
+        def proxy_send() -> None:
+            if dsts:
+                self.engine.submit_scatter(self.h_send, dsts, imm=comb_imm)
+
+        self.fabric.loop.schedule(KERNEL_LAUNCH_US * 0.5, proxy_send)
+
+        # source side: expect one write from each rank hosting my tokens
+        my_dest = ctx["fe_s"] // cfg.e_local
+        expect = int(np.unique(my_dest).size)
+
+        def done() -> None:
+            self.stats["combine_us"] = self.fabric.now - t0
+            on_complete()
+
+        self.engine.expect_imm_count(comb_imm, expect, done)
+
+    def combine_result(self, ctx: Dict, gates: np.ndarray,
+                       dtype=np.float32) -> np.ndarray:
+        """Un-permute the combine buffer and reduce with gates (fp32)."""
+        cfg = self.cfg
+        tb = cfg.token_bytes
+        T, R = ctx["T"], cfg.top_k
+        fe_s, ft_s = ctx["fe_s"], ctx["ft_s"]
+        # combine buffer layout: blocks ordered by expert id, within block
+        # this rank's tokens in (expert-sorted flat) order
+        counts = ctx["counts"]
+        starts = np.zeros(cfg.n_experts, np.int64)
+        starts[1:] = np.cumsum(counts)[:-1]
+        elems = tb // dtype().itemsize
+        buf = self.comb_buf.view(dtype).reshape(-1, elems)
+        y = np.zeros((T, elems), np.float32)
+        cursor = starts.copy()
+        for i in range(fe_s.size):
+            e, t = fe_s[i], ft_s[i]
+            row = buf[cursor[e]]
+            y[t] += row.astype(np.float32) * gates[t, e]   # gates: (T, E) dense
+            cursor[e] += 1
+        return y

@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, AdamWState, adamw_update, global_norm, init_adamw
+from .schedule import cosine_with_warmup
+
+__all__ = ["AdamWConfig", "AdamWState", "init_adamw", "adamw_update",
+           "global_norm", "cosine_with_warmup"]

@@ -1,0 +1,7 @@
+from .planner import ParamMeta, Route, compute_routing, schedule_stats
+from .transfer import (Cluster, make_cluster, p2p_transfer, rank0_transfer,
+                       verify_contents)
+
+__all__ = ["ParamMeta", "Route", "compute_routing", "schedule_stats",
+           "Cluster", "make_cluster", "p2p_transfer", "rank0_transfer",
+           "verify_contents"]

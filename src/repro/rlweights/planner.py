@@ -1,0 +1,116 @@
+"""Static weight-transfer schedule (paper §5, Appendix B).
+
+The controller gathers parameter metadata (name, shape, dtype, sharding)
+from training and inference workers, then computes a static routing table:
+which training rank sends which byte range of which parameter to which
+inference rank, at which remote offset.  At each training step the workers
+replay the schedule with one-sided WRITEs — no re-planning, no coordination,
+and the inference side stays passive.
+
+Shardings modeled:
+  * training: FSDP — each parameter flattened and split evenly across the
+    ranks of its MeshGroup (paper: different parameter types use different
+    FSDP sharding strategies => several MeshGroups).
+  * inference: TP — each parameter split across inference ranks along a
+    (possibly different) axis; replicas receive identical bytes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamMeta:
+    name: str
+    shape: Tuple[int, ...]
+    dtype_bytes: int
+    mesh_group: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n * self.dtype_bytes
+
+
+@dataclass(frozen=True)
+class Route:
+    """One WRITE of the schedule."""
+    param: str
+    train_rank: int
+    infer_rank: int
+    src_off: int           # byte offset within the train rank's shard
+    dst_off: int           # byte offset within the inference rank's buffer
+    nbytes: int
+
+
+def fsdp_ranges(total: int, n: int) -> List[Tuple[int, int]]:
+    """Even contiguous byte split (FSDP flat-param style)."""
+    per = -(-total // n)
+    return [(i * per, min(total, (i + 1) * per)) for i in range(n)]
+
+
+def compute_routing(params: List[ParamMeta], n_train: int, n_infer: int,
+                    infer_tp: int = 1,
+                    quant_ratio: float = 1.0) -> Tuple[List[Route], Dict[str, int]]:
+    """Overlap-intersect FSDP source ranges with TP destination ranges.
+
+    ``quant_ratio``: output bytes per input byte (bf16 -> fp8 => 0.5); the
+    prepare stage quantises before the WRITE, so wire bytes are scaled.
+    ``infer_tp``: TP degree of the inference fleet; each parameter is split
+    into ``infer_tp`` contiguous byte ranges, and the fleet holds
+    n_infer/infer_tp replicas of each range.
+    Returns (routes, dst_offsets per (param, infer_rank))."""
+    routes: List[Route] = []
+    n_replica = n_infer // infer_tp
+    dst_cursor = [0] * n_infer
+    src_cursor = [0] * n_train
+
+    for pm in params:
+        out_bytes = int(pm.nbytes * quant_ratio)
+        src = fsdp_ranges(out_bytes, n_train)       # ranges in OUTPUT space
+        dst = fsdp_ranges(out_bytes, infer_tp)      # TP split of the output
+        for t, (slo, shi) in enumerate(src):
+            if shi <= slo:
+                continue
+            for tp, (dlo, dhi) in enumerate(dst):
+                lo, hi = max(slo, dlo), min(shi, dhi)
+                if hi <= lo:
+                    continue
+                for rep in range(n_replica):
+                    ir = rep * infer_tp + tp
+                    routes.append(Route(
+                        param=pm.name, train_rank=t, infer_rank=ir,
+                        src_off=src_cursor[t] + (lo - slo),
+                        dst_off=dst_cursor[ir] + (lo - dlo),
+                        nbytes=hi - lo))
+        for t, (slo, shi) in enumerate(src):
+            src_cursor[t] += max(0, shi - slo)
+        for tp in range(infer_tp):
+            seg = dst[tp][1] - dst[tp][0]
+            for rep in range(n_replica):
+                dst_cursor[rep * infer_tp + tp] += seg
+
+    sizes = {"infer": {r: dst_cursor[r] for r in range(n_infer)},
+             "train": {r: src_cursor[r] for r in range(n_train)}}
+    return routes, sizes
+
+
+def schedule_stats(routes: List[Route], n_train: int, n_infer: int) -> Dict:
+    per_train = np.zeros(n_train, np.int64)
+    per_infer = np.zeros(n_infer, np.int64)
+    for r in routes:
+        per_train[r.train_rank] += r.nbytes
+        per_infer[r.infer_rank] += r.nbytes
+    return {
+        "n_routes": len(routes),
+        "total_bytes": int(per_train.sum()),
+        "max_train_bytes": int(per_train.max()),
+        "max_infer_bytes": int(per_infer.max()),
+        "balance": float(per_train.max() / max(1, per_train.mean())),
+    }

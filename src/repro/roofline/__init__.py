@@ -1,0 +1,5 @@
+from .analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, analyse,
+                       collective_bytes, model_flops)
+
+__all__ = ["Roofline", "analyse", "collective_bytes", "model_flops",
+           "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

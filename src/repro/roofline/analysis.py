@@ -1,0 +1,186 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), per the assignment:
+
+    compute    = HLO_FLOPs            / (peak_FLOP/s per chip)
+    memory     = HLO_bytes_accessed   / (HBM bandwidth per chip)
+    collective = collective_bytes     / (ICI link bandwidth per chip)
+
+``cost_analysis()`` of the SPMD-partitioned executable reports PER-DEVICE
+flops/bytes, so the terms divide by per-chip peaks directly.  Collective
+bytes are not in cost_analysis — we parse the post-optimization HLO and sum
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute / ragged-all-to-all op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+# TPU v5e-class hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*(?:-start|-done)?)\((.*)$")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from post-optimization HLO.
+
+    Post-opt HLO references operands by name only, so we first build a
+    name -> result-bytes table, then resolve each collective's operands.
+    """
+    table: Dict[str, int] = {}
+    pending = []  # (kind, operand names)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, typespec, op, rest = m.groups()
+        table[name] = sum(_shape_bytes(d, dims)
+                          for d, dims in _SHAPE_RE.findall(typespec))
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        # operand list = up to the matching close paren
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = re.findall(r"%([\w.\-]+)", rest[:end])
+        pending.append((base, operands))
+
+    out: Dict[str, int] = {}
+    for kind, operands in pending:
+        nbytes = sum(table.get(o, 0) for o in operands)
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float                 # per-device HLO flops
+    bytes_accessed: float        # per-device HLO bytes
+    coll_bytes: float            # per-device collective bytes
+    coll_breakdown: Dict[str, int]
+    model_flops: float           # 6*N*D (train) / 2*N*D (inference), per device
+    peak_memory: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, dominant=self.dominant,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        for extra in ("xla_flops_once", "xla_bytes_once", "dynamic_whiles"):
+            if hasattr(self, extra):
+                d[extra] = getattr(self, extra)
+        return d
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Analytic useful FLOPs per device: 6·N_active·tokens (train) or
+    2·N_active·tokens (inference forward)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:
+        tokens = shape.global_batch  # one new token per sequence
+        mult = 2.0
+    return mult * n * tokens / n_chips
+
+
+def analyse(compiled, cfg, shape, arch: str, mesh_name: str,
+            n_chips: int) -> Roofline:
+    from .hlo_cost import analyze_hlo
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    hc = analyze_hlo(hlo)
+    # trip-count-aware totals (XLA's cost_analysis counts while bodies once)
+    flops = hc.flops
+    nbytes = hc.bytes_accessed
+    coll = {k: int(v) for k, v in hc.coll_breakdown.items()}
+    peak_mem = None
+    try:
+        ma = compiled.memory_analysis()
+        peak_mem = float(getattr(ma, "temp_size_in_bytes", 0) +
+                         getattr(ma, "argument_size_in_bytes", 0) +
+                         getattr(ma, "output_size_in_bytes", 0) -
+                         getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    rl = Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name,
+        flops=flops, bytes_accessed=nbytes,
+        coll_bytes=float(sum(coll.values())), coll_breakdown=coll,
+        model_flops=model_flops(cfg, shape, n_chips),
+        peak_memory=peak_mem)
+    rl.xla_flops_once = float(cost.get("flops", 0.0))
+    rl.xla_bytes_once = float(cost.get("bytes accessed", 0.0))
+    rl.dynamic_whiles = hc.dynamic_whiles
+    return rl

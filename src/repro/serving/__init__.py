@@ -1,0 +1,6 @@
+from .disagg import Decoder, DispatchReq, Prefiller
+from .kvpool import PagedKvPool, PoolGeometry
+from .scheduler import Scheduler
+
+__all__ = ["Prefiller", "Decoder", "DispatchReq", "PagedKvPool",
+           "PoolGeometry", "Scheduler"]

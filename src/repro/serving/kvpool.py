@@ -1,0 +1,77 @@
+"""Paged KV pool: fixed-size pages in a registered memory region.
+
+Layout follows the paper's §4 note: heads PRECEDE pages ("the KvCaches are
+laid out with heads preceding the pages, ensuring continuity within
+consecutive heads") — a page is a contiguous (page_tokens x n_kv x head_dim
+x 2) block for one layer, so one RDMA WRITE moves one page.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..core import MrDesc, MrHandle, TransferEngine
+
+
+@dataclass
+class PoolGeometry:
+    n_layers: int
+    page_tokens: int
+    n_kv: int
+    head_dim: int
+    dtype: np.dtype = np.dtype(np.float32)
+
+    @property
+    def page_elems(self) -> int:
+        # k and v halves of one page
+        return self.page_tokens * self.n_kv * self.head_dim * 2
+
+    @property
+    def page_bytes(self) -> int:
+        return self.page_elems * self.dtype.itemsize
+
+    def pages_per_seq(self, seq_len: int) -> int:
+        return -(-seq_len // self.page_tokens)
+
+
+class PagedKvPool:
+    """A pool of KV pages registered with a TransferEngine."""
+
+    def __init__(self, engine: TransferEngine, geom: PoolGeometry,
+                 n_pages: int, device: int = 0):
+        self.geom = geom
+        self.n_pages = n_pages
+        self.buf = np.zeros(n_pages * geom.page_bytes, np.uint8)
+        self.handle, self.desc = engine.reg_mr(self.buf, device)
+        self._free = list(range(n_pages))
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(f"KV pool exhausted ({n} > {len(self._free)})")
+        out = self._free[:n]
+        del self._free[:n]
+        return out
+
+    def free(self, pages: List[int]) -> None:
+        self._free.extend(pages)
+
+    # -- numpy views -----------------------------------------------------------
+    def page_view(self, page: int) -> np.ndarray:
+        g = self.geom
+        lo = page * g.page_bytes
+        return (self.buf[lo:lo + g.page_bytes]
+                .view(g.dtype)
+                .reshape(2, g.page_tokens, g.n_kv, g.head_dim))
+
+    def write_page(self, page: int, k: np.ndarray, v: np.ndarray) -> None:
+        view = self.page_view(page)
+        t = k.shape[0]
+        view[0, :t] = k
+        view[1, :t] = v
+
+    def read_page(self, page: int) -> Tuple[np.ndarray, np.ndarray]:
+        view = self.page_view(page)
+        return view[0], view[1]

@@ -1,0 +1,67 @@
+"""Global scheduler for disaggregated serving (paper Fig. 3).
+
+Selects a (prefiller, decoder) pair per request and forwards the request to
+the decoder, which pre-allocates KV pages and dispatches to the prefiller.
+Heartbeats between peers detect transport failures; a dead prefiller causes
+timed-out requests to be cancelled on the decoder (§4 error handling).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core import Fabric, NetAddr
+from .disagg import Decoder, Prefiller
+
+HEARTBEAT_US = 1_000.0
+HEARTBEAT_TIMEOUT_US = 5_000.0
+
+
+class Scheduler:
+    def __init__(self, fabric: Fabric, prefillers: List[Prefiller],
+                 decoders: List[Decoder]):
+        self.fabric = fabric
+        self.prefillers = prefillers
+        self.decoders = decoders
+        self._rr = itertools.count()
+        self._req = itertools.count()
+        self.last_heartbeat: Dict[NetAddr, float] = {
+            p.address(): 0.0 for p in prefillers}
+        self.dead: set = set()
+        self._start_heartbeats()
+
+    def _start_heartbeats(self, max_beats: int = 64) -> None:
+        """Bounded heartbeat train (keeps run_until_idle finite)."""
+        state = {"n": 0}
+
+        def beat() -> None:
+            for p in self.prefillers:
+                addr = p.address()
+                if getattr(p, "alive", True):
+                    self.last_heartbeat[addr] = self.fabric.now
+                elif self.fabric.now - self.last_heartbeat[addr] > HEARTBEAT_TIMEOUT_US:
+                    self.dead.add(addr)
+            state["n"] += 1
+            if state["n"] < max_beats:
+                self.fabric.loop.schedule(HEARTBEAT_US, beat)
+
+        self.fabric.loop.schedule(HEARTBEAT_US, beat)
+
+    def live_prefillers(self) -> List[Prefiller]:
+        return [p for p in self.prefillers
+                if p.address() not in self.dead and getattr(p, "alive", True)]
+
+    def submit(self, input_ids: np.ndarray, n_decode: int = 4) -> int:
+        """Route a request; returns request id."""
+        rid = next(self._req)
+        live = self.live_prefillers()
+        if not live:
+            raise RuntimeError("no live prefillers")
+        p = live[next(self._rr) % len(live)]
+        d = self.decoders[rid % len(self.decoders)]
+        d.submit(rid, input_ids, p.address(), n_decode=n_decode)
+        return rid

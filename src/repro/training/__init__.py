@@ -1,0 +1,3 @@
+from .trainer import TrainConfig, train
+
+__all__ = ["TrainConfig", "train"]

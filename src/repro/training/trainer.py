@@ -1,0 +1,72 @@
+"""Training loop: data pipeline -> jitted train step -> metrics/checkpoints."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import ckpt
+from ..configs.shapes import InputShape
+from ..data.pipeline import Batcher, SyntheticCorpus
+from ..models import init_params, loss_fn
+from ..optim import AdamWConfig, adamw_update, cosine_with_warmup, init_adamw
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    seq_len: int = 256
+    global_batch: int = 8
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_path: str = ""
+    warmup: int = 20
+    moe_mode: str = "scatter"
+    use_kernel: bool = False
+    remat: bool = True
+    seed: int = 0
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def train(cfg, tcfg: TrainConfig, *, params=None,
+          log_fn: Optional[Callable[[Dict], None]] = None) -> Dict:
+    """Single-host training driver (examples + tests).  Returns history."""
+    key = jax.random.PRNGKey(tcfg.seed)
+    if params is None:
+        params = init_params(cfg, key)
+    opt_state = init_adamw(params)
+    corpus = SyntheticCorpus(cfg.vocab, seed=tcfg.seed)
+    batcher = Batcher(corpus, tcfg.global_batch, tcfg.seq_len)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch, step):
+        def loss(p):
+            return loss_fn(p, batch, cfg, moe_mode=tcfg.moe_mode,
+                           use_kernel=tcfg.use_kernel, remat=tcfg.remat)
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        lr_scale = cosine_with_warmup(step, warmup=tcfg.warmup, total=tcfg.steps)
+        params, opt_state, om = adamw_update(grads, opt_state, params,
+                                             tcfg.opt, lr_scale)
+        return params, opt_state, dict(metrics, loss=l, **om)
+
+    history: List[Dict] = []
+    t0 = time.time()
+    for step in range(tcfg.steps):
+        batch = {k: jnp.asarray(v) for k, v in batcher.batch(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             jnp.asarray(step))
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec.update(step=step, wall_s=time.time() - t0)
+            history.append(rec)
+            if log_fn:
+                log_fn(rec)
+        if tcfg.ckpt_every and tcfg.ckpt_path and step and step % tcfg.ckpt_every == 0:
+            ckpt.save(tcfg.ckpt_path, {"params": params}, step=step,
+                      meta={"arch": cfg.name})
+    return {"history": history, "params": params, "opt_state": opt_state}

@@ -1,0 +1,107 @@
+"""Sharding rules: spec trees match param trees; divisibility rules hold."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.models import init_cache, init_params
+from repro.models import sharding as S
+
+
+class FakeMesh:
+    """Shape-only stand-in: sharding rules never touch devices."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_match_param_tree(arch):
+    cfg = get_config(arch)
+    spec = S.param_spec_tree(cfg, MESH)
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    # identical tree structure
+    jax.tree.map(lambda sh, sp: None, shapes, spec,
+                 is_leaf=lambda x: isinstance(x, P))
+    # every sharded dim divides evenly
+    def check(sh, sp):
+        assert isinstance(sp, P), f"{arch}: {sp}"
+        assert len(sp) <= len(sh.shape)
+        for dim, names in zip(sh.shape, tuple(sp)):
+            if names is None:
+                continue
+            for name in ([names] if isinstance(names, str) else names):
+                size = MESH.shape[name]
+                assert dim % size == 0, f"{arch}: {sh.shape} {sp}"
+    jax.tree.map(check, shapes, spec, is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_match_cache_tree(arch, shape_name):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    from repro.configs import shape_applicable
+    if not shape_applicable(cfg, shape):
+        pytest.skip("long_500k requires sub-quadratic attention")
+    spec = S.cache_spec_tree(cfg, MESH, shape.global_batch, shape.seq_len)
+    shapes = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    jax.tree.map(lambda sh, sp: None, shapes, spec,
+                 is_leaf=lambda x: isinstance(x, P))
+
+    def check(sh, sp):
+        for dim, names in zip(sh.shape, tuple(sp)):
+            if names is None:
+                continue
+            for name in ([names] if isinstance(names, str) else names):
+                assert dim % MESH.shape[name] == 0, f"{arch}: {sh.shape} {sp}"
+    jax.tree.map(check, shapes, spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_gqa_kv_replicated_when_heads_dont_divide():
+    cfg = get_config("granite-3-8b")      # kv=8 < model=16
+    spec = S.param_spec_tree(cfg, MESH)
+    assert spec["layers"]["attn"]["wk"] == P(None, None, None)
+    assert spec["layers"]["attn"]["wq"] == P(None, None, "model")
+
+
+def test_gemma3_attention_replicated_ffn_sharded():
+    cfg = get_config("gemma3-1b")          # 4 heads < 16
+    spec = S.param_spec_tree(cfg, MESH)
+    assert spec["layers"]["attn"]["wq"] == P(None, None, None)
+    assert spec["layers"]["ffn"]["wg"] == P(None, None, "model")
+
+
+def test_moe_experts_ep_sharded():
+    cfg = get_config("qwen3-moe-30b-a3b")  # 128 experts / 16
+    spec = S.param_spec_tree(cfg, MESH)
+    assert spec["layers"]["ffn"]["wg"] == P(None, "model", None, None)
+
+
+def test_long_context_cache_shards_sequence():
+    cfg = get_config("gemma3-1b")
+    spec = S.cache_spec_tree(cfg, MESH, batch=1, seq_len=524_288)
+    # pattern-split: the special (global) layers' full-length cache shards
+    # its sequence axis; the 1024-token local ring shards too (1024 % 16 == 0)
+    assert spec["sk"] == P(None, None, "data", None, None)
+    assert spec["lk"] == P(None, None, "data", None, None)
+    # non-pattern arch still uses the uniform cache key
+    spec2 = S.cache_spec_tree(get_config("stablelm-3b"), MESH, 128, 32_768)
+    assert spec2["k"][1] == ("data",) or spec2["k"][1] == "data"
+
+
+def test_batch_spec_multi_pod():
+    cfg = get_config("granite-8b")
+    spec = S.batch_spec_tree(cfg, MESH3, INPUT_SHAPES["train_4k"])
+    assert spec["tokens"] == P(("pod", "data"), None)
+    spec_l = S.batch_spec_tree(cfg, MESH3, INPUT_SHAPES["long_500k"])
+    assert spec_l["tokens"] == P(None, None)   # batch=1 cannot shard
