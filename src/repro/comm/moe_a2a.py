@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..models.common import rms_norm
 from .context import current_mesh, data_axes
 
@@ -175,8 +176,8 @@ def moe_a2a(p, h: jax.Array, cfg, ep_axis: str = "model",
         args += [p["swg"], p["swu"], p["swd"]]
     out_specs = (P((*daxes, ep_axis), None), P())
 
-    y, aux = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)(*args)
+    y, aux = shard_map(local, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)(*args)
     return y, aux
 
 
@@ -237,8 +238,8 @@ def moe_ep_psum(p, h: jax.Array, cfg, ep_axis: str,
         in_specs = in_specs + (P(None, None),) * 3
         args += [p["swg"], p["swu"], p["swd"]]
     out_specs = (P(daxes if daxes else None, None), P())
-    y, aux = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)(*args)
+    y, aux = shard_map(local, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)(*args)
     return y, aux
 
 

@@ -1,0 +1,48 @@
+"""Version-compatibility shims over the moving jax API surface.
+
+The repo targets the modern jax API — ``jax.make_mesh(..., axis_types=...)``
+with ``jax.sharding.AxisType``, and ``jax.shard_map(..., check_vma=...)``.
+Older jax (0.4.x, as shipped in some containers) has neither: ``AxisType``
+is absent from ``jax.sharding``, ``make_mesh`` takes no ``axis_types``, and
+``shard_map`` lives in ``jax.experimental.shard_map`` with a ``check_rep``
+kwarg instead of ``check_vma``.
+
+Every mesh construction and shard_map call in the repo goes through this
+module so a jax upgrade/downgrade never breaks imports.  The ``HAS_*``
+flags let tests assert which path is active.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax.sharding import AxisType  # jax >= 0.5
+    HAS_AXIS_TYPE = True
+except ImportError:  # jax 0.4.x
+    AxisType = None
+    HAS_AXIS_TYPE = False
+
+try:
+    _shard_map_new = jax.shard_map  # jax >= 0.6
+    HAS_JAX_SHARD_MAP = True
+except AttributeError:  # jax 0.4.x/0.5.x: experimental, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+    HAS_JAX_SHARD_MAP = False
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if HAS_AXIS_TYPE:
+        kwargs["axis_types"] = (AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """``jax.shard_map``; on old jax, ``check_vma`` maps to ``check_rep``."""
+    if HAS_JAX_SHARD_MAP:
+        return _shard_map_new(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=check_vma)
+    return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

@@ -5,8 +5,9 @@ unordered transports (RC/SRD), multi-NIC DomainGroups, the Fig. 2 API and
 the ImmCounter completion primitive.
 """
 
-from .domain import MrDesc, MrHandle, NetAddr, Pages, ScatterDst
-from .engine import Fabric, Flag, TransferEngine, NIC_PRESETS
+from .domain import MrDesc, MrHandle, NetAddr, Pages, ScatterDst, WrBatch
+from .engine import (BatchState, Fabric, Flag, TransferEngine, WriteState,
+                     NIC_PRESETS)
 from .imm_counter import ImmCounter
 from .netsim import CX7, EFA_100, EFA_200, EventLoop, NicSpec
 from .uvm import UvmWatcher
@@ -14,6 +15,7 @@ from .uvm import UvmWatcher
 __all__ = [
     "Fabric", "TransferEngine", "Flag", "NIC_PRESETS",
     "MrDesc", "MrHandle", "NetAddr", "Pages", "ScatterDst",
+    "WrBatch", "BatchState", "WriteState",
     "ImmCounter", "UvmWatcher",
     "EventLoop", "NicSpec", "CX7", "EFA_100", "EFA_200",
 ]

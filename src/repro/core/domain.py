@@ -16,7 +16,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .netsim import EventLoop, NicQueue, NicSpec, POST_US
+from .netsim import EventLoop, NicQueue, NicSpec, POST_US, stable_hash
 from .transport import Channel, WireOp
 
 
@@ -58,17 +58,26 @@ class MemoryRegion:
     def __len__(self) -> int:
         return self.buf.size
 
-    def write_bytes(self, offset: int, data: bytes) -> None:
-        if offset < 0 or offset + len(data) > self.buf.size:
+    def write_bytes(self, offset: int, data) -> None:
+        """Land ``data`` (any buffer-protocol object) at ``offset``."""
+        n = len(data)
+        if offset < 0 or offset + n > self.buf.size:
             raise IndexError(
-                f"remote write out of bounds: [{offset}, {offset+len(data)}) "
+                f"remote write out of bounds: [{offset}, {offset+n}) "
                 f"into region of {self.buf.size} bytes")
-        self.buf[offset:offset + len(data)] = np.frombuffer(data, np.uint8)
+        self.buf[offset:offset + n] = np.frombuffer(data, np.uint8)
 
     def read_bytes(self, offset: int, nbytes: int) -> bytes:
         if offset < 0 or offset + nbytes > self.buf.size:
             raise IndexError("local read out of bounds")
         return self.buf[offset:offset + nbytes].tobytes()
+
+    def snapshot(self, offset: int, nbytes: int) -> memoryview:
+        """One-copy payload snapshot (the WRITE's "don't touch src until
+        completion" contract).  All downstream NIC striping and MTU
+        chunking slices this view zero-copy; the snapshot never aliases
+        the live region buffer."""
+        return memoryview(self.read_bytes(offset, nbytes))
 
 
 @dataclass(frozen=True)
@@ -100,6 +109,39 @@ class ScatterDst:
     dst: Tuple[MrDesc, int]       # (remote descriptor, remote offset)
 
 
+class WrBatch:
+    """A template of N work requests posted in ONE event-loop entry.
+
+    Mirrors the paper's WR templating (§3.4): the application pays one
+    app->worker enqueue for the whole batch, while each WR still pays the
+    per-WR posting cost on the DomainGroup's worker — so per-request
+    submission overhead is amortised without changing the NIC-side timing
+    of any individual WRITE.  WRs are stored as bare tuples: this is the
+    hot path of every scatter/paged submission.
+    """
+
+    __slots__ = ("group", "wrs")
+
+    def __init__(self, group: "DomainGroup"):
+        self.group = group
+        # (op, dst_group, nic_index, extra_post_us) per templated WR
+        self.wrs: List[Tuple[WireOp, "DomainGroup", Optional[int], float]] = []
+
+    def add(self, op: WireOp, dst_group: "DomainGroup",
+            nic_index: Optional[int] = None, extra_post_us: float = 0.0) -> None:
+        self.wrs.append((op, dst_group, nic_index, extra_post_us))
+
+    def __len__(self) -> int:
+        return len(self.wrs)
+
+    def post(self) -> None:
+        """Post every WR back-to-back on the owning group's worker."""
+        post_write = self.group.post_write
+        for op, dst_group, nic_index, extra_post_us in self.wrs:
+            post_write(dst_group, op, nic_index=nic_index,
+                       extra_post_us=extra_post_us)
+
+
 class Domain:
     """One NIC: owns a NicQueue and per-peer channels (queue pairs).
 
@@ -121,14 +163,14 @@ class Domain:
         if peer.node == self.addr.node and peer.dev != self.addr.dev:
             if peer not in self._nvlink:
                 from .netsim import NVLINK
-                seed = hash((self._seed, self.addr, peer, "nvl")) & 0x7FFFFFFF
+                seed = stable_hash(self._seed, self.addr, peer, "nvl")
                 self._nvlink[peer] = Channel(
                     self.loop, NicQueue(self.loop, NVLINK), seed)
             return self._nvlink[peer]
         key = (peer, peer_index)
         if key not in self._channels:
-            # Deterministic per-channel seed.
-            seed = hash((self._seed, self.addr, self.index, peer, peer_index)) & 0x7FFFFFFF
+            # Deterministic per-channel seed (process-stable).
+            seed = stable_hash(self._seed, self.addr, self.index, peer, peer_index)
             self._channels[key] = Channel(self.loop, self.nic, seed)
         return self._channels[key]
 
@@ -155,7 +197,7 @@ class DomainGroup:
     def register(self, buf: np.ndarray, device: int) -> Tuple[MrHandle, MrDesc]:
         region = MemoryRegion(buf, device)
         self.regions[region.region_id] = region
-        rkeys = tuple((d.index, hash((region.region_id, d.index)) & 0xFFFF_FFFF)
+        rkeys = tuple((d.index, stable_hash(region.region_id, d.index))
                       for d in self.domains)
         return (MrHandle(region.region_id, self.addr),
                 MrDesc(region.region_id, self.addr, buf.size, rkeys))

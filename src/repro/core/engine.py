@@ -9,8 +9,12 @@ Faithfulness notes:
   notification goes through the ImmCounter or sender-side callbacks.
 * ``submit_send`` copies the payload at submission (caller may reuse the
   buffer immediately); one-sided WRITEs are zero-copy in the paper — the
-  simulator snapshots at post time, modeling the "don't touch src until
-  completion" contract.
+  simulator takes ONE snapshot at submission (modeling the "don't touch src
+  until completion" contract); all NIC striping and MTU chunking slice that
+  snapshot as zero-copy memoryviews.
+* WRITE submissions are batched: every ``submit_*`` templates its work
+  requests into a ``WrBatch`` posted in a single event-loop entry (one
+  ``ENQUEUE_US`` per submission, per-WR ``post_us`` on the worker — §3.4).
 * SEND/RECV uses only the first NIC of a group (paper §3.3).
 * Large single WRITEs are striped across all NICs; paged writes, scatter and
   barrier rotate across NICs (paper §3.4 "Sharding inside a DOMAINGROUP").
@@ -25,9 +29,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from .domain import (DomainGroup, MemoryRegion, MrDesc, MrHandle, NetAddr,
-                     Pages, ScatterDst)
+                     Pages, ScatterDst, WrBatch)
 from .imm_counter import ImmCounter
-from .netsim import ENQUEUE_US, EventLoop, NicSpec, CX7, EFA_100, EFA_200
+from .netsim import (ENQUEUE_US, EventLoop, NicSpec, CX7, EFA_100, EFA_200,
+                     stable_hash)
 from .transport import WireOp
 from .uvm import UvmWatcher
 
@@ -68,6 +73,52 @@ def _fire(done: OnDone) -> None:
         done()
 
 
+class BatchState:
+    """Sender-side completion state shared by every logical write of one
+    batched submission (replaces the per-op ``{"sent": n}`` dict closures):
+    fires ``on_done`` exactly once, when all logical writes report sent."""
+
+    __slots__ = ("remaining", "on_done")
+
+    def __init__(self, n_logical: int, on_done: OnDone):
+        self.remaining = n_logical
+        self.on_done = on_done
+
+    def note_sent(self) -> None:
+        self.remaining -= 1
+        if self.remaining == 0:
+            _fire(self.on_done)
+
+
+class WriteState:
+    """Completion state for ONE logical WRITE (possibly striped over NICs).
+
+    The receiver-side immediate fires exactly once, when the last stripe's
+    payload is fully visible; the sender side notifies the owning
+    ``BatchState`` once all stripes have local completions."""
+
+    __slots__ = ("n_parts", "delivered", "sent", "imm", "counter", "batch")
+
+    def __init__(self, n_parts: int, imm: Optional[int],
+                 counter: Optional[ImmCounter], batch: BatchState):
+        self.n_parts = n_parts
+        self.delivered = 0
+        self.sent = 0
+        self.imm = imm
+        self.counter = counter
+        self.batch = batch
+
+    def on_delivered(self, op, now: float) -> None:
+        self.delivered += 1
+        if self.delivered == self.n_parts and self.imm is not None:
+            self.counter.increment(self.imm, now)
+
+    def on_sent(self, now: float) -> None:
+        self.sent += 1
+        if self.sent == self.n_parts:
+            self.batch.note_sent()
+
+
 class TransferEngine:
     def __init__(self, fabric: "Fabric", node: str, nic: str, num_devices: int):
         self.fabric = fabric
@@ -81,7 +132,7 @@ class TransferEngine:
         self._pending_sends: Dict[int, List] = {}
         for dev in range(num_devices):
             addr = NetAddr(node, dev)
-            seed = fabric.seed ^ (hash(addr) & 0xFFFF)
+            seed = fabric.seed ^ (stable_hash(addr) & 0xFFFF)
             self.groups[dev] = DomainGroup(self.loop, addr, [spec] * default_n, seed)
             self.counters[dev] = ImmCounter()
             fabric._register_group(addr, self.groups[dev], self)
@@ -152,42 +203,39 @@ class TransferEngine:
         return self.counters[device].value(imm)
 
     # -- one-sided WRITE ------------------------------------------------------
-    def _post_logical_write(self, src_group: DomainGroup, payload: Optional[bytes],
-                            dst: MrDesc, dst_offset: int, imm: Optional[int],
-                            on_done: OnDone, stripe: bool, nic_rr: Optional[int] = None,
-                            extra_post_us: float = 0.0,
-                            synthetic_bytes: Optional[int] = None) -> None:
-        """Post one logical WRITE, striping across NICs when ``stripe``.
+    def _add_logical_write(self, batch: WrBatch, batch_state: BatchState,
+                           payload, dst: MrDesc, dst_offset: int,
+                           imm: Optional[int], stripe: bool,
+                           nic_rr: Optional[int] = None,
+                           extra_post_us: float = 0.0,
+                           synthetic_bytes: Optional[int] = None) -> None:
+        """Template one logical WRITE into ``batch``, striping across NICs
+        when ``stripe``.  ``payload`` is a zero-copy buffer view (already
+        snapshotted by the caller); stripes slice it without copying.
 
         ``synthetic_bytes``: timing-only write of that size (no payload copy)
         — used by cluster-scale benchmarks where materialising terabytes of
         real bytes is pointless; all protocol behaviour is identical."""
+        src_group = batch.group
         dst_group, dst_engine = self.fabric._lookup(dst.owner)
         dst_region = dst_group.region(dst.region_id) if synthetic_bytes is None else None
         nbytes = (len(payload) if payload is not None else 0) \
             if synthetic_bytes is None else synthetic_bytes
         parts = src_group.split_across_nics(nbytes) if stripe else [(None, 0, nbytes)]
-        n_parts = len(parts)
-        state = {"delivered": 0, "sent": 0}
-
-        def on_delivered(op: WireOp, now: float) -> None:
-            state["delivered"] += 1
-            if state["delivered"] == n_parts and imm is not None:
-                dst_engine.counters[dst.owner.dev].increment(imm, now)
-
-        def on_sent(now: float) -> None:
-            state["sent"] += 1
-            if state["sent"] == n_parts:
-                _fire(on_done)
-
+        state = WriteState(len(parts), imm,
+                           dst_engine.counters[dst.owner.dev], batch_state)
         for nic_index, off, ln in parts:
             chunk = payload[off:off + ln] if payload is not None else None
             op = WireOp(kind="write", payload=chunk, dst_region=dst_region,
                         dst_offset=dst_offset + off, imm=imm,
-                        on_delivered=on_delivered, on_sent=on_sent, nbytes=ln)
+                        on_delivered=state.on_delivered, on_sent=state.on_sent,
+                        nbytes=ln)
             idx = nic_index if stripe else (nic_rr if nic_rr is not None else None)
-            src_group.post_write(dst_group, op, nic_index=idx,
-                                 extra_post_us=extra_post_us)
+            batch.add(op, dst_group, nic_index=idx, extra_post_us=extra_post_us)
+
+    def _enqueue_batch(self, batch: WrBatch) -> None:
+        """One application->worker handoff for the whole batch (§3.4)."""
+        self.loop.schedule(ENQUEUE_US, batch.post)
 
     def submit_single_write(self, length: int, imm: Optional[int],
                             src: Tuple[MrHandle, int], dst: Tuple[MrDesc, int],
@@ -195,16 +243,42 @@ class TransferEngine:
         handle, src_off = src
         desc, dst_off = dst
         src_group = self.fabric.group(handle.owner)
-        payload = src_group.region(handle.region_id).read_bytes(src_off, length)
-        self.loop.schedule(
-            ENQUEUE_US,
-            lambda: self._post_logical_write(src_group, payload, desc, dst_off,
-                                             imm, on_done, stripe=True))
+        payload = src_group.region(handle.region_id).snapshot(src_off, length)
+        batch = WrBatch(src_group)
+        self._add_logical_write(batch, BatchState(1, on_done), payload,
+                                desc, dst_off, imm, stripe=True)
+        self._enqueue_batch(batch)
+
+    def submit_write_batch(self, writes: Sequence[Tuple[int, Optional[int],
+                                                        Tuple[MrHandle, int],
+                                                        Tuple[MrDesc, int]]],
+                           on_done: OnDone = None, device: int = 0) -> None:
+        """Batched single-write submission: N ``(length, imm, (handle,
+        src_off), (desc, dst_off))`` WRITEs templated and posted in one
+        event-loop entry.  Each entry keeps ``submit_single_write``
+        semantics (NIC striping, per-write immediate); ``on_done`` fires
+        after ALL entries have sender-side completions."""
+        src_group = self.groups[device]
+        n = len(writes)
+        if n == 0:
+            _fire(on_done)
+            return
+        batch = WrBatch(src_group)
+        batch_state = BatchState(n, on_done)
+        for length, imm, (handle, src_off), (desc, dst_off) in writes:
+            if handle.owner != src_group.addr:
+                raise ValueError("submit_write_batch: mixed source groups")
+            payload = src_group.region(handle.region_id).snapshot(src_off, length)
+            self._add_logical_write(batch, batch_state, payload, desc,
+                                    dst_off, imm, stripe=True)
+        self._enqueue_batch(batch)
 
     def submit_paged_writes(self, page_len: int, imm: Optional[int],
                             src: Tuple[MrHandle, Pages], dst: Tuple[MrDesc, Pages],
                             on_done: OnDone = None) -> None:
-        """One WRITE per page; pages rotate across NICs.
+        """One WRITE per page; pages rotate across NICs.  All pages are
+        templated into a single ``WrBatch`` (one enqueue, per-WR posting
+        cost amortised on the worker).
 
         Each page's WRITEIMM increments the receiver's counter by one (the
         KvCache protocol counts ``n_pages * n_layers + 1`` total events).
@@ -221,21 +295,14 @@ class TransferEngine:
         if n == 0:
             _fire(on_done)
             return
-        state = {"sent": 0}
-
-        def page_done() -> None:
-            state["sent"] += 1
-            if state["sent"] == n:
-                _fire(on_done)
-
-        def post_all() -> None:
-            for k, (so, do) in enumerate(zip(src_offs, dst_offs)):
-                payload = region.read_bytes(so, page_len)
-                self._post_logical_write(src_group, payload, desc, do, imm,
-                                         page_done, stripe=False,
-                                         nic_rr=k % len(src_group.domains))
-
-        self.loop.schedule(ENQUEUE_US, post_all)
+        batch = WrBatch(src_group)
+        batch_state = BatchState(n, on_done)
+        n_nics = len(src_group.domains)
+        for k, (so, do) in enumerate(zip(src_offs, dst_offs)):
+            self._add_logical_write(batch, batch_state,
+                                    region.snapshot(so, page_len), desc, do,
+                                    imm, stripe=False, nic_rr=k % n_nics)
+        self._enqueue_batch(batch)
 
     # -- peer groups: scatter / barrier ---------------------------------------
     def add_peer_group(self, addrs: Sequence[NetAddr]) -> int:
@@ -249,42 +316,48 @@ class TransferEngine:
         WR-templating in the paper amortises descriptor setup; posting cost
         is modeled by the DomainGroup's per-WR posting delay (Table 9).
         """
+        self.submit_scatters([(handle, dsts, imm, on_done)], device=device)
+
+    def submit_scatters(self, groups: Sequence[Tuple[MrHandle,
+                                                     Sequence[ScatterDst],
+                                                     Optional[int], OnDone]],
+                        device: int = 0) -> None:
+        """Batched scatter submission: several ``(handle, dsts, imm,
+        on_done)`` scatters templated into ONE WrBatch / event-loop entry.
+
+        Completion state stays per-scatter (each ``on_done`` fires when its
+        own destinations have sender-side completions; each imm counts its
+        own WRITEs) — only the submission is coalesced."""
         src_group = self.groups[device]
-        region = src_group.region(handle.region_id)
-        n = len(dsts)
-        if n == 0:
-            _fire(on_done)
-            return
-        state = {"sent": 0}
-
-        def one_done() -> None:
-            state["sent"] += 1
-            if state["sent"] == n:
-                _fire(on_done)
-
         extra = SCATTER_EXTRA_US.get(self.nic_name, 0.0)
-
-        def post_all() -> None:
+        n_nics = len(src_group.domains)
+        batch = WrBatch(src_group)
+        for handle, dsts, imm, on_done in groups:
+            n = len(dsts)
+            if n == 0:
+                _fire(on_done)
+                continue
+            region = src_group.region(handle.region_id)
+            batch_state = BatchState(n, on_done)
             for k, sd in enumerate(dsts):
-                payload = region.read_bytes(sd.src, sd.len)
                 desc, off = sd.dst
-                self._post_logical_write(src_group, payload, desc, off, imm,
-                                         one_done, stripe=False,
-                                         nic_rr=k % len(src_group.domains),
-                                         extra_post_us=extra)
-
-        self.loop.schedule(ENQUEUE_US, post_all)
+                self._add_logical_write(batch, batch_state,
+                                        region.snapshot(sd.src, sd.len),
+                                        desc, off, imm, stripe=False,
+                                        nic_rr=k % n_nics,
+                                        extra_post_us=extra)
+        if len(batch):
+            self._enqueue_batch(batch)
 
     def submit_synthetic_write(self, nbytes: int, imm: Optional[int],
                                dst: MrDesc, on_done: OnDone = None,
                                device: int = 0) -> None:
         """Timing-only single write (no payload) — cluster-scale benches."""
         src_group = self.groups[device]
-        self.loop.schedule(
-            ENQUEUE_US,
-            lambda: self._post_logical_write(src_group, None, dst, 0, imm,
-                                             on_done, stripe=True,
-                                             synthetic_bytes=nbytes))
+        batch = WrBatch(src_group)
+        self._add_logical_write(batch, BatchState(1, on_done), None, dst, 0,
+                                imm, stripe=True, synthetic_bytes=nbytes)
+        self._enqueue_batch(batch)
 
     def submit_barrier(self, dsts: Sequence[MrDesc], imm: int,
                        on_done: OnDone = None, device: int = 0) -> None:
@@ -298,20 +371,13 @@ class TransferEngine:
         if n == 0:
             _fire(on_done)
             return
-        state = {"sent": 0}
-
-        def one_done() -> None:
-            state["sent"] += 1
-            if state["sent"] == n:
-                _fire(on_done)
-
-        def post_all() -> None:
-            for k, desc in enumerate(dsts):
-                self._post_logical_write(src_group, b"", desc, 0, imm,
-                                         one_done, stripe=False,
-                                         nic_rr=k % len(src_group.domains))
-
-        self.loop.schedule(ENQUEUE_US, post_all)
+        batch = WrBatch(src_group)
+        batch_state = BatchState(n, on_done)
+        n_nics = len(src_group.domains)
+        for k, desc in enumerate(dsts):
+            self._add_logical_write(batch, batch_state, b"", desc, 0, imm,
+                                    stripe=False, nic_rr=k % n_nics)
+        self._enqueue_batch(batch)
 
     # -- UVM watcher -----------------------------------------------------------
     def alloc_uvm_watcher(self, cb: Callable[[int, int], None]) -> UvmWatcher:

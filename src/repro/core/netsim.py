@@ -18,8 +18,20 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
+
+
+def stable_hash(*parts) -> int:
+    """Process-stable hash for deriving RNG seeds.
+
+    Python's builtin ``hash()`` randomises str hashing per process
+    (PYTHONHASHSEED), which silently broke the simulator's determinism
+    guarantee across processes — two identical runs drew different SRD
+    jitter.  CRC32 over the repr is stable everywhere.
+    """
+    return zlib.crc32(repr(parts).encode()) & 0x7FFFFFFF
 
 
 class EventLoop:

@@ -29,10 +29,14 @@ from .netsim import EventLoop, NicQueue, NicSpec
 
 @dataclass
 class WireOp:
-    """One WRITE (or SEND) as it crosses the wire."""
+    """One WRITE (or SEND) as it crosses the wire.
+
+    ``payload`` is any buffer-protocol object (``memoryview`` on the batch
+    path, ``bytes`` for SEND) snapshotting the source at post time; the
+    channel slices it zero-copy per MTU chunk."""
 
     kind: str                      # "write" | "send" | "barrier"
-    payload: Optional[bytes]       # snapshot of the source bytes (None for 0-size)
+    payload: Optional[object]      # snapshot of the source bytes (None for 0-size)
     dst_region: Optional[object]   # resolved on the receiver (MemoryRegion)
     dst_offset: int
     imm: Optional[int]
@@ -67,6 +71,9 @@ class Channel:
         per = -(-max(nbytes, 1) // nchunks)
         remaining = [nchunks]  # chunks not yet delivered
         last_tx = 0.0
+        # memoryview so per-chunk slices below are zero-copy even when the
+        # submitter handed us plain bytes
+        payload = memoryview(op.payload) if op.payload is not None else None
 
         def deliver_chunk(idx: int, arrive: float) -> None:
             if self.ordered:
@@ -78,11 +85,11 @@ class Channel:
                 arrive = arrive + float(self.rng.uniform(0.0, self.spec.srd_jitter_us))
 
             def land() -> None:
-                if op.payload is not None and op.dst_region is not None:
+                if payload is not None and op.dst_region is not None:
                     lo = idx * per
                     hi = min(nbytes, lo + per)
                     if hi > lo:
-                        op.dst_region.write_bytes(op.dst_offset + lo, op.payload[lo:hi])
+                        op.dst_region.write_bytes(op.dst_offset + lo, payload[lo:hi])
                 remaining[0] -= 1
                 if remaining[0] == 0:
                     # Entire payload visible => CQE/immediate may fire.

@@ -123,7 +123,7 @@ class MoEEndpoint:
         self._last_ctx = ctx
 
         def proxy_phase1() -> None:
-            # 2. scatter routes to all peers (small payload, all NICs)
+            # 2. routes to all peers (small payload, all NICs)
             off = 0
             rb = self.send_buf[-N * E * 4:]
             rb.view(np.int32)[:E] = counts
@@ -132,7 +132,6 @@ class MoEEndpoint:
                 route_dsts.append(ScatterDst(
                     len=E * 4, src=len(self.send_buf) - N * E * 4,
                     dst=(p.d_routes, self.rank * E * 4)))
-            self.engine.submit_scatter(self.h_send, route_dsts, imm=route_imm)
 
             # 3. speculative private-buffer tokens (first t_priv per dest)
             tb = cfg.token_bytes
@@ -151,8 +150,12 @@ class MoEEndpoint:
                     len=take.size * tb, src=send_off,
                     dst=(self.peers[r].d_priv, self.rank * cfg.t_priv * tb)))
                 send_off += take.size * tb
-            if priv_dsts:
-                self.engine.submit_scatter(self.h_send, priv_dsts, imm=tok_imm)
+            # routes + private tokens ride ONE WrBatch (one proxy handoff);
+            # each keeps its own imm so completion accounting is unchanged
+            self.engine.submit_scatters([
+                (self.h_send, route_dsts, route_imm, None),
+                (self.h_send, priv_dsts, tok_imm, None),
+            ])
             ctx["priv_meta"] = priv_meta
             ctx["send_off"] = send_off
 

@@ -123,17 +123,20 @@ def rank0_transfer(cluster: Cluster, routes: List[Route]) -> Dict[str, float]:
     fab.run()
     t_gather = fab.now
 
-    # broadcast: rank0 writes each inference rank's ranges
+    # broadcast: rank0 writes each inference rank's ranges — the whole
+    # fan-out is templated into one batched submission (single enqueue,
+    # per-WR posting cost amortised on rank0's worker)
     by_infer: Dict[int, List[Route]] = {}
     for r in routes:
         by_infer.setdefault(r.infer_rank, []).append(r)
     shard_sz = cluster.train_bufs[0].size
+    writes = []
     for ir, rs in by_infer.items():
         for r in rs:
             src_off = r.train_rank * shard_sz + r.src_off
-            eng0.submit_single_write(
-                r.nbytes, None, (h0, src_off),
-                (cluster.infer_descs[ir], r.dst_off), None)
+            writes.append((r.nbytes, None, (h0, src_off),
+                           (cluster.infer_descs[ir], r.dst_off)))
+    eng0.submit_write_batch(writes)
     t_end = fab.run()
     return {"gather_us": t_gather, "total_us": t_end,
             "bottleneck": "train rank0 NIC"}

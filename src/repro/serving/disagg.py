@@ -106,26 +106,28 @@ class Prefiller:
         tail_buf[:] = tail
         tail_handle, _ = self.engine.reg_mr(tail_buf)
 
-        cnt = {"done": 0, "layers_sent": 0}
+        cnt = {"done": 0}
         total_writes = n_chunks * cfg.n_layers + 1
 
-        def send_layer(l: int) -> None:
-            if req.request_id in self._cancelled:
+        def send_layers(lo: int, hi: int) -> None:
+            # Layers [lo, hi) completed since the last poll land as ONE
+            # batched paged-write submission: the UVM poller coalesces
+            # increments, so coalesced layers share a single WrBatch.
+            if req.request_id in self._cancelled or hi <= lo:
                 return
-            src = Pages(indices=tuple(local_pages[l * n_chunks:(l + 1) * n_chunks]),
+            src = Pages(indices=tuple(local_pages[lo * n_chunks:hi * n_chunks]),
                         stride=self.geom.page_bytes)
-            dst = Pages(indices=tuple(req.pages[l * n_chunks:(l + 1) * n_chunks]),
+            dst = Pages(indices=tuple(req.pages[lo * n_chunks:hi * n_chunks]),
                         stride=self.geom.page_bytes)
+            n_sent = (hi - lo) * n_chunks
             self.engine.submit_paged_writes(
                 self.geom.page_bytes, req.imm,
                 (self.pool.handle, src), (req.kv_desc, dst),
-                on_done=lambda: cnt.__setitem__("done", cnt["done"] + n_chunks))
-            cnt["layers_sent"] += 1
+                on_done=lambda: cnt.__setitem__("done", cnt["done"] + n_sent))
 
         # UvmWatcher: the "GPU" increments after each layer's attn output
-        # projection; the watcher callback sends that layer (App. A).
-        watcher = self.engine.alloc_uvm_watcher(
-            lambda old, new: [send_layer(l) for l in range(old, new)])
+        # projection; the watcher callback sends the completed span (App. A).
+        watcher = self.engine.alloc_uvm_watcher(send_layers)
         for l in range(cfg.n_layers):
             self.fabric.loop.schedule((l + 1) * self.layer_compute_us,
                                       lambda l=l: watcher.store(l + 1))

@@ -1,0 +1,40 @@
+"""Optional-hypothesis shim for the property-test modules.
+
+CI installs the ``[dev]`` extra and runs the property tests for real.  In
+environments without ``hypothesis`` the modules must still *collect* (the
+seed repo errored collection, interrupting the whole suite): the stand-ins
+below turn every ``@given`` test into a skip while leaving the example-based
+tests in the same module runnable.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the dev extra
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """Looks enough like ``hypothesis.strategies`` to be called at
+        decoration time; the decorated tests are skipped, so the returned
+        placeholders are never drawn from."""
+
+        def __getattr__(self, _name):
+            def strategy(*_a, **_k):
+                return None
+            return strategy
+
+    st = _StrategyStub()

@@ -1,0 +1,31 @@
+"""Shared pytest configuration.
+
+* registers the ``slow`` marker (also declared in pyproject.toml);
+* pins ``PYTHONHASHSEED``-independent behaviour by asserting the fabric's
+  stable seeding once per session (cheap canary against determinism
+  regressions).
+"""
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-minute end-to-end case, excluded from the default/tier-1 "
+        "subset (run all with -m \"\")")
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _fabric_determinism_canary():
+    """Two fabrics built in-process from the same seed must agree on the
+    derived per-channel seeds (guards the stable-hash determinism fix)."""
+    from repro.core import Fabric
+
+    def derived(seed):
+        fab = Fabric(seed=seed)
+        eng = fab.add_engine("canary", nic="efa")
+        return [d._seed for d in eng.groups[0].domains]
+
+    assert derived(7) == derived(7)
+    yield

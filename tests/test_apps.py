@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core import Fabric
@@ -35,6 +34,7 @@ def _mono_generate(cfg, params, ids, n_decode):
     return toks
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("nic", ["efa", "cx7"])
 def test_disaggregated_equals_monolithic(nic):
     cfg = get_config("stablelm-3b").reduced()
@@ -50,6 +50,7 @@ def test_disaggregated_equals_monolithic(nic):
     assert dec.results[rid]["ttft_us"] > 0
 
 
+@pytest.mark.slow
 def test_disagg_multiple_requests_and_page_reuse():
     cfg = get_config("stablelm-3b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))

@@ -1,0 +1,210 @@
+"""Batched zero-copy WR submission: conservation, ImmCounter parity,
+payload-aliasing and single-enqueue guarantees of the WrBatch fast path."""
+
+import numpy as np
+import pytest
+
+from repro.core import Fabric, Flag, Pages, ScatterDst
+
+
+def _pair(nic: str, seed: int = 0):
+    fab = Fabric(seed=seed)
+    a = fab.add_engine("a", nic=nic)
+    b = fab.add_engine("b", nic=nic)
+    return fab, a, b
+
+
+# ---------------------------------------------------------------------------
+# bytes conservation across NIC striping / rotation
+# ---------------------------------------------------------------------------
+
+def test_striped_write_conserves_bytes_across_nics():
+    """A large WRITE striped over 4 EFA NICs moves exactly len(src) bytes,
+    split evenly, and lands bit-exact."""
+    fab, a, b = _pair("efa4")
+    size = 1 << 20
+    src = (np.arange(size) % 241).astype(np.uint8)
+    dst = np.zeros(size, np.uint8)
+    hs, _ = a.reg_mr(src)
+    _, dd = b.reg_mr(dst)
+    a.submit_single_write(size, 1, (hs, 0), (dd, 0))
+    fab.run()
+    assert np.array_equal(src, dst)
+    per_nic = [d.nic.bytes_sent for d in a.groups[0].domains]
+    assert sum(per_nic) == size
+    assert all(n == size // 4 for n in per_nic)
+
+
+def test_paged_rotation_conserves_bytes_per_nic():
+    """Batched paged writes rotate pages round-robin: each NIC carries an
+    equal share and the total equals the payload."""
+    fab, a, b = _pair("efa")  # 2 NICs
+    n_pages, page = 8, 4096
+    src = np.random.default_rng(0).integers(0, 255, n_pages * page, dtype=np.uint8)
+    dst = np.zeros_like(src)
+    hs, _ = a.reg_mr(src)
+    _, dd = b.reg_mr(dst)
+    idx = Pages(tuple(range(n_pages)), page)
+    a.submit_paged_writes(page, 2, (hs, idx), (dd, idx))
+    fab.run()
+    assert np.array_equal(src, dst)
+    per_nic = [d.nic.bytes_sent for d in a.groups[0].domains]
+    assert sum(per_nic) == n_pages * page
+    assert per_nic[0] == per_nic[1] == n_pages * page // 2
+
+
+# ---------------------------------------------------------------------------
+# ImmCounter parity: batched path == per-op path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nic", ["cx7", "efa"])
+def test_batched_paged_imm_equals_per_op_path(nic):
+    """The batched paged-write submission must produce exactly the same
+    receiver-side ImmCounter state (one increment per fully-landed page)
+    as issuing every page as its own single WRITE."""
+    n_pages, page, imm = 16, 2048, 9
+    rng = np.random.default_rng(3)
+    payload = rng.integers(0, 255, n_pages * page, dtype=np.uint8)
+
+    # batched path
+    fab1, a1, b1 = _pair(nic, seed=11)
+    dst1 = np.zeros_like(payload)
+    hs1, _ = a1.reg_mr(payload.copy())
+    _, dd1 = b1.reg_mr(dst1)
+    idx = Pages(tuple(range(n_pages)), page)
+    a1.submit_paged_writes(page, imm, (hs1, idx), (dd1, idx))
+    fab1.run()
+
+    # per-op path: one submit per page
+    fab2, a2, b2 = _pair(nic, seed=11)
+    dst2 = np.zeros_like(payload)
+    hs2, _ = a2.reg_mr(payload.copy())
+    _, dd2 = b2.reg_mr(dst2)
+    for i in range(n_pages):
+        a2.submit_single_write(page, imm, (hs2, i * page), (dd2, i * page))
+    fab2.run()
+
+    assert b1.imm_value(imm) == b2.imm_value(imm) == n_pages
+    assert len(b1.counters[0].events) == len(b2.counters[0].events) == n_pages
+    assert np.array_equal(dst1, dst2)
+
+
+# ---------------------------------------------------------------------------
+# zero-copy payload handling must never alias live buffers
+# ---------------------------------------------------------------------------
+
+def test_no_payload_aliasing_after_submit():
+    """WRITE payloads are snapshotted at submission: mutating the source
+    buffer after submit (while chunks are still 'in flight' in virtual
+    time) must not change what lands, even though all chunk slicing is
+    zero-copy memoryview."""
+    fab, a, b = _pair("efa", seed=42)
+    size = 1 << 18
+    src = (np.arange(size) % 199).astype(np.uint8)
+    want = src.copy()
+    dst = np.zeros(size, np.uint8)
+    hs, _ = a.reg_mr(src)
+    _, dd = b.reg_mr(dst)
+    a.submit_single_write(size, 1, (hs, 0), (dd, 0))
+    src[:] = 0xFF  # scribble over the live region before the run
+    fab.run()
+    assert np.array_equal(dst, want)
+
+
+def test_no_payload_aliasing_paged_and_after_delivery():
+    fab, a, b = _pair("cx7", seed=1)
+    n_pages, page = 4, 4096
+    src = np.random.default_rng(9).integers(0, 255, n_pages * page, dtype=np.uint8)
+    want = src.copy()
+    dst = np.zeros_like(src)
+    hs, _ = a.reg_mr(src)
+    _, dd = b.reg_mr(dst)
+    idx = Pages(tuple(range(n_pages)), page)
+    a.submit_paged_writes(page, 5, (hs, idx), (dd, idx))
+    src[:] = 0  # mutate before the event loop runs
+    fab.run()
+    assert np.array_equal(dst, want)
+    src[:] = 77  # and after delivery: dst must hold its own storage
+    assert np.array_equal(dst, want)
+
+
+# ---------------------------------------------------------------------------
+# batched submission APIs
+# ---------------------------------------------------------------------------
+
+def test_submit_write_batch_contents_imm_and_on_done():
+    fab = Fabric(seed=0)
+    a = fab.add_engine("a", nic="cx7")
+    b = fab.add_engine("b", nic="cx7")
+    c = fab.add_engine("c", nic="cx7")
+    src = np.arange(3 * 1024, dtype=np.uint8) % 97
+    hs, _ = a.reg_mr(src)
+    dstb = np.zeros(2048, np.uint8)
+    dstc = np.zeros(1024, np.uint8)
+    _, db = b.reg_mr(dstb)
+    _, dc = c.reg_mr(dstc)
+    flag = Flag()
+    a.submit_write_batch([
+        (1024, 3, (hs, 0), (db, 0)),
+        (1024, 3, (hs, 1024), (db, 1024)),
+        (1024, None, (hs, 2048), (dc, 0)),
+    ], on_done=flag)
+    fab.run()
+    assert flag.is_set()
+    assert np.array_equal(dstb[:1024], src[:1024])
+    assert np.array_equal(dstb[1024:], src[1024:2048])
+    assert np.array_equal(dstc, src[2048:])
+    assert b.imm_value(3) == 2
+    assert c.imm_value(3) == 0
+
+
+def test_submit_write_batch_empty_fires_immediately():
+    fab, a, _ = _pair("cx7")
+    flag = Flag()
+    a.submit_write_batch([], on_done=flag)
+    assert flag.is_set()
+
+
+def test_submit_scatters_multi_imm_one_batch():
+    """Several scatter groups with distinct immediates share one WrBatch:
+    per-imm counting and per-group on_done survive the coalescing."""
+    fab, a, b = _pair("efa", seed=2)
+    src = np.random.default_rng(1).integers(0, 255, 4096, dtype=np.uint8)
+    hs, _ = a.reg_mr(src)
+    dst = np.zeros(4096, np.uint8)
+    _, dd = b.reg_mr(dst)
+    f1, f2 = Flag(), Flag()
+    a.submit_scatters([
+        (hs, [ScatterDst(len=1024, src=0, dst=(dd, 0)),
+              ScatterDst(len=1024, src=1024, dst=(dd, 1024))], 21, f1),
+        (hs, [ScatterDst(len=2048, src=2048, dst=(dd, 2048))], 22, f2),
+    ])
+    fab.run()
+    assert f1.is_set() and f2.is_set()
+    assert np.array_equal(dst, src)
+    assert b.imm_value(21) == 2
+    assert b.imm_value(22) == 1
+
+
+def test_batched_submission_is_one_event_loop_entry():
+    """N WRs across several scatter groups cost ONE app->worker enqueue."""
+    fab, a, b = _pair("cx7")
+    src = np.zeros(4096, np.uint8)
+    hs, _ = a.reg_mr(src)
+    dst = np.zeros(4096, np.uint8)
+    _, dd = b.reg_mr(dst)
+    calls = []
+    orig = fab.loop.schedule
+    fab.loop.schedule = lambda d, fn: (calls.append(d), orig(d, fn))
+    try:
+        a.submit_scatters([
+            (hs, [ScatterDst(len=512, src=i * 512, dst=(dd, i * 512))
+                  for i in range(4)], 1, None),
+            (hs, [ScatterDst(len=512, src=2048 + i * 512, dst=(dd, 2048 + i * 512))
+                  for i in range(4)], 2, None),
+        ])
+    finally:
+        fab.loop.schedule = orig
+    assert len(calls) == 1  # one ENQUEUE for all 8 WRs of both groups
+    fab.run()
+    assert b.imm_value(1) == 4 and b.imm_value(2) == 4

@@ -1,8 +1,7 @@
 """ImmCounter property tests: order-agnostic completion (hypothesis)."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Fabric, ImmCounter, Pages, ScatterDst
 

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -101,6 +100,7 @@ def test_ssd_intra_property(b, nc, cl, h, p, n, seed):
     np.testing.assert_allclose(stt, st_r, rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_ssd_kernel_inside_model():
     """End-to-end: mamba2 forward with/without the Pallas kernel agrees."""
     from repro.configs import get_config
@@ -129,6 +129,7 @@ def test_flash_attention_vs_oracle(cfg):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_flash_path_matches_chunked_in_model():
     """attn_prefill with the flash kernel (FORCE_FLASH) agrees with the
     chunked-jnp path across dense / GQA / windowed archs."""

@@ -5,6 +5,11 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
+
+# Full train/serve launcher subprocesses — minutes of wall-clock each.
+pytestmark = pytest.mark.slow
+
 SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
 
 

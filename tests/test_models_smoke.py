@@ -18,6 +18,19 @@ from repro.optim import AdamWConfig, adamw_update, init_adamw
 
 KEY = jax.random.PRNGKey(0)
 
+# jit-compile cost dominates these smokes; the heaviest arches move to the
+# slow (full-CI) tier per test kind, keeping the tier-1 subset fast while
+# every arch still gets forward+prefill coverage there.
+_HEAVY_TRAIN = {"deepseek-moe-16b", "gemma3-1b", "mamba2-780m",
+                "llama-3.2-vision-90b", "zamba2-1.2b", "qwen3-moe-30b-a3b",
+                "granite-3-8b", "granite-8b", "musicgen-large"}
+_HEAVY_FWD = {"deepseek-moe-16b"}
+
+
+def _arch_params(heavy):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in heavy else a
+            for a in ARCH_IDS]
+
 
 def _batch(cfg, B=2, S=48):
     tokens = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab)
@@ -28,7 +41,7 @@ def _batch(cfg, B=2, S=48):
     return batch, tokens
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _arch_params(_HEAVY_FWD))
 def test_reduced_forward_shapes_and_finite(arch):
     cfg = get_config(arch).reduced()
     assert cfg.n_layers <= 2 and cfg.d_model <= 512 and cfg.n_routed <= 4
@@ -45,7 +58,7 @@ def test_reduced_forward_shapes_and_finite(arch):
     assert np.isfinite(float(aux))
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _arch_params(_HEAVY_TRAIN))
 def test_reduced_train_step(arch):
     cfg = get_config(arch).reduced()
     params = init_params(cfg, KEY)
@@ -66,7 +79,7 @@ def test_reduced_train_step(arch):
     assert moved
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _arch_params(_HEAVY_FWD))
 def test_prefill_decode_matches_forward(arch):
     cfg = get_config(arch).reduced()
     params = init_params(cfg, KEY)
@@ -90,6 +103,7 @@ def test_prefill_decode_matches_forward(arch):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_moe_modes_agree():
     """dense (oracle) vs scatter (capacity) dispatch on a moe arch."""
     cfg = get_config("deepseek-moe-16b").reduced()

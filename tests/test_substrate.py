@@ -7,8 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import restore, save
 from repro.configs import get_config
@@ -87,6 +86,7 @@ def test_checkpoint_roundtrip():
 
 # -- trainer ------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_trainer_loss_decreases():
     cfg = get_config("stablelm-3b").reduced()
     out = train(cfg, TrainConfig(steps=12, seq_len=64, global_batch=4,
@@ -96,6 +96,7 @@ def test_trainer_loss_decreases():
     assert all(np.isfinite(r["loss"]) for r in h)
 
 
+@pytest.mark.slow
 def test_trainer_moe_arch_with_kernels():
     cfg = get_config("qwen3-moe-30b-a3b").reduced()
     out = train(cfg, TrainConfig(steps=6, seq_len=32, global_batch=2,

@@ -9,6 +9,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import restore, save
 from repro.configs import get_config
@@ -19,6 +20,7 @@ from repro.serving import Decoder, Prefiller, Scheduler
 from repro.training import TrainConfig, train
 
 
+@pytest.mark.slow
 def test_train_checkpoint_push_serve_roundtrip():
     # stablelm: uniform KV layout — the disaggregated transfer app moves
     # per-layer pages; pattern-split archs (gemma3/vlm) use the split cache
