@@ -18,8 +18,12 @@ PAPER_T9 = {  # p50 us for posting all scatter WRITEs
 }
 
 
-def bench_posting(nic: str, ep: int, iters: int = 50) -> float:
-    """Time from scatter post start to last WRITE posted (Table 9)."""
+def bench_posting(nic: str, ep: int, iters: int = 50):
+    """Time from scatter post start to last WRITE posted (Table 9).
+
+    Returns ``(p50_us, batch_stats)`` — the engine's per-batch submission
+    counters (WRs per enqueue, bytes per batch) ride along so the ablation
+    table can show how well WR templating amortises the enqueue."""
     fab = Fabric(seed=0)
     src = fab.add_engine("src", nic=nic)
     peers = [fab.add_engine(f"p{i}", nic=nic) for i in range(ep - 1)]
@@ -42,7 +46,7 @@ def bench_posting(nic: str, ep: int, iters: int = 50) -> float:
         # Table 9 window: first WRITE posted -> last WRITE posted
         # (the app->worker enqueue is Table 8's separate row)
         samples.append(group._post_busy_until - t0 - ENQUEUE_US)
-    return float(np.percentile(samples, 50))
+    return float(np.percentile(samples, 50)), src.batch_stats.as_dict()
 
 
 def bench_private_buffer(nic: str = "cx7", ep: int = 64) -> dict:
@@ -61,11 +65,14 @@ def bench_private_buffer(nic: str = "cx7", ep: int = 64) -> dict:
 def run(report) -> None:
     for nic in ("efa", "cx7"):
         for ep in (8, 16, 32, 64):
-            us = bench_posting(nic, ep)
+            us, bstats = bench_posting(nic, ep)
             paper = PAPER_T9[nic][ep]
             report(f"post_scatter_{nic}_ep{ep}", us,
                    f"us p50 post-all-WRITEs (paper {paper}; "
                    f"err {100 * (us - paper) / paper:+.0f}%)")
+            report(f"batch_wrs_{nic}_ep{ep}", bstats["wrs_per_enqueue"],
+                   f"WRs/enqueue over {bstats['batches']} batches "
+                   f"({bstats['bytes_per_batch']:.0f} B/batch)")
     for nic in ("cx7", "efa"):
         sweep = bench_private_buffer(nic)
         best = min(sweep.values())

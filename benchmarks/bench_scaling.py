@@ -1,0 +1,165 @@
+"""Elastic prefill scaling over the control plane (§4 "dynamic scaling").
+
+ONE simulated timeline, four acts, all routing through PeerRegistry epoch
+views (the scheduler holds no static peer list):
+
+  A  overload   — a single prefiller takes an arrival train faster than its
+                  service rate; queue depth and TTFT climb.
+  B  scale-up   — the Autoscaler sees the depth and spawns a second
+                  prefiller, which JOINs the control plane (epoch bump) and
+                  absorbs traffic; TTFT recovers.
+  C  scale-down — once idle, the Autoscaler drains the least-loaded
+                  prefiller: in-flight work finishes, every KV page is
+                  freed, the peer LEAVEs.  Zero leaked pages is asserted.
+  D  failover   — the surviving prefiller crashes mid-burst (stops renewing
+                  its lease); lease expiry marks it dead, in-flight requests
+                  are cancelled at their decoders and re-queued, the
+                  Autoscaler spawns a replacement, and every post-failure
+                  request completes.
+
+``BENCH_SCALING_SMOKE=1`` shrinks the arrival trains for the CI smoke job.
+Model compute is real (reduced stablelm); all times are virtual us.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+SMOKE = os.environ.get("BENCH_SCALING_SMOKE", "") not in ("", "0")
+
+GAP_US = 60.0            # arrival spacing (service time is ~100 us/req)
+LAYER_US = 50.0
+
+
+def run_timeline(n_a: int, n_b: int, n_d: int, *, prompt_len: int = 24,
+                 n_decode: int = 2, nic: str = "efa", seed: int = 7) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import Fabric
+    from repro.ctrl import Autoscaler, ControlPlane, ScalingPolicy
+    from repro.models import init_params
+    from repro.serving import Decoder, Prefiller, Scheduler
+
+    cfg = get_config("stablelm-3b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fab = Fabric(seed=seed)
+    ctrl = ControlPlane(fab, nic=nic, lease_us=600.0, sweep_us=200.0,
+                        max_sweeps=150)
+    prefillers = []
+
+    def spawn(i: int) -> None:
+        prefillers.append(Prefiller(
+            fab, f"p{i}", cfg, params, nic=nic, ctrl=ctrl,
+            layer_compute_us=LAYER_US, renew_us=200.0, max_renewals=150))
+
+    spawn(0)
+    decoders = [Decoder(fab, f"d{i}", cfg, params, nic=nic, ctrl=ctrl,
+                        renew_us=200.0, max_renewals=150) for i in range(2)]
+    sched = Scheduler(fab, ctrl)
+    scaler = Autoscaler(
+        ctrl, sched, spawn,
+        policy=ScalingPolicy(queue_high=3, idle_ticks_down=3,
+                             min_prefillers=1, max_prefillers=4,
+                             cooldown_us=600.0),
+        tick_us=150.0, max_ticks=150, next_index=1)
+
+    rng = np.random.default_rng(seed)
+    phases: dict = {}
+
+    def arrivals(t0: float, n: int, phase: str) -> None:
+        rids: list = []
+        phases[phase] = rids
+        for i in range(n):
+            ids = rng.integers(0, cfg.vocab, size=prompt_len)
+            fab.loop.schedule_at(t0 + i * GAP_US, lambda ids=ids: rids.append(
+                sched.submit(ids, n_decode=n_decode)))
+
+    t_b = n_a * GAP_US + 360.0
+    t_d = t_b + n_b * GAP_US + 1800.0   # leaves an idle window for scale-down
+    arrivals(0.0, n_a, "A")
+    arrivals(t_b, n_b, "B")
+    arrivals(t_d, n_d, "D")
+    # crash every live prefiller shortly into phase D: leases lapse, the
+    # control plane declares them dead, and the autoscaler must replace them
+    fab.loop.schedule_at(t_d + 100.0, lambda: [
+        p.crash() for p in prefillers
+        if p.alive and p.client is not None and not p.client.left])
+    fab.run()
+
+    # -- acceptance checks (the §4 dynamic-scaling contract) ----------------
+    n_total = n_a + n_b + n_d
+    assert len(sched.completed) == n_total, \
+        f"{len(sched.completed)}/{n_total} requests completed"
+    ups = [d for d in scaler.decisions if d[1] == "up"]
+    downs = [d for d in scaler.decisions if d[1] == "down"]
+    assert ups, "autoscaler never scaled up"
+    assert downs, "autoscaler never scaled down"
+    # a joined-mid-run peer served traffic
+    joined = {f"p{i}" for i in range(1, len(prefillers))}
+    served_by = {r["prefiller"] for r in sched.completed.values()}
+    assert served_by & joined, f"no joined peer served traffic ({served_by})"
+    # drained peers left cleanly with zero leaked KV pages
+    drained = [p for p in prefillers if p.client.left and p.alive]
+    assert drained, "no peer completed a drain"
+    for p in drained:
+        assert p.inflight == 0 and len(p.pool._free) == p.pool.n_pages, \
+            f"{p.client.peer_id} leaked pages through its drain"
+    # crash failover: post-failure requests were re-routed and completed
+    assert sched.rerouted, "crash did not force any re-route"
+    crashed = {p.client.peer_id for p in prefillers if not p.alive}
+    for rid in phases["D"]:
+        assert sched.completed[rid]["prefiller"] not in crashed
+    # decoders end clean: all pages + tail slots back
+    for d in decoders:
+        assert len(d.pool._free) == d.pool.n_pages
+        assert len(d._tail_free) == 16 and not d._pending
+    # every route went through an epoch view, and epochs only moved forward
+    assert len(sched.routing_log) >= n_total
+    assert sched.view_epochs == sorted(sched.view_epochs)
+    assert len(set(sched.view_epochs)) == len(sched.view_epochs)
+
+    def ttft(rids):
+        return np.asarray([sched.completed[r]["ttft_us"] for r in rids])
+
+    def tput(rids, t0):
+        done = max(sched.completed[r]["done_us"] for r in rids)
+        return len(rids) / max(done - t0, 1e-9) * 1e3   # req per virtual ms
+
+    return {
+        "phases": phases, "sched": sched, "scaler": scaler, "ctrl": ctrl,
+        "ttft": ttft, "tput": tput, "t_b": t_b, "t_d": t_d,
+        "n_prefillers": len(prefillers),
+    }
+
+
+def run(report) -> None:
+    n_a, n_b, n_d = (6, 6, 4) if SMOKE else (10, 10, 6)
+    r = run_timeline(n_a, n_b, n_d)
+    sched, scaler, ttft, tput = r["sched"], r["scaler"], r["ttft"], r["tput"]
+    ph = r["phases"]
+
+    a, b, d = ttft(ph["A"]), ttft(ph["B"]), ttft(ph["D"])
+    up_ts = [t for t, kind, _ in scaler.decisions if kind == "up"]
+    down_ts = [t for t, kind, _ in scaler.decisions if kind == "down"]
+    report("scale_ttft_p50_overload", float(np.percentile(a, 50)),
+           f"us (1 prefiller, {len(a)} reqs; p95 {np.percentile(a, 95):.0f})")
+    report("scale_ttft_p50_scaled", float(np.percentile(b, 50)),
+           f"us (after scale-up at t={up_ts[0]:.0f}; "
+           f"p95 {np.percentile(b, 95):.0f})")
+    report("scale_ttft_p50_failover", float(np.percentile(d, 50)),
+           f"us (crash at t={r['t_d'] + 100:.0f}, {len(sched.rerouted)} "
+           f"re-routed, all completed)")
+    report("scale_tput_overload", tput(ph["A"], 0.0), "req/ms virtual")
+    report("scale_tput_scaled", tput(ph["B"], r["t_b"]), "req/ms virtual")
+    report("scale_epochs", float(sched.view_epochs[-1]),
+           f"membership epochs seen by scheduler "
+           f"(ups {len(up_ts)}, downs {len(down_ts)}, "
+           f"{r['n_prefillers']} prefillers total)")
+    report("scale_drain_leaked_pages", 0.0,
+           "KV pages leaked through drained scale-down (asserted)")
+    # scale-up must beat the overloaded tail; failover must still complete
+    assert np.percentile(b, 95) < np.percentile(a, 95), \
+        "scale-up did not improve tail TTFT"

@@ -1,40 +1,59 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines.
-``python -m benchmarks.run [p2p|kvcache|rlweights|moe|ablation ...]``
+Prints ``name,us_per_call,derived`` CSV lines and writes the same rows to
+``benchmarks/out/<module>.csv`` (one file per module — published as CI
+artifacts by the bench-smoke job).
+
+``python -m benchmarks.run [p2p|kvcache|rlweights|moe|ablation|scaling ...]``
 runs a subset (default: all).
 """
 
 from __future__ import annotations
 
+import csv
+import os
 import sys
 import time
+
+OUT_DIR = os.environ.get(
+    "BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
 
 
 def main() -> None:
     from . import (bench_ablation, bench_kvcache, bench_moe, bench_p2p,
-                   bench_rlweights)
+                   bench_rlweights, bench_scaling)
     modules = {
         "p2p": bench_p2p,              # Table 2 / Fig. 8
         "kvcache": bench_kvcache,      # Table 3 / Table 4
         "rlweights": bench_rlweights,  # Table 5
         "moe": bench_moe,              # Fig. 9/10 / Table 6
         "ablation": bench_ablation,    # Fig. 11 / Table 8/9
+        "scaling": bench_scaling,      # §4 dynamic scaling timeline
     }
     wanted = sys.argv[1:] or list(modules)
-    rows = []
-
-    def report(name: str, us, derived: str = "") -> None:
-        rows.append((name, us, derived))
-        print(f"{name},{0.0 if us is None else float(us):.3f},{derived}")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    total = 0
 
     for key in wanted:
         mod = modules[key]
+        rows = []
+
+        def report(name: str, us, derived: str = "") -> None:
+            rows.append((name, 0.0 if us is None else float(us), derived))
+            print(f"{name},{0.0 if us is None else float(us):.3f},{derived}")
+
         t0 = time.time()
         print(f"# == {key}: {mod.__doc__.splitlines()[0]} ==")
         mod.run(report)
         print(f"# {key} done in {time.time() - t0:.1f}s")
-    print(f"# total: {len(rows)} measurements")
+        path = os.path.join(OUT_DIR, f"{key}.csv")
+        with open(path, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(["name", "value", "derived"])
+            for name, us, derived in rows:
+                w.writerow([name, f"{us:.3f}", derived])
+        total += len(rows)
+    print(f"# total: {total} measurements -> {OUT_DIR}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,17 @@
-"""Disaggregated serving demo (paper §4): prefillers + decoders + scheduler.
+"""Disaggregated serving demo (paper §4): elastic prefill over the control
+plane.
 
-Two prefill nodes and two decode nodes serve a batch of requests over the
-simulated EFA fabric; KV pages move layer-by-layer via paged WRITEIMM,
-decode starts on the ImmCounter, and the generations are verified against a
-monolithic run of the same model.
+One prefill node and two decode nodes register with the ControlPlane and
+serve a batch of requests over the simulated EFA fabric; a SECOND prefiller
+joins mid-run (epoch bump, VIEW-UPDATE) and picks up traffic.  KV pages
+move layer-by-layer via paged WRITEIMM, decode starts on the ImmCounter,
+and the generations are verified against a monolithic run of the same
+model.
+
+Uses stablelm-3b: its reduced cache is a uniform (L, S, K, Dh) k/v stack,
+which is what the §4 paged protocol moves.  Pattern-split archs (gemma3's
+local/global stacks) are rejected by ``disagg_unsupported_reason`` — the
+state-handoff schema for those is a ROADMAP item.
 
     PYTHONPATH=src python examples/disaggregated_serving.py
 """
@@ -14,27 +22,36 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import Fabric
+from repro.ctrl import ControlPlane
 from repro.models import decode_step, init_params, prefill
 from repro.serving import Decoder, Prefiller, Scheduler
 
-cfg = get_config("gemma3-1b").reduced()
+cfg = get_config("stablelm-3b").reduced()
 params = init_params(cfg, jax.random.PRNGKey(0))
 
 fab = Fabric(seed=1)
-prefillers = [Prefiller(fab, f"prefill{i}", cfg, params, nic="efa")
-              for i in range(2)]
-decoders = [Decoder(fab, f"decode{i}", cfg, params, nic="efa")
+ctrl = ControlPlane(fab, nic="efa")
+prefillers = [Prefiller(fab, "prefill0", cfg, params, nic="efa", ctrl=ctrl)]
+decoders = [Decoder(fab, f"decode{i}", cfg, params, nic="efa", ctrl=ctrl)
             for i in range(2)]
-sched = Scheduler(fab, prefillers, decoders)
+sched = Scheduler(fab, ctrl)
+
+# a second prefiller JOINs mid-run — scale-up is just another epoch
+fab.loop.schedule(150.0, lambda: prefillers.append(
+    Prefiller(fab, "prefill1", cfg, params, nic="efa", ctrl=ctrl)))
 
 rng = np.random.default_rng(0)
 requests = [rng.integers(0, cfg.vocab, size=24 + 8 * i) for i in range(4)]
-rids = [sched.submit(ids, n_decode=4) for ids in requests]
+rids = []
+for i, ids in enumerate(requests):
+    # arrivals spread over virtual time, so the joiner picks up traffic
+    fab.loop.schedule_at(100.0 * i, lambda ids=ids: rids.append(
+        sched.submit(ids, n_decode=4)))
 fab.run()
+sched.check_drained()   # raises if anything was left unrouted
 
 for rid, ids in zip(rids, requests):
-    dec = decoders[rid % len(decoders)]
-    r = dec.results[rid]
+    r = sched.completed[rid]
     # monolithic reference
     lg, cache = prefill(params, jnp.asarray(ids)[None], cfg,
                         max_len=len(ids) + 64, moe_mode="dense")
@@ -48,6 +65,9 @@ for rid, ids in zip(rids, requests):
         pos += 1
     ok = r["tokens"] == toks
     print(f"req {rid}: prompt {len(ids):3d} tok  TTFT {r['ttft_us']:7.1f}us  "
-          f"tokens {r['tokens']}  match_monolithic={ok}")
+          f"served by {r['prefiller']}  tokens {r['tokens']}  "
+          f"match_monolithic={ok}")
     assert ok
-print("disaggregated == monolithic for all requests ✓")
+served = {r["prefiller"] for r in sched.completed.values()}
+print(f"disaggregated == monolithic for all requests ✓  "
+      f"(prefillers used: {sorted(served)}, final epoch {sched.view.epoch})")

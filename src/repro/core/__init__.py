@@ -6,8 +6,8 @@ the ImmCounter completion primitive.
 """
 
 from .domain import MrDesc, MrHandle, NetAddr, Pages, ScatterDst, WrBatch
-from .engine import (BatchState, Fabric, Flag, TransferEngine, WriteState,
-                     NIC_PRESETS)
+from .engine import (BatchState, BatchStats, Fabric, Flag, TransferEngine,
+                     WriteState, NIC_PRESETS)
 from .imm_counter import ImmCounter
 from .netsim import CX7, EFA_100, EFA_200, EventLoop, NicSpec
 from .uvm import UvmWatcher
@@ -15,7 +15,7 @@ from .uvm import UvmWatcher
 __all__ = [
     "Fabric", "TransferEngine", "Flag", "NIC_PRESETS",
     "MrDesc", "MrHandle", "NetAddr", "Pages", "ScatterDst",
-    "WrBatch", "BatchState", "WriteState",
+    "WrBatch", "BatchState", "BatchStats", "WriteState",
     "ImmCounter", "UvmWatcher",
     "EventLoop", "NicSpec", "CX7", "EFA_100", "EFA_200",
 ]

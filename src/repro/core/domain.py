@@ -120,16 +120,18 @@ class WrBatch:
     hot path of every scatter/paged submission.
     """
 
-    __slots__ = ("group", "wrs")
+    __slots__ = ("group", "wrs", "nbytes")
 
     def __init__(self, group: "DomainGroup"):
         self.group = group
         # (op, dst_group, nic_index, extra_post_us) per templated WR
         self.wrs: List[Tuple[WireOp, "DomainGroup", Optional[int], float]] = []
+        self.nbytes = 0    # total payload bytes templated into this batch
 
     def add(self, op: WireOp, dst_group: "DomainGroup",
             nic_index: Optional[int] = None, extra_post_us: float = 0.0) -> None:
         self.wrs.append((op, dst_group, nic_index, extra_post_us))
+        self.nbytes += op.nbytes
 
     def __len__(self) -> int:
         return len(self.wrs)

@@ -73,6 +73,38 @@ def _fire(done: OnDone) -> None:
         done()
 
 
+class BatchStats:
+    """Per-engine submission-batching counters (ROADMAP: WRs/enqueue for the
+    ablation bench).  One ``record`` per event-loop enqueue; derived ratios
+    say how well WR templating amortises the app->worker handoff."""
+
+    __slots__ = ("batches", "wrs", "nbytes")
+
+    def __init__(self) -> None:
+        self.batches = 0
+        self.wrs = 0
+        self.nbytes = 0
+
+    def record(self, batch: WrBatch) -> None:
+        self.batches += 1
+        self.wrs += len(batch)
+        self.nbytes += batch.nbytes
+
+    @property
+    def wrs_per_enqueue(self) -> float:
+        return self.wrs / self.batches if self.batches else 0.0
+
+    @property
+    def bytes_per_batch(self) -> float:
+        return self.nbytes / self.batches if self.batches else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"batches": self.batches, "wrs": self.wrs,
+                "nbytes": self.nbytes,
+                "wrs_per_enqueue": self.wrs_per_enqueue,
+                "bytes_per_batch": self.bytes_per_batch}
+
+
 class BatchState:
     """Sender-side completion state shared by every logical write of one
     batched submission (replaces the per-op ``{"sent": n}`` dict closures):
@@ -130,6 +162,7 @@ class TransferEngine:
         self.counters: Dict[int, ImmCounter] = {}
         self._recv_pools: Dict[int, List] = {}
         self._pending_sends: Dict[int, List] = {}
+        self.batch_stats = BatchStats()
         for dev in range(num_devices):
             addr = NetAddr(node, dev)
             seed = fabric.seed ^ (stable_hash(addr) & 0xFFFF)
@@ -235,6 +268,7 @@ class TransferEngine:
 
     def _enqueue_batch(self, batch: WrBatch) -> None:
         """One application->worker handoff for the whole batch (§3.4)."""
+        self.batch_stats.record(batch)
         self.loop.schedule(ENQUEUE_US, batch.post)
 
     def submit_single_write(self, length: int, imm: Optional[int],

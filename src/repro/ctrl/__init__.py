@@ -1,0 +1,21 @@
+"""Control plane for dynamic peer membership (paper §4 "dynamic scaling").
+
+A typed wire protocol (JOIN / LEASE-RENEW / DRAIN / LEAVE / VIEW-UPDATE)
+carried over the fabric's own two-sided SEND/RECV path, an epoch-numbered
+:class:`PeerRegistry`, lease-based liveness, and an :class:`Autoscaler`
+policy — the layer that lets prefillers and decoders join, drain, and fail
+mid-run while the scheduler routes only against the current epoch's view.
+"""
+
+from . import messages
+from .autoscaler import Autoscaler, ScalingPolicy
+from .client import ControlClient
+from .plane import ControlPlane
+from .registry import (DEAD, DRAINING, LEFT, LIVE, MembershipView,
+                       PeerRegistry, PeerView)
+
+__all__ = [
+    "messages", "ControlPlane", "ControlClient", "PeerRegistry",
+    "MembershipView", "PeerView", "Autoscaler", "ScalingPolicy",
+    "LIVE", "DRAINING", "DEAD", "LEFT",
+]

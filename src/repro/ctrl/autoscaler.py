@@ -1,0 +1,114 @@
+"""Autoscaler: elastic prefill capacity from queue-depth and TTFT signals.
+
+A small policy object evaluated on a periodic tick (bounded, like every
+other background loop in the simulator).  Signals:
+
+* ``scheduler.queue_depth()`` — backlog + in-flight requests;
+* ``scheduler.ttft_ema`` — exponential moving average of time-to-first-
+  token, pushed by decoders via REQ-DONE;
+* per-peer ``inflight`` from the registry (piggybacked on LEASE-RENEWs),
+  used to pick the least-loaded peer as the scale-down victim.
+
+Decisions:
+
+* **scale up** when demand outruns capacity (queue depth at/above
+  ``queue_high``, or TTFT EMA above ``ttft_high_us``) — calls the injected
+  ``spawn(index)`` factory, which constructs a new peer; the peer JOINs the
+  control plane itself, so the autoscaler never touches the registry.
+* **scale down** when the system has been idle for ``idle_ticks_down``
+  consecutive ticks — asks the control plane to *drain* the least-loaded
+  live prefiller (never an outright removal: in-flight work finishes and
+  KV pages are freed before the peer LEAVEs).
+
+Both directions respect ``cooldown_us`` and the [min, max] size bounds.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+from .plane import ControlPlane
+
+ROLE = "prefill"
+
+
+@dataclass
+class ScalingPolicy:
+    queue_high: int = 3            # depth that triggers scale-up
+    ttft_high_us: float = float("inf")   # TTFT EMA SLO (optional signal)
+    idle_ticks_down: int = 3       # consecutive idle ticks before scale-down
+    min_prefillers: int = 1
+    max_prefillers: int = 8
+    cooldown_us: float = 600.0     # min time between scaling actions
+
+
+class Autoscaler:
+    def __init__(self, ctrl: ControlPlane, scheduler, spawn: Callable[[int], object],
+                 *, policy: Optional[ScalingPolicy] = None,
+                 tick_us: float = 150.0, max_ticks: int = 200,
+                 next_index: int = 1, auto: bool = True):
+        self.ctrl = ctrl
+        self.scheduler = scheduler
+        self.spawn = spawn
+        self.policy = policy or ScalingPolicy()
+        self.tick_us = tick_us
+        self.max_ticks = max_ticks
+        self._ticks = 0
+        self._running = True
+        self._idle_ticks = 0
+        self._next_index = next_index
+        self._last_action_us = float("-inf")
+        # (virtual time, action, detail) audit trail
+        self.decisions: List[Tuple[float, str, str]] = []
+        if auto:
+            self._schedule_tick()
+
+    # -- policy evaluation ---------------------------------------------------
+    def step(self, now: float) -> Optional[str]:
+        """Evaluate the policy once; returns the action taken (or None)."""
+        pol = self.policy
+        view = self.ctrl.view()
+        live = view.routable(ROLE)
+        draining = [p for p in view.by_role(ROLE) if p.status == "draining"]
+        depth = self.scheduler.queue_depth()
+        ema = self.scheduler.ttft_ema
+
+        self._idle_ticks = self._idle_ticks + 1 if depth == 0 else 0
+        if now - self._last_action_us < pol.cooldown_us:
+            return None
+
+        overloaded = depth >= pol.queue_high or (
+            ema is not None and ema > pol.ttft_high_us)
+        if overloaded and len(live) + len(draining) < pol.max_prefillers:
+            idx = self._next_index
+            self._next_index += 1
+            self._last_action_us = now
+            self.decisions.append((now, "up", f"spawn#{idx} depth={depth}"))
+            self.spawn(idx)
+            return "up"
+
+        if (self._idle_ticks >= pol.idle_ticks_down and not draining
+                and len(live) > pol.min_prefillers):
+            victim = min(live, key=lambda p: (p.inflight, p.peer_id))
+            self._last_action_us = now
+            self._idle_ticks = 0
+            self.decisions.append((now, "down", f"drain {victim.peer_id}"))
+            self.ctrl.drain(victim.peer_id)
+            return "down"
+        return None
+
+    # -- tick loop -----------------------------------------------------------
+    def stop(self) -> None:
+        self._running = False
+
+    def _schedule_tick(self) -> None:
+        if not self._running or self._ticks >= self.max_ticks:
+            return
+        self._ticks += 1
+
+        def tick() -> None:
+            self.step(self.ctrl.fabric.now)
+            self._schedule_tick()
+
+        self.ctrl.fabric.loop.schedule(self.tick_us, tick)

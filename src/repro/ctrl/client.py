@@ -1,0 +1,103 @@
+"""ControlClient: the peer-side half of the control-plane protocol.
+
+Embedded in every elastic peer (Prefiller / Decoder).  Owns the JOIN
+handshake, the periodic LEASE-RENEW loop (with piggybacked load signals),
+and LEAVE.  Incoming control messages arrive on the peer's *single* recv
+pool interleaved with data-plane traffic; the owner decodes each payload
+and offers it to :meth:`handle`, which consumes control messages and
+returns False for everything else.
+
+A crash is modeled by the owner's ``alive`` flag going False: the renew
+loop checks ``alive_fn`` before every beat, so a crashed peer simply stops
+renewing and its lease lapses at the control plane — no goodbye message,
+exactly like a real process death.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+from ..core import Fabric, MrDesc, NetAddr, TransferEngine
+from . import messages as m
+from .registry import MembershipView
+
+DEFAULT_RENEW_US = 500.0
+
+
+class ControlClient:
+    def __init__(self, engine: TransferEngine, fabric: Fabric,
+                 ctrl_addr: NetAddr, peer_id: str, role: str, *,
+                 renew_us: float = DEFAULT_RENEW_US, max_renewals: int = 256,
+                 alive_fn: Callable[[], bool] = lambda: True,
+                 inflight_fn: Callable[[], int] = lambda: 0,
+                 free_pages_fn: Callable[[], int] = lambda: 0,
+                 on_drain: Optional[Callable[[m.Drain], None]] = None,
+                 on_view: Optional[Callable[[MembershipView], None]] = None):
+        self.engine = engine
+        self.fabric = fabric
+        self.ctrl_addr = ctrl_addr
+        self.peer_id = peer_id
+        self.role = role
+        self.renew_us = renew_us
+        self.max_renewals = max_renewals
+        self.alive_fn = alive_fn
+        self.inflight_fn = inflight_fn
+        self.free_pages_fn = free_pages_fn
+        self.on_drain = on_drain
+        self.on_view = on_view
+        self.joined = False          # JOIN-ACK received
+        self.left = False
+        self.epoch: Optional[int] = None
+        self.lease_us: Optional[float] = None
+        self._renewals = 0
+
+    # -- outbound ------------------------------------------------------------
+    def join(self, *, nic: str, kv_desc: Optional[MrDesc],
+             geom: Dict[str, Any], n_pages: int,
+             lease_us: float = 0.0) -> None:
+        self.engine.submit_send(self.ctrl_addr, m.encode(m.Join(
+            peer_id=self.peer_id, role=self.role,
+            addr=self.engine.address(0), nic=nic, kv_desc=kv_desc,
+            geom=geom, n_pages=n_pages, lease_us=lease_us)))
+        self._schedule_renew()
+
+    def leave(self) -> None:
+        if self.left:
+            return
+        self.left = True
+        self.engine.submit_send(self.ctrl_addr,
+                                m.encode(m.Leave(self.peer_id)))
+
+    # -- inbound -------------------------------------------------------------
+    def handle(self, msg: Any) -> bool:
+        """Consume a decoded control message; False if it's not ours."""
+        if isinstance(msg, m.JoinAck):
+            self.joined = True
+            self.epoch = msg.epoch
+            self.lease_us = msg.lease_us
+            return True
+        if isinstance(msg, m.Drain):
+            if self.on_drain is not None:
+                self.on_drain(msg)
+            return True
+        if isinstance(msg, m.ViewUpdate):
+            if self.on_view is not None:
+                self.on_view(MembershipView.from_wire(msg.epoch, msg.peers))
+            return True
+        return False
+
+    # -- lease renewals ------------------------------------------------------
+    def _schedule_renew(self) -> None:
+        if self.left or self._renewals >= self.max_renewals:
+            return
+        self._renewals += 1
+
+        def renew() -> None:
+            if self.left or not self.alive_fn():
+                return     # crashed or departed: lease lapses at the ctrl
+            self.engine.submit_send(self.ctrl_addr, m.encode(m.LeaseRenew(
+                self.peer_id, inflight=self.inflight_fn(),
+                free_pages=self.free_pages_fn())))
+            self._schedule_renew()
+
+        self.fabric.loop.schedule(self.renew_us, renew)

@@ -1,0 +1,220 @@
+"""Typed wire messages for the control plane (and the serving data plane).
+
+The paper's fabric-lib pairs its one-sided data plane with *out-of-band
+address exchange*: peers learn each other's ``NetAddr``/``MrDesc`` over a
+side channel before any WRITE can be posted.  The seed repo skipped that —
+peers swapped descriptors by direct Python object reference, and the one
+struct that did cross the wire (``DispatchReq``) was an ad-hoc pickle.
+
+This module replaces both with a small typed protocol carried over the
+fabric's own two-sided ``submit_send``/``submit_recvs`` path:
+
+* every message is a dataclass registered under a 4-byte tag via ``@wire``;
+* ``encode``/``decode`` produce a tagged, JSON-based, process-portable
+  byte string (no pickle — the wire format is inspectable and versionable);
+* fabric value types (``NetAddr``, ``MrDesc``, numpy arrays) round-trip
+  through explicit markers, so a ``MrDesc`` received over the wire is
+  usable as a WRITE destination exactly like a locally constructed one.
+
+Control-plane verbs (paper §4 "dynamic scaling", Holmes-style capability
+registry): JOIN / JOIN-ACK / LEASE-RENEW / DRAIN / LEAVE / VIEW-UPDATE.
+Data-plane verbs used by the elastic scheduler: SUBMIT / CANCEL / DONE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..core import MrDesc, NetAddr
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def wire(tag: str):
+    """Class decorator: register a dataclass as a wire message under ``tag``."""
+    if len(tag) != 4:
+        raise ValueError(f"wire tag must be 4 chars: {tag!r}")
+
+    def deco(cls):
+        if tag in _REGISTRY:
+            raise ValueError(f"duplicate wire tag {tag!r}")
+        cls._WIRE_TAG = tag
+        _REGISTRY[tag] = cls
+        return cls
+
+    return deco
+
+
+# -- value encoding -----------------------------------------------------------
+
+def enc_value(v: Any) -> Any:
+    """Recursively encode a field value into JSON-safe form."""
+    if isinstance(v, NetAddr):
+        return {"__na__": [v.node, v.dev]}
+    if isinstance(v, MrDesc):
+        return {"__mr__": [v.region_id, v.owner.node, v.owner.dev, v.nbytes,
+                           [list(rk) for rk in v.rkeys]]}
+    if isinstance(v, np.ndarray):
+        return {"__nd__": [v.dtype.str, v.tolist()]}
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, (list, tuple)):
+        return [enc_value(x) for x in v]
+    if isinstance(v, dict):
+        return {k: enc_value(x) for k, x in v.items()}
+    return v
+
+
+def dec_value(v: Any) -> Any:
+    """Inverse of :func:`enc_value`."""
+    if isinstance(v, dict):
+        if "__na__" in v:
+            node, dev = v["__na__"]
+            return NetAddr(node, int(dev))
+        if "__mr__" in v:
+            region_id, node, dev, nbytes, rkeys = v["__mr__"]
+            return MrDesc(int(region_id), NetAddr(node, int(dev)), int(nbytes),
+                          tuple((int(i), int(k)) for i, k in rkeys))
+        if "__nd__" in v:
+            dt, data = v["__nd__"]
+            return np.asarray(data, dtype=np.dtype(dt))
+        return {k: dec_value(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [dec_value(x) for x in v]
+    return v
+
+
+def encode(msg: Any) -> bytes:
+    """Serialize a registered message: ``<tag>\\0<json fields>``."""
+    tag = getattr(msg, "_WIRE_TAG", None)
+    if tag is None:
+        raise TypeError(f"{type(msg).__name__} is not a @wire message")
+    fields = {f.name: enc_value(getattr(msg, f.name))
+              for f in dataclasses.fields(msg)}
+    return tag.encode() + b"\0" + json.dumps(
+        fields, separators=(",", ":")).encode()
+
+
+def decode(payload: bytes) -> Any:
+    tag, _, body = bytes(payload).partition(b"\0")
+    cls = _REGISTRY.get(tag.decode("ascii", "replace"))
+    if cls is None:
+        raise ValueError(f"unknown wire tag {tag!r}")
+    raw = json.loads(body.decode())
+    return cls(**{k: dec_value(v) for k, v in raw.items()})
+
+
+# -- control-plane messages ---------------------------------------------------
+
+@wire("JOIN")
+@dataclass
+class Join:
+    """Peer -> ctrl: register for membership.
+
+    Publishes everything a remote needs to target this peer: wire address,
+    the KV pool's ``MrDesc``, pool geometry, and the NIC kind (Holmes-style
+    per-peer capability so mixed CX7/EFA pools can share one registry).
+    """
+
+    peer_id: str
+    role: str                      # "prefill" | "decode"
+    addr: NetAddr
+    nic: str
+    kv_desc: Optional[MrDesc]
+    geom: Dict[str, Any]           # JSON-safe PoolGeometry fields
+    n_pages: int
+    lease_us: float                # requested lease duration
+
+
+@wire("JACK")
+@dataclass
+class JoinAck:
+    """Ctrl -> peer: admission + the granted lease."""
+
+    peer_id: str
+    epoch: int
+    lease_us: float
+
+
+@wire("LEAS")
+@dataclass
+class LeaseRenew:
+    """Peer -> ctrl: liveness + piggybacked load signals (for autoscaling)."""
+
+    peer_id: str
+    inflight: int = 0
+    free_pages: int = 0
+
+
+@wire("DRAN")
+@dataclass
+class Drain:
+    """Ctrl -> peer: stop accepting work, finish in-flight, then LEAVE."""
+
+    peer_id: str
+    reason: str = "scale-down"
+
+
+@wire("LEAV")
+@dataclass
+class Leave:
+    """Peer -> ctrl: clean departure (drain complete or voluntary)."""
+
+    peer_id: str
+
+
+@wire("VIEW")
+@dataclass
+class ViewUpdate:
+    """Ctrl -> subscribers: epoch-numbered membership view snapshot."""
+
+    epoch: int
+    peers: List[Dict[str, Any]]    # registry.MembershipView wire form
+
+
+# -- elastic data-plane messages (scheduler <-> decoder) ----------------------
+
+@wire("SUBM")
+@dataclass
+class SubmitReq:
+    """Scheduler -> decoder: route one request to (prefiller, decoder).
+
+    ``attempt`` disambiguates re-routes: a failover re-submission of the
+    same request id carries a higher attempt, so a late CANCEL for an older
+    attempt can never kill the replacement (SEND delivery is unordered).
+    """
+
+    request_id: int
+    input_ids: np.ndarray
+    prefiller: NetAddr
+    n_decode: int
+    reply_to: NetAddr
+    attempt: int = 0
+
+
+@wire("CANC")
+@dataclass
+class CancelReq:
+    """Scheduler -> decoder: abandon one attempt; free its pages."""
+
+    request_id: int
+    attempt: int = 0
+
+
+@wire("DONE")
+@dataclass
+class ReqDone:
+    """Decoder -> scheduler: request completed (TTFT + generated tokens)."""
+
+    request_id: int
+    attempt: int
+    peer_id: str
+    ttft_us: float
+    tokens: List[int] = field(default_factory=list)

@@ -1,0 +1,133 @@
+"""ControlPlane: the membership service, running over the fabric itself.
+
+The control plane owns one :class:`~repro.core.TransferEngine` and speaks
+only the typed wire protocol of :mod:`repro.ctrl.messages` over the two-
+sided SEND/RECV path — the same transport the data plane uses, mirroring
+fabric-lib's out-of-band exchange running in-band once the fabric is up.
+
+Responsibilities:
+
+* admit JOINs into the :class:`~repro.ctrl.registry.PeerRegistry` and grant
+  leases;
+* expire lapsed leases on a periodic sweep (this subsumes the Scheduler's
+  old hand-rolled heartbeat loop — liveness is now lease-based and peers
+  push their own renewals);
+* push epoch-numbered VIEW-UPDATEs to subscribers on every membership
+  change;
+* orchestrate scale-down: ``drain(peer_id)`` flips the registry state (so
+  schedulers stop routing there at the next view) and sends the peer a
+  DRAIN; the peer finishes in-flight work, frees its pages, and LEAVEs.
+
+The sweep loop is bounded (``max_sweeps``) so ``run_until_idle`` stays
+finite, exactly like the seed's bounded heartbeat train; ``stop()`` ends it
+early.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List
+
+from ..core import Fabric, NetAddr
+from . import messages as m
+from .registry import MembershipView, PeerRegistry
+
+DEFAULT_LEASE_US = 2_000.0
+DEFAULT_SWEEP_US = 250.0
+
+
+class ControlPlane:
+    def __init__(self, fabric: Fabric, *, node: str = "ctrl",
+                 nic: str = "efa", lease_us: float = DEFAULT_LEASE_US,
+                 sweep_us: float = DEFAULT_SWEEP_US, max_sweeps: int = 256):
+        self.fabric = fabric
+        self.engine = fabric.add_engine(node, nic=nic)
+        self.nic = nic
+        self.registry = PeerRegistry()
+        self.lease_us = lease_us
+        self.sweep_us = sweep_us
+        self.max_sweeps = max_sweeps
+        self._sweeps = 0
+        self._running = True
+        self._subs: List[NetAddr] = []
+        # peer_id -> cb(record) invoked when a lease expiry kills the peer
+        self.on_death: List[Callable] = []
+        self.engine.submit_recvs(1 << 16, 32, self._on_msg)
+        self._schedule_sweep()
+
+    # -- identity -----------------------------------------------------------
+    def address(self) -> NetAddr:
+        return self.engine.address(0)
+
+    def view(self) -> MembershipView:
+        return self.registry.view()
+
+    # -- subscriptions -------------------------------------------------------
+    def subscribe(self, addr: NetAddr) -> None:
+        """Register a VIEW-UPDATE subscriber; pushes the current view."""
+        if addr not in self._subs:
+            self._subs.append(addr)
+        self._send_view(addr)
+
+    def _send_view(self, addr: NetAddr) -> None:
+        view = self.registry.view()
+        self.engine.submit_send(
+            addr, m.encode(m.ViewUpdate(view.epoch, view.to_wire())))
+
+    def _broadcast(self) -> None:
+        for addr in self._subs:
+            self._send_view(addr)
+
+    # -- message handling ----------------------------------------------------
+    def _on_msg(self, payload: bytes) -> None:
+        msg = m.decode(payload)
+        if isinstance(msg, m.Join):
+            # a peer may request a shorter lease; the server's is the cap
+            lease = min(msg.lease_us, self.lease_us) if msg.lease_us \
+                else self.lease_us
+            self.registry.join(
+                peer_id=msg.peer_id, role=msg.role, addr=msg.addr,
+                nic=msg.nic, kv_desc=msg.kv_desc, geom=msg.geom,
+                n_pages=msg.n_pages, lease_us=lease, now=self.fabric.now)
+            self.engine.submit_send(
+                msg.addr,
+                m.encode(m.JoinAck(msg.peer_id, self.registry.epoch, lease)))
+            self._broadcast()
+        elif isinstance(msg, m.LeaseRenew):
+            self.registry.renew(
+                msg.peer_id, now=self.fabric.now, lease_us=self.lease_us,
+                inflight=msg.inflight, free_pages=msg.free_pages)
+        elif isinstance(msg, m.Leave):
+            if self.registry.leave(msg.peer_id) is not None:
+                self._broadcast()
+        else:
+            raise ValueError(f"control plane got unexpected {type(msg).__name__}")
+
+    # -- scale-down orchestration -------------------------------------------
+    def drain(self, peer_id: str, reason: str = "scale-down") -> bool:
+        """Start draining ``peer_id``: registry flip + DRAIN to the peer."""
+        rec = self.registry.record(peer_id)
+        if rec is None or self.registry.start_drain(peer_id) is None:
+            return False
+        self._broadcast()
+        self.engine.submit_send(rec.addr, m.encode(m.Drain(peer_id, reason)))
+        return True
+
+    # -- lease sweep ---------------------------------------------------------
+    def stop(self) -> None:
+        self._running = False
+
+    def _schedule_sweep(self) -> None:
+        if not self._running or self._sweeps >= self.max_sweeps:
+            return
+        self._sweeps += 1
+
+        def sweep() -> None:
+            died = self.registry.expire(self.fabric.now)
+            if died:
+                for rec in died:
+                    for cb in self.on_death:
+                        cb(rec)
+                self._broadcast()
+            self._schedule_sweep()
+
+        self.fabric.loop.schedule(self.sweep_us, sweep)

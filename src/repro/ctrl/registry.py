@@ -1,0 +1,185 @@
+"""PeerRegistry: epoch-numbered membership views for elastic serving.
+
+The registry is the control plane's single source of truth.  Every
+membership *change* (join, drain start, death, departure) bumps the epoch
+by exactly one; lease renewals refresh liveness without bumping.  Consumers
+(the Scheduler, the Autoscaler) never see the mutable records — they get
+immutable :class:`MembershipView` snapshots stamped with the epoch, and all
+routing decisions are made against a view, never against peer objects.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from ..core import MrDesc, NetAddr
+from .messages import dec_value, enc_value
+
+# peer lifecycle states
+LIVE = "live"
+DRAINING = "draining"
+DEAD = "dead"
+LEFT = "left"
+
+
+@dataclass
+class PeerRecord:
+    """Mutable registry-internal record for one registered peer."""
+
+    peer_id: str
+    role: str                           # "prefill" | "decode"
+    addr: NetAddr
+    nic: str
+    kv_desc: Optional[MrDesc]
+    geom: Dict[str, Any]
+    n_pages: int
+    status: str = LIVE
+    lease_expires_us: float = 0.0
+    joined_us: float = 0.0
+    # piggybacked load signals from the last LEASE-RENEW
+    inflight: int = 0
+    free_pages: int = 0
+
+
+@dataclass(frozen=True)
+class PeerView:
+    """Immutable per-peer slice of a membership view."""
+
+    peer_id: str
+    role: str
+    addr: NetAddr
+    nic: str
+    status: str
+    kv_desc: Optional[MrDesc]
+    geom: Mapping[str, Any]
+    n_pages: int
+    inflight: int
+
+
+@dataclass(frozen=True)
+class MembershipView:
+    """An epoch-stamped snapshot of the live membership.
+
+    Views include LIVE and DRAINING peers (so consumers can observe drains)
+    but never DEAD or LEFT ones.  ``routable`` additionally excludes
+    draining peers — the scheduler must never place new work on them.
+    """
+
+    epoch: int
+    peers: Tuple[PeerView, ...] = ()
+
+    def routable(self, role: str) -> Tuple[PeerView, ...]:
+        return tuple(p for p in self.peers
+                     if p.role == role and p.status == LIVE)
+
+    def by_role(self, role: str) -> Tuple[PeerView, ...]:
+        return tuple(p for p in self.peers if p.role == role)
+
+    def peer(self, peer_id: str) -> Optional[PeerView]:
+        for p in self.peers:
+            if p.peer_id == peer_id:
+                return p
+        return None
+
+    def ids(self) -> Tuple[str, ...]:
+        return tuple(p.peer_id for p in self.peers)
+
+    # -- wire form (carried inside a VIEW-UPDATE message) -------------------
+    def to_wire(self) -> List[Dict[str, Any]]:
+        return [{
+            "peer_id": p.peer_id, "role": p.role,
+            "addr": enc_value(p.addr), "nic": p.nic, "status": p.status,
+            "kv_desc": enc_value(p.kv_desc), "geom": enc_value(dict(p.geom)),
+            "n_pages": p.n_pages, "inflight": p.inflight,
+        } for p in self.peers]
+
+    @staticmethod
+    def from_wire(epoch: int, peers: List[Dict[str, Any]]) -> "MembershipView":
+        return MembershipView(epoch, tuple(
+            PeerView(peer_id=e["peer_id"], role=e["role"],
+                     addr=dec_value(e["addr"]), nic=e["nic"],
+                     status=e["status"], kv_desc=dec_value(e["kv_desc"]),
+                     geom=dec_value(e["geom"]), n_pages=int(e["n_pages"]),
+                     inflight=int(e["inflight"]))
+            for e in peers))
+
+
+class PeerRegistry:
+    """Membership record store with strictly monotonic epochs."""
+
+    def __init__(self) -> None:
+        self._epoch = 0
+        self._peers: Dict[str, PeerRecord] = {}
+        # (epoch, event) audit trail — every bump leaves exactly one entry
+        self.epoch_log: List[Tuple[int, str]] = []
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def _bump(self, event: str) -> int:
+        self._epoch += 1
+        self.epoch_log.append((self._epoch, event))
+        return self._epoch
+
+    # -- membership transitions ---------------------------------------------
+    def join(self, *, peer_id: str, role: str, addr: NetAddr, nic: str,
+             kv_desc: Optional[MrDesc], geom: Dict[str, Any], n_pages: int,
+             lease_us: float, now: float) -> int:
+        """Admit (or re-admit) a peer; returns the new epoch."""
+        self._peers[peer_id] = PeerRecord(
+            peer_id=peer_id, role=role, addr=addr, nic=nic, kv_desc=kv_desc,
+            geom=dict(geom), n_pages=n_pages, status=LIVE,
+            lease_expires_us=now + lease_us, joined_us=now,
+            free_pages=n_pages)
+        return self._bump(f"join:{peer_id}")
+
+    def renew(self, peer_id: str, *, now: float, lease_us: float,
+              inflight: int = 0, free_pages: int = 0) -> bool:
+        """Refresh a peer's lease; no epoch bump.  False if unknown/ended."""
+        rec = self._peers.get(peer_id)
+        if rec is None or rec.status in (DEAD, LEFT):
+            return False
+        rec.lease_expires_us = now + lease_us
+        rec.inflight = inflight
+        rec.free_pages = free_pages
+        return True
+
+    def start_drain(self, peer_id: str) -> Optional[int]:
+        """LIVE -> DRAINING; returns the new epoch (None if not live)."""
+        rec = self._peers.get(peer_id)
+        if rec is None or rec.status != LIVE:
+            return None
+        rec.status = DRAINING
+        return self._bump(f"drain:{peer_id}")
+
+    def leave(self, peer_id: str) -> Optional[int]:
+        """Clean departure: record removed from views; returns new epoch."""
+        rec = self._peers.pop(peer_id, None)
+        if rec is None:
+            return None
+        rec.status = LEFT
+        return self._bump(f"leave:{peer_id}")
+
+    def expire(self, now: float) -> List[PeerRecord]:
+        """Mark peers whose lease has lapsed as DEAD (one bump per death)."""
+        died = []
+        for rec in list(self._peers.values()):
+            if rec.status in (LIVE, DRAINING) and rec.lease_expires_us < now:
+                rec.status = DEAD
+                del self._peers[rec.peer_id]
+                self._bump(f"dead:{rec.peer_id}")
+                died.append(rec)
+        return died
+
+    # -- introspection -------------------------------------------------------
+    def record(self, peer_id: str) -> Optional[PeerRecord]:
+        return self._peers.get(peer_id)
+
+    def view(self) -> MembershipView:
+        return MembershipView(self._epoch, tuple(
+            PeerView(peer_id=r.peer_id, role=r.role, addr=r.addr, nic=r.nic,
+                     status=r.status, kv_desc=r.kv_desc, geom=dict(r.geom),
+                     n_pages=r.n_pages, inflight=r.inflight)
+            for r in self._peers.values()))

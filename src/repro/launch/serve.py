@@ -64,25 +64,34 @@ def main() -> None:
           f"in {time.time() - t0:.1f}s")
 
     if args.disagg:
-        if cfg.family in ("ssm", "hybrid") or cfg.global_every or cfg.cross_every:
-            print("disagg path currently serves uniform-KV archs; "
-                  "state-handoff for SSM/pattern archs is listed in DESIGN.md")
+        from ..serving import disagg_unsupported_reason
+        reason = disagg_unsupported_reason(cfg)
+        if reason:
+            print(f"disagg path cannot serve '{args.arch}': {reason} "
+                  "(state-handoff schema is a ROADMAP item)")
             return
         from ..core import Fabric
+        from ..ctrl import ControlPlane
         from ..serving import Decoder, Prefiller, Scheduler
         fab = Fabric(seed=1)
-        pf = [Prefiller(fab, f"p{i}", cfg, params, nic=args.nic) for i in range(2)]
-        dec = [Decoder(fab, f"d{i}", cfg, params, nic=args.nic) for i in range(2)]
-        sched = Scheduler(fab, pf, dec)
+        ctrl = ControlPlane(fab, nic=args.nic)
+        pf = [Prefiller(fab, f"p{i}", cfg, params, nic=args.nic, ctrl=ctrl)
+              for i in range(2)]
+        dec = [Decoder(fab, f"d{i}", cfg, params, nic=args.nic, ctrl=ctrl)
+               for i in range(2)]
+        sched = Scheduler(fab, ctrl)
         rids = [sched.submit(ids, n_decode=args.decode) for ids in prompts]
         fab.run()
+        sched.check_drained()
         ok = 0
         for rid, ref in zip(rids, mono):
-            r = dec[rid % 2].results[rid]
+            r = sched.completed[rid]
             ok += r["tokens"] == ref
             print(f"req {rid}: TTFT {r['ttft_us']:8.1f}us  "
+                  f"p={r['prefiller']} d={r['decoder']}  "
                   f"match={r['tokens'] == ref}")
-        print(f"disaggregated == monolithic for {ok}/{len(rids)} requests")
+        print(f"disaggregated == monolithic for {ok}/{len(rids)} requests "
+              f"(membership epoch {sched.view.epoch})")
         assert ok == len(rids)
 
     for i, toks in enumerate(mono[:2]):

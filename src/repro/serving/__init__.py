@@ -1,6 +1,7 @@
-from .disagg import Decoder, DispatchReq, Prefiller
+from .disagg import (Decoder, DispatchReq, Prefiller,
+                     disagg_unsupported_reason)
 from .kvpool import PagedKvPool, PoolGeometry
 from .scheduler import Scheduler
 
 __all__ = ["Prefiller", "Decoder", "DispatchReq", "PagedKvPool",
-           "PoolGeometry", "Scheduler"]
+           "PoolGeometry", "Scheduler", "disagg_unsupported_reason"]

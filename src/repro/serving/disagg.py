@@ -3,9 +3,9 @@
 Faithful implementation of the paper's Appendix A pseudocode:
 
   decoder:  allocate pages + tail slot -> register ImmCounter expectation
-            (n_pages * n_layers + 1) -> submit_send(DispatchReq) -> wait on
-            the counter -> decode.
-  prefiller: submit_recvs loop -> on DispatchReq: run prefill, increment a
+            (n_pages * n_layers + 1) -> SEND DispatchReq -> wait on the
+            counter -> decode.
+  prefiller: recv loop -> on DispatchReq: run prefill, increment a
             UvmWatcher after each layer's attention output projection ->
             the watcher callback issues that layer's submit_paged_writes ->
             after the last chunk, submit_single_write of the tail context
@@ -13,25 +13,35 @@ Faithful implementation of the paper's Appendix A pseudocode:
 
 Model compute is REAL (a reduced-config jax model); compute time is mapped
 onto the virtual clock so the layer-by-layer transfer/compute overlap is
-measurable.  Cancellation + heartbeats implement the §4 error-handling
-contract.
+measurable.  A prefiller serves one request at a time (an occupied GPU):
+requests queue behind ``_busy_until``, which is what makes queue depth and
+TTFT meaningful autoscaling signals.
+
+Elastic membership (§4 "dynamic scaling") runs through ``repro.ctrl``:
+pass ``ctrl=`` and the peer JOINs the control plane at startup, publishing
+its wire address, KV-pool ``MrDesc``, NIC kind, and pool geometry; leases
+renew in the background, DRAIN finishes in-flight work and frees every
+page before LEAVE, and a crash (``crash()``) simply stops renewals so the
+lease lapses.  All messages — including ``DispatchReq``, formerly an
+ad-hoc pickle — go through the typed wire codec of ``repro.ctrl.messages``.
 """
 
 from __future__ import annotations
 
-import pickle
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import Fabric, MrDesc, NetAddr, Pages, TransferEngine
+from ..core import Fabric, MrDesc, NetAddr, Pages
+from ..ctrl import ControlClient, ControlPlane
+from ..ctrl import messages as m
 from ..models import decode_step, init_cache, prefill
 from .kvpool import PagedKvPool, PoolGeometry
 
 
+@m.wire("DREQ")
 @dataclass
 class DispatchReq:
     input_ids: np.ndarray                 # (S,)
@@ -42,12 +52,46 @@ class DispatchReq:
     tail_desc: MrDesc
     tail_idx: int
     request_id: int
-    cancelled: bool = False
 
 
-def _geom(cfg, page_tokens: int, max_len: int) -> PoolGeometry:
+def disagg_unsupported_reason(cfg) -> Optional[str]:
+    """Why the §4 KvCache protocol cannot serve ``cfg`` (None = it can).
+
+    The paged transfer moves a uniform ``(L, S, K, Dh)`` k/v stack.  Archs
+    whose reduced cache is *split* — pattern archs (gemma3 local/global,
+    vlm cross layers), SSM/hybrid state, or leading dense layers — need a
+    per-kind state-handoff schema that doesn't exist yet (ROADMAP item).
+    This is the single guard for the whole serving stack: constructors
+    raise on it, launchers print it.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        return (f"family '{cfg.family}' carries SSM state, not a uniform "
+                "KV cache")
+    if cfg.global_every or cfg.cross_every:
+        return ("pattern-split KV cache (lk/lv/sk/sv local+special stacks, "
+                "not a uniform k/v stack)")
+    if cfg.first_k_dense:
+        return "first-k-dense split cache (k0/v0 head layers)"
+    return None
+
+
+def _check_supported(cfg) -> None:
+    reason = disagg_unsupported_reason(cfg)
+    if reason is not None:
+        raise ValueError(
+            f"disaggregated serving cannot handle '{cfg.name}': {reason}")
+
+
+def _geom(cfg, page_tokens: int) -> PoolGeometry:
     return PoolGeometry(n_layers=cfg.n_layers, page_tokens=page_tokens,
                         n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim)
+
+
+def _geom_wire(geom: PoolGeometry) -> Dict[str, Any]:
+    """JSON-safe pool geometry for the control plane's JOIN message."""
+    return dict(n_layers=geom.n_layers, page_tokens=geom.page_tokens,
+                n_kv=geom.n_kv, head_dim=geom.head_dim,
+                dtype=geom.dtype.str, page_bytes=geom.page_bytes)
 
 
 class Prefiller:
@@ -55,17 +99,39 @@ class Prefiller:
 
     def __init__(self, fabric: Fabric, node: str, cfg, params, *,
                  nic: str = "efa", page_tokens: int = 16, n_pages: int = 512,
-                 layer_compute_us: float = 50.0):
+                 layer_compute_us: float = 50.0,
+                 ctrl: Optional[ControlPlane] = None,
+                 peer_id: Optional[str] = None, renew_us: float = 500.0,
+                 max_renewals: int = 256):
+        _check_supported(cfg)
         self.cfg = cfg
         self.params = params
         self.engine = fabric.add_engine(node, nic=nic)
         self.fabric = fabric
-        self.geom = _geom(cfg, page_tokens, 0)
+        self.nic = nic
+        self.geom = _geom(cfg, page_tokens)
         self.pool = PagedKvPool(self.engine, self.geom, n_pages)
         self.layer_compute_us = layer_compute_us
-        self.engine.submit_recvs(1 << 16, 8, self._on_request)
         self.stats: Dict[str, float] = {}
         self._cancelled: set = set()
+        self.alive = True
+        self.draining = False
+        self.inflight = 0
+        self.served = 0
+        self._busy_until = 0.0
+        self.engine.submit_recvs(1 << 16, 8, self._on_msg)
+        self.client: Optional[ControlClient] = None
+        if ctrl is not None:
+            self.client = ControlClient(
+                self.engine, fabric, ctrl.address(),
+                peer_id or node, "prefill", renew_us=renew_us,
+                max_renewals=max_renewals,
+                alive_fn=lambda: self.alive,
+                inflight_fn=lambda: self.inflight,
+                free_pages_fn=lambda: len(self.pool._free),
+                on_drain=self._on_drain)
+            self.client.join(nic=nic, kv_desc=self.pool.desc,
+                             geom=_geom_wire(self.geom), n_pages=n_pages)
 
     def address(self) -> NetAddr:
         return self.engine.address(0)
@@ -73,16 +139,55 @@ class Prefiller:
     def cancel(self, request_id: int) -> None:
         self._cancelled.add(request_id)
 
-    # ------------------------------------------------------------------
-    def _on_request(self, payload: bytes) -> None:
-        req: DispatchReq = pickle.loads(payload)
+    def crash(self) -> None:
+        """Simulated process death: stop serving AND stop renewing the
+        lease — the control plane notices via lease expiry, never via a
+        goodbye message."""
+        self.alive = False
+
+    # -- control-plane hooks ------------------------------------------------
+    def _on_drain(self, msg: m.Drain) -> None:
+        self.draining = True
+        self._maybe_finish_drain()
+
+    def _maybe_finish_drain(self) -> None:
+        if (self.draining and self.inflight == 0 and self.alive
+                and self.client is not None and not self.client.left):
+            # every in-flight request finished and freed its staging pages
+            self.client.leave()
+
+    # -- data plane ---------------------------------------------------------
+    def _on_msg(self, payload: bytes) -> None:
+        if not self.alive:
+            return
+        msg = m.decode(payload)
+        if self.client is not None and self.client.handle(msg):
+            return
+        if isinstance(msg, DispatchReq):
+            self._on_request(msg)
+
+    def _on_request(self, req: DispatchReq) -> None:
         if req.request_id in self._cancelled:
+            return
+        if self.draining:
+            # the scheduler never routes to a draining peer; anything that
+            # races the drain is dropped (the sender re-routes on the next
+            # view) rather than silently extending the drain
+            self.stats["rejected"] = self.stats.get("rejected", 0) + 1
             return
         cfg = self.cfg
         S = len(req.input_ids)
         page_tokens = self.geom.page_tokens
         n_chunks = -(-S // page_tokens)
         t_start = self.fabric.now
+        self.inflight += 1
+        self.served += 1
+
+        # One request occupies the GPU at a time: queue behind _busy_until.
+        start = max(t_start, self._busy_until)
+        self._busy_until = start + cfg.n_layers * self.layer_compute_us
+        delay0 = start - t_start
+        self.stats[f"req{req.request_id}_queued_us"] = delay0
 
         # REAL prefill compute (all layers at once — jax scan); K/V per layer.
         tokens = jnp.asarray(req.input_ids, jnp.int32)[None]
@@ -113,7 +218,8 @@ class Prefiller:
             # Layers [lo, hi) completed since the last poll land as ONE
             # batched paged-write submission: the UVM poller coalesces
             # increments, so coalesced layers share a single WrBatch.
-            if req.request_id in self._cancelled or hi <= lo:
+            if (not self.alive or req.request_id in self._cancelled
+                    or hi <= lo):
                 return
             src = Pages(indices=tuple(local_pages[lo * n_chunks:hi * n_chunks]),
                         stride=self.geom.page_bytes)
@@ -129,54 +235,143 @@ class Prefiller:
         # projection; the watcher callback sends the completed span (App. A).
         watcher = self.engine.alloc_uvm_watcher(send_layers)
         for l in range(cfg.n_layers):
-            self.fabric.loop.schedule((l + 1) * self.layer_compute_us,
+            self.fabric.loop.schedule(delay0 + (l + 1) * self.layer_compute_us,
                                       lambda l=l: watcher.store(l + 1))
 
         def send_tail() -> None:
+            if not self.alive or req.request_id in self._cancelled:
+                return
             self.engine.submit_single_write(
                 tail.size, req.imm, (tail_handle, 0), (req.tail_desc,
                                                        req.tail_idx * tail.size),
                 on_done=lambda: cnt.__setitem__("done", cnt["done"] + 1))
 
-        self.fabric.loop.schedule(cfg.n_layers * self.layer_compute_us + 1.0,
-                                  send_tail)
+        self.fabric.loop.schedule(
+            delay0 + cfg.n_layers * self.layer_compute_us + 1.0, send_tail)
 
         def poll_free() -> None:
+            if not self.alive:
+                return        # crashed: the node (and its pool) is gone
+            if req.request_id in self._cancelled:
+                self.pool.free(local_pages)
+                self.inflight -= 1
+                self._maybe_finish_drain()
+                return
             if cnt["done"] >= total_writes:
                 self.pool.free(local_pages)
+                self.inflight -= 1
                 self.stats[f"req{req.request_id}_prefill_us"] = \
                     self.fabric.now - t_start
+                self._maybe_finish_drain()
             else:
                 self.fabric.loop.schedule(5.0, poll_free)
 
-        self.fabric.loop.schedule(cfg.n_layers * self.layer_compute_us, poll_free)
+        self.fabric.loop.schedule(
+            delay0 + cfg.n_layers * self.layer_compute_us, poll_free)
 
 
 class Decoder:
-    """Decode node: pre-allocates pages, dispatches, decodes on completion."""
+    """Decode node: pre-allocates pages, dispatches, decodes on completion.
+
+    With ``ctrl=`` the decoder also serves the elastic wire path: the
+    scheduler SENDs ``SubmitReq``s here, completion is reported back via
+    ``ReqDone``, and ``CancelReq`` (failover) frees the attempt's pages and
+    tail slot so nothing leaks when a prefiller dies mid-transfer.
+    """
 
     def __init__(self, fabric: Fabric, node: str, cfg, params, *,
                  nic: str = "efa", page_tokens: int = 16, n_pages: int = 512,
-                 max_tail: int = 8):
+                 max_tail: int = 16, ctrl: Optional[ControlPlane] = None,
+                 peer_id: Optional[str] = None, renew_us: float = 500.0,
+                 max_renewals: int = 256):
+        _check_supported(cfg)
         self.cfg = cfg
         self.params = params
         self.fabric = fabric
         self.engine = fabric.add_engine(node, nic=nic)
-        self.geom = _geom(cfg, page_tokens, 0)
+        self.geom = _geom(cfg, page_tokens)
         self.pool = PagedKvPool(self.engine, self.geom, n_pages)
         tail_bytes = cfg.vocab * 4
         self.tail_buf = np.zeros(max_tail * tail_bytes, np.uint8)
         self.tail_handle, self.tail_desc = self.engine.reg_mr(self.tail_buf)
         self._tail_free = list(range(max_tail))
         self._imm_next = 1
+        self.alive = True
+        self.draining = False
         self.results: Dict[int, Dict] = {}
+        self._pending: Dict[int, Dict] = {}   # rid -> in-flight attempt state
+        self._attempt: Dict[int, int] = {}    # rid -> newest attempt seen
+        self.engine.submit_recvs(1 << 16, 32, self._on_msg)
+        self.client: Optional[ControlClient] = None
+        if ctrl is not None:
+            self.client = ControlClient(
+                self.engine, fabric, ctrl.address(),
+                peer_id or node, "decode", renew_us=renew_us,
+                max_renewals=max_renewals,
+                alive_fn=lambda: self.alive,
+                inflight_fn=lambda: len(self._pending),
+                free_pages_fn=lambda: len(self.pool._free),
+                on_drain=self._on_drain)
+            self.client.join(nic=nic, kv_desc=self.pool.desc,
+                             geom=_geom_wire(self.geom), n_pages=n_pages)
 
     def address(self) -> NetAddr:
         return self.engine.address(0)
 
+    # -- control-plane hooks ------------------------------------------------
+    def _on_drain(self, msg: m.Drain) -> None:
+        self.draining = True
+        self._maybe_finish_drain()
+
+    def _maybe_finish_drain(self) -> None:
+        if (self.draining and not self._pending and self.alive
+                and self.client is not None and not self.client.left):
+            self.client.leave()
+
+    # -- wire path ----------------------------------------------------------
+    def _on_msg(self, payload: bytes) -> None:
+        if not self.alive:
+            return
+        msg = m.decode(payload)
+        if self.client is not None and self.client.handle(msg):
+            return
+        if isinstance(msg, m.SubmitReq):
+            if self.draining:
+                # racing a drain: drop — once this decoder LEAVEs, the
+                # scheduler re-routes every request still pointed at it
+                return
+            cur = self._attempt.get(msg.request_id, -1)
+            if msg.attempt <= cur:
+                return      # stale duplicate of an attempt we've superseded
+            if msg.request_id in self._pending:
+                self.cancel(msg.request_id)   # superseded by a re-route
+            self._attempt[msg.request_id] = msg.attempt
+            self.submit(msg.request_id, msg.input_ids, msg.prefiller,
+                        n_decode=msg.n_decode, reply_to=msg.reply_to,
+                        attempt=msg.attempt)
+        elif isinstance(msg, m.CancelReq):
+            # only the newest attempt may be cancelled; an unordered SEND
+            # can deliver a stale CANCEL after its re-route's SUBMIT
+            if msg.attempt == self._attempt.get(msg.request_id):
+                self.cancel(msg.request_id)
+
+    def cancel(self, request_id: int) -> bool:
+        """Abandon an in-flight attempt: free pages + tail slot, drop the
+        ImmCounter expectation.  Nothing leaks — failover re-allocates."""
+        st = self._pending.pop(request_id, None)
+        if st is None:
+            return False
+        self.engine.counters[0].reset(st["imm"])
+        self.pool.free(st["pages"])
+        self._tail_free.append(st["tail_idx"])
+        self.results.pop(request_id, None)
+        self._maybe_finish_drain()
+        return True
+
     # ------------------------------------------------------------------
     def submit(self, request_id: int, input_ids: np.ndarray,
-               prefiller: NetAddr, n_decode: int = 4) -> None:
+               prefiller: NetAddr, n_decode: int = 4, *,
+               reply_to: Optional[NetAddr] = None, attempt: int = 0) -> None:
         cfg = self.cfg
         S = len(input_ids)
         page_tokens = self.geom.page_tokens
@@ -187,13 +382,21 @@ class Decoder:
         self._imm_next += 1
         imm_count = n_chunks * cfg.n_layers + 1
         t0 = self.fabric.now
+        self._pending[request_id] = {
+            "pages": pages, "tail_idx": tail_idx, "imm": imm,
+            "attempt": attempt, "reply_to": reply_to, "seq_len": S,
+        }
 
-        req = DispatchReq(input_ids=np.asarray(input_ids), decoder_addr=self.address(),
+        req = DispatchReq(input_ids=np.asarray(input_ids),
+                          decoder_addr=self.address(),
                           imm=imm, kv_desc=self.pool.desc, pages=pages,
                           tail_desc=self.tail_desc, tail_idx=tail_idx,
                           request_id=request_id)
 
         def on_complete() -> None:
+            st = self._pending.get(request_id)
+            if st is None or st["imm"] != imm:
+                return      # attempt was cancelled / superseded
             self.results[request_id] = {
                 "ttft_us": self.fabric.now - t0,
                 "pages": pages, "tail_idx": tail_idx, "seq_len": S,
@@ -201,7 +404,7 @@ class Decoder:
             self._decode(request_id, n_decode)
 
         self.engine.expect_imm_count(imm, imm_count, on_complete)
-        self.engine.submit_send(prefiller, pickle.dumps(req))
+        self.engine.submit_send(prefiller, m.encode(req))
 
     def _assemble_cache(self, request_id: int):
         cfg = self.cfg
@@ -242,3 +445,10 @@ class Decoder:
         r["tokens"] = toks
         self.pool.free(r["pages"])
         self._tail_free.append(r["tail_idx"])
+        st = self._pending.pop(request_id, None)
+        if st is not None and st["reply_to"] is not None:
+            peer = self.client.peer_id if self.client else ""
+            self.engine.submit_send(st["reply_to"], m.encode(m.ReqDone(
+                request_id=request_id, attempt=st["attempt"], peer_id=peer,
+                ttft_us=r["ttft_us"], tokens=list(toks))))
+        self._maybe_finish_drain()

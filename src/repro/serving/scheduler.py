@@ -1,67 +1,152 @@
-"""Global scheduler for disaggregated serving (paper Fig. 3).
+"""Elastic global scheduler for disaggregated serving (paper Fig. 3 + §4
+"dynamic scaling").
 
-Selects a (prefiller, decoder) pair per request and forwards the request to
-the decoder, which pre-allocates KV pages and dispatches to the prefiller.
-Heartbeats between peers detect transport failures; a dead prefiller causes
-timed-out requests to be cancelled on the decoder (§4 error handling).
+The scheduler holds NO static peer list and NO peer object references.  It
+subscribes to the control plane and routes every request against the
+current epoch's :class:`~repro.ctrl.registry.MembershipView`:
+
+* requests enter a backlog and are pumped whenever both a routable (live,
+  non-draining) prefiller and decoder exist in the view;
+* routing is a wire operation — a typed ``SubmitReq`` SENT to the chosen
+  decoder, which dispatches to the chosen prefiller; completion comes back
+  as a ``ReqDone`` carrying TTFT and the generated tokens;
+* when a peer vanishes from the view (lease expiry == crash, or LEAVE),
+  every in-flight request routed through it is cancelled at its decoder
+  (freeing the attempt's KV pages) and re-queued with a bumped attempt
+  number — post-failure requests complete on the surviving peers;
+* liveness is entirely the control plane's lease machinery; the seed's
+  hand-rolled heartbeat loop is gone.
+
+``routing_log`` records ``(rid, epoch, prefiller, decoder)`` per route so
+tests and benchmarks can prove that all routing went through epoch views.
 """
 
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import Fabric, NetAddr
-from .disagg import Decoder, Prefiller
+from ..core import Fabric
+from ..ctrl import ControlPlane, MembershipView
+from ..ctrl import messages as m
 
-HEARTBEAT_US = 1_000.0
-HEARTBEAT_TIMEOUT_US = 5_000.0
+TTFT_EMA_ALPHA = 0.3
 
 
 class Scheduler:
-    def __init__(self, fabric: Fabric, prefillers: List[Prefiller],
-                 decoders: List[Decoder]):
+    def __init__(self, fabric: Fabric, ctrl: ControlPlane, *,
+                 node: str = "sched"):
         self.fabric = fabric
-        self.prefillers = prefillers
-        self.decoders = decoders
-        self._rr = itertools.count()
+        self.ctrl = ctrl
+        self.engine = fabric.add_engine(node, nic=ctrl.nic)
+        self.engine.submit_recvs(1 << 16, 64, self._on_msg)
+        self.view = MembershipView(0, ())
+        self.view_epochs: List[int] = []       # every accepted epoch, in order
+        self._rr = {"prefill": 0, "decode": 0}
         self._req = itertools.count()
-        self.last_heartbeat: Dict[NetAddr, float] = {
-            p.address(): 0.0 for p in prefillers}
-        self.dead: set = set()
-        self._start_heartbeats()
+        # (rid, input_ids, n_decode, attempt); appendleft on re-route
+        self.backlog: Deque[Tuple[int, np.ndarray, int, int]] = deque()
+        self.inflight: Dict[int, Dict] = {}
+        self.completed: Dict[int, Dict] = {}
+        self.ttft_ema: Optional[float] = None
+        self.rerouted: List[int] = []
+        self.routing_log: List[Tuple[int, int, str, str]] = []
+        ctrl.subscribe(self.engine.address(0))
 
-    def _start_heartbeats(self, max_beats: int = 64) -> None:
-        """Bounded heartbeat train (keeps run_until_idle finite)."""
-        state = {"n": 0}
+    # -- signals (read by the Autoscaler) -----------------------------------
+    def queue_depth(self) -> int:
+        return len(self.backlog) + len(self.inflight)
 
-        def beat() -> None:
-            for p in self.prefillers:
-                addr = p.address()
-                if getattr(p, "alive", True):
-                    self.last_heartbeat[addr] = self.fabric.now
-                elif self.fabric.now - self.last_heartbeat[addr] > HEARTBEAT_TIMEOUT_US:
-                    self.dead.add(addr)
-            state["n"] += 1
-            if state["n"] < max_beats:
-                self.fabric.loop.schedule(HEARTBEAT_US, beat)
+    def check_drained(self) -> None:
+        """Fail fast after the event loop idles: queuing is normal *while*
+        the fabric runs (requests may arrive before peers join — that is
+        the elasticity contract), but anything still queued or in flight
+        once the loop is idle means the fleet was misconfigured (peers
+        built without ``ctrl=``, wrong NIC, no decoders, ...)."""
+        if self.backlog or self.inflight:
+            routable = {role: [p.peer_id for p in self.view.routable(role)]
+                        for role in ("prefill", "decode")}
+            raise RuntimeError(
+                f"{len(self.backlog)} queued + {len(self.inflight)} in-flight "
+                f"requests never completed (view epoch {self.view.epoch}, "
+                f"routable {routable})")
 
-        self.fabric.loop.schedule(HEARTBEAT_US, beat)
-
-    def live_prefillers(self) -> List[Prefiller]:
-        return [p for p in self.prefillers
-                if p.address() not in self.dead and getattr(p, "alive", True)]
-
+    # -- submission ---------------------------------------------------------
     def submit(self, input_ids: np.ndarray, n_decode: int = 4) -> int:
-        """Route a request; returns request id."""
+        """Queue a request; it is routed when the view offers capacity."""
         rid = next(self._req)
-        live = self.live_prefillers()
-        if not live:
-            raise RuntimeError("no live prefillers")
-        p = live[next(self._rr) % len(live)]
-        d = self.decoders[rid % len(self.decoders)]
-        d.submit(rid, input_ids, p.address(), n_decode=n_decode)
+        self.backlog.append((rid, np.asarray(input_ids), n_decode, 0))
+        self._pump()
         return rid
+
+    def _pick(self, role: str):
+        cands = self.view.routable(role)
+        if not cands:
+            return None
+        c = cands[self._rr[role] % len(cands)]
+        self._rr[role] += 1
+        return c
+
+    def _pump(self) -> None:
+        while self.backlog:
+            pf = self._pick("prefill")
+            dc = self._pick("decode")
+            if pf is None or dc is None:
+                return
+            rid, ids, n_decode, attempt = self.backlog.popleft()
+            self.inflight[rid] = dict(
+                ids=ids, n_decode=n_decode, attempt=attempt,
+                prefiller=pf.peer_id, decoder=dc.peer_id,
+                decoder_addr=dc.addr, epoch=self.view.epoch,
+                t_routed=self.fabric.now)
+            self.routing_log.append((rid, self.view.epoch,
+                                     pf.peer_id, dc.peer_id))
+            self.engine.submit_send(dc.addr, m.encode(m.SubmitReq(
+                request_id=rid, input_ids=ids, prefiller=pf.addr,
+                n_decode=n_decode, reply_to=self.engine.address(0),
+                attempt=attempt)))
+
+    # -- wire handling ------------------------------------------------------
+    def _on_msg(self, payload: bytes) -> None:
+        msg = m.decode(payload)
+        if isinstance(msg, m.ViewUpdate):
+            if msg.epoch <= self.view.epoch:
+                return     # stale/duplicate view: epochs only move forward
+            new = MembershipView.from_wire(msg.epoch, msg.peers)
+            self.view_epochs.append(new.epoch)
+            gone = set(self.view.ids()) - set(new.ids())
+            self.view = new
+            if gone:
+                self._reroute(gone)
+            self._pump()
+        elif isinstance(msg, m.ReqDone):
+            st = self.inflight.get(msg.request_id)
+            if st is None or st["attempt"] != msg.attempt:
+                return     # stale attempt (already re-routed)
+            del self.inflight[msg.request_id]
+            self.completed[msg.request_id] = dict(
+                ttft_us=msg.ttft_us, tokens=list(msg.tokens),
+                decoder=msg.peer_id, prefiller=st["prefiller"],
+                attempt=msg.attempt, t_routed=st["t_routed"],
+                done_us=self.fabric.now)
+            self.ttft_ema = msg.ttft_us if self.ttft_ema is None else (
+                TTFT_EMA_ALPHA * msg.ttft_us
+                + (1 - TTFT_EMA_ALPHA) * self.ttft_ema)
+            self._pump()
+
+    def _reroute(self, gone: set) -> None:
+        """Cancel + re-queue every in-flight request touching a gone peer."""
+        for rid, st in list(self.inflight.items()):
+            if st["prefiller"] not in gone and st["decoder"] not in gone:
+                continue
+            del self.inflight[rid]
+            if st["decoder"] not in gone:
+                # free the dead attempt's pages at the (live) decoder
+                self.engine.submit_send(st["decoder_addr"], m.encode(
+                    m.CancelReq(rid, st["attempt"])))
+            self.rerouted.append(rid)
+            self.backlog.appendleft(
+                (rid, st["ids"], st["n_decode"], st["attempt"] + 1))

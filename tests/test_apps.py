@@ -8,6 +8,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core import Fabric
+from repro.ctrl import ControlPlane
 from repro.models import decode_step, init_params, prefill
 from repro.moekit import MoEConfig, make_endpoints, oracle, run_moe_layer
 from repro.rlweights import (ParamMeta, compute_routing, make_cluster,
@@ -40,14 +41,16 @@ def test_disaggregated_equals_monolithic(nic):
     cfg = get_config("stablelm-3b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     fab = Fabric(seed=3)
-    pf = Prefiller(fab, "p0", cfg, params, nic=nic)
-    dec = Decoder(fab, "d0", cfg, params, nic=nic)
-    sched = Scheduler(fab, [pf], [dec])
+    ctrl = ControlPlane(fab, nic=nic, max_sweeps=64)
+    Prefiller(fab, "p0", cfg, params, nic=nic, ctrl=ctrl, max_renewals=64)
+    Decoder(fab, "d0", cfg, params, nic=nic, ctrl=ctrl, max_renewals=64)
+    sched = Scheduler(fab, ctrl)
     ids = np.random.default_rng(0).integers(0, cfg.vocab, size=37)
     rid = sched.submit(ids, n_decode=5)
     fab.run()
-    assert dec.results[rid]["tokens"] == _mono_generate(cfg, params, ids, 5)
-    assert dec.results[rid]["ttft_us"] > 0
+    r = sched.completed[rid]
+    assert r["tokens"] == _mono_generate(cfg, params, ids, 5)
+    assert r["ttft_us"] > 0
 
 
 @pytest.mark.slow
@@ -55,32 +58,41 @@ def test_disagg_multiple_requests_and_page_reuse():
     cfg = get_config("stablelm-3b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     fab = Fabric(seed=5)
-    pf = Prefiller(fab, "p0", cfg, params, nic="efa")
-    dec = Decoder(fab, "d0", cfg, params, nic="efa")
-    sched = Scheduler(fab, [pf], [dec])
+    ctrl = ControlPlane(fab, nic="efa", max_sweeps=64)
+    Prefiller(fab, "p0", cfg, params, nic="efa", ctrl=ctrl, max_renewals=64)
+    dec = Decoder(fab, "d0", cfg, params, nic="efa", ctrl=ctrl,
+                  max_renewals=64)
+    sched = Scheduler(fab, ctrl)
     rng = np.random.default_rng(1)
     rids = [sched.submit(rng.integers(0, cfg.vocab, size=20 + 3 * i),
                          n_decode=3) for i in range(3)]
     fab.run()
     for rid in rids:
-        assert len(dec.results[rid]["tokens"]) == 3
+        assert len(sched.completed[rid]["tokens"]) == 3
     # all pages returned to the pool
     assert len(dec.pool._free) == dec.pool.n_pages
 
 
-def test_scheduler_skips_dead_prefiller():
+def test_scheduler_drops_crashed_prefiller_from_view():
+    """A crashed prefiller stops renewing its lease; the control plane
+    declares it dead and the scheduler's routable view excludes it."""
     cfg = get_config("stablelm-3b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     fab = Fabric(seed=6)
-    p0 = Prefiller(fab, "p0", cfg, params, nic="efa")
-    p1 = Prefiller(fab, "p1", cfg, params, nic="efa")
-    dec = Decoder(fab, "d0", cfg, params, nic="efa")
-    sched = Scheduler(fab, [p0, p1], [dec])
-    p0.alive = False
-    fab.loop.schedule(10_000.0, lambda: None)
+    ctrl = ControlPlane(fab, nic="efa", lease_us=1_000.0, sweep_us=250.0,
+                        max_sweeps=64)
+    p0 = Prefiller(fab, "p0", cfg, params, nic="efa", ctrl=ctrl,
+                   renew_us=250.0, max_renewals=64)
+    p1 = Prefiller(fab, "p1", cfg, params, nic="efa", ctrl=ctrl,
+                   renew_us=250.0, max_renewals=64)
+    Decoder(fab, "d0", cfg, params, nic="efa", ctrl=ctrl, max_renewals=64)
+    sched = Scheduler(fab, ctrl)
+    fab.loop.schedule(100.0, p0.crash)
     fab.run()
-    assert p0.address() in sched.dead
-    assert [p.address() for p in sched.live_prefillers()] == [p1.address()]
+    assert ctrl.registry.record("p0") is None
+    assert any(e.startswith("dead:p0") for _, e in ctrl.registry.epoch_log)
+    routable = [p.peer_id for p in sched.view.routable("prefill")]
+    assert routable == [p1.client.peer_id] == ["p1"]
 
 
 def test_prefiller_cancellation_stops_transfers():

@@ -208,3 +208,41 @@ def test_batched_submission_is_one_event_loop_entry():
     assert len(calls) == 1  # one ENQUEUE for all 8 WRs of both groups
     fab.run()
     assert b.imm_value(1) == 4 and b.imm_value(2) == 4
+
+
+# ---------------------------------------------------------------------------
+# per-batch submission stats (WRs per enqueue, bytes per batch)
+# ---------------------------------------------------------------------------
+
+def test_batch_stats_count_wrs_and_bytes_per_enqueue():
+    fab, a, b = _pair("cx7")      # 1 NIC: one WR per logical write
+    src = np.zeros(4096, np.uint8)
+    dst = np.zeros(4096, np.uint8)
+    hs, _ = a.reg_mr(src)
+    _, dd = b.reg_mr(dst)
+    a.submit_write_batch([(256, 1, (hs, i * 256), (dd, i * 256))
+                          for i in range(3)])
+    fab.run()
+    s = a.batch_stats
+    assert (s.batches, s.wrs, s.nbytes) == (1, 3, 768)
+    assert s.wrs_per_enqueue == 3.0 and s.bytes_per_batch == 768.0
+    a.submit_single_write(512, 2, (hs, 0), (dd, 0))
+    fab.run()
+    assert (s.batches, s.wrs, s.nbytes) == (2, 4, 768 + 512)
+    assert s.as_dict()["wrs_per_enqueue"] == 2.0
+
+
+def test_batch_stats_striping_counts_per_nic_wrs():
+    """Striping multiplies WRs, not logical writes: one 1 MiB write over
+    4 NICs is 4 WRs in one enqueue."""
+    fab, a, b = _pair("efa4")
+    size = 1 << 20
+    src = np.zeros(size, np.uint8)
+    dst = np.zeros(size, np.uint8)
+    hs, _ = a.reg_mr(src)
+    _, dd = b.reg_mr(dst)
+    a.submit_single_write(size, 1, (hs, 0), (dd, 0))
+    fab.run()
+    assert a.batch_stats.batches == 1
+    assert a.batch_stats.wrs == 4
+    assert a.batch_stats.nbytes == size

@@ -14,6 +14,7 @@ import pytest
 from repro.checkpoint import restore, save
 from repro.configs import get_config
 from repro.core import Fabric
+from repro.ctrl import ControlPlane
 from repro.rlweights import (ParamMeta, compute_routing, make_cluster,
                              p2p_transfer, verify_contents)
 from repro.serving import Decoder, Prefiller, Scheduler
@@ -60,13 +61,15 @@ def test_train_checkpoint_push_serve_roundtrip():
     got = cl.infer_bufs[0][:raw.size]
     np.testing.assert_array_equal(got, raw)
 
-    # 4. serve disaggregated with the trained weights
+    # 4. serve disaggregated with the trained weights: the fleet registers
+    # with the control plane and the scheduler routes via epoch views
     fab = Fabric(seed=1)
-    pf = Prefiller(fab, "p0", cfg, params, nic="efa")
-    dec = Decoder(fab, "d0", cfg, params, nic="efa")
-    sched = Scheduler(fab, [pf], [dec])
+    ctrl = ControlPlane(fab, nic="efa", max_sweeps=64)
+    Prefiller(fab, "p0", cfg, params, nic="efa", ctrl=ctrl, max_renewals=64)
+    Decoder(fab, "d0", cfg, params, nic="efa", ctrl=ctrl, max_renewals=64)
+    sched = Scheduler(fab, ctrl)
     ids = np.random.default_rng(5).integers(0, cfg.vocab, size=30)
     rid = sched.submit(ids, n_decode=4)
     fab.run()
-    toks = dec.results[rid]["tokens"]
+    toks = sched.completed[rid]["tokens"]
     assert len(toks) == 4 and all(0 <= t < cfg.vocab for t in toks)
