@@ -5,6 +5,12 @@ Qwen3-235B-class geometry (page 32 kB = 128 tokens), against the paper's
 measured per-layer COMPUTE times — the claim being reproduced is that
 layer-by-layer transfer hides under compute.  Table 4 analog: UvmWatcher
 callback latency distribution under polling jitter.
+
+`kvlayout_*` rows track the schema/plan path per architecture: full
+reduced-cache state transfer through a compiled ``TransferPlan`` (one
+WrBatch per layer span) for the uniform fast path (stablelm) and the
+non-uniform schemas (gemma3 pattern-split rings, mamba2 SSM blobs), so
+layout overhead vs the uniform path is visible per PR in the CI CSVs.
 """
 
 from __future__ import annotations
@@ -61,6 +67,47 @@ def bench_uvm_latency(n: int = 2000) -> dict:
             "p99": np.percentile(a, 99), "max": a.max()}
 
 
+def bench_schema_transfer(arch: str, seq_len: int = 256,
+                          nic: str = "efa") -> dict:
+    """Full reduced-cache state transfer via a compiled TransferPlan.
+
+    Stages a synthetic cache of the arch's exact schema geometry, then
+    submits one span per model layer (worst-case fragmentation) — returns
+    simulated transfer time plus the plan/batch shape, so non-uniform
+    layout overhead is comparable against the uniform fast path.
+    """
+    from repro.configs import get_config
+    from repro.kvlayout import TransferPlan, schema_from_config
+    from repro.serving import KvPool
+
+    cfg = get_config(arch).reduced()
+    schema = schema_from_config(cfg)
+    plan = TransferPlan(schema, seq_len)
+
+    fab = Fabric(seed=0)
+    a = fab.add_engine("prefill", nic=nic)
+    b = fab.add_engine("decode", nic=nic)
+    pool_a = KvPool(a, schema, plan.n_slots)
+    pool_b = KvPool(b, schema, plan.n_slots)
+    src = pool_a.alloc(plan.n_slots)
+    dst = pool_b.alloc(plan.n_slots)
+    rng = np.random.default_rng(1)
+    pool_a.buf[:] = rng.integers(0, 255, pool_a.buf.size, dtype=np.uint8)
+    done = []
+    for off, count in plan.expected_counts():
+        b.expect_imm_count(100 + off, count, lambda: done.append(fab.now))
+    for l in range(cfg.n_layers):
+        plan.submit_span(a, pool_a.handle, src, pool_b.desc, dst, 100,
+                         l, l + 1)
+    fab.run()
+    return {
+        "us": max(done), "writes": plan.total_writes,
+        "bytes": schema.total_bytes(seq_len),
+        "enqueues": a.batch_stats.batches,
+        "components": len(schema.components),
+    }
+
+
 def run(report) -> None:
     for seq, (compute_ms, paper_ms, pages) in PAPER_T3.items():
         ms = bench_layer_transfer(pages)
@@ -73,3 +120,13 @@ def run(report) -> None:
     report("uvm_callback", u["p50"],
            f"us p50 (avg {u['avg']:.1f}, p99 {u['p99']:.1f}; paper Rust "
            f"p50 6.2 p99 12.6)")
+    # schema/plan path: uniform fast path vs non-uniform layouts
+    base = None
+    for arch in ("stablelm-3b", "gemma3-1b", "mamba2-780m"):
+        r = bench_schema_transfer(arch)
+        if base is None:
+            base = r["us"]
+        report(f"kvlayout_{arch}", r["us"],
+               f"us full-state transfer ({r['components']} comps, "
+               f"{r['writes']} WRs / {r['enqueues']} enqueues, "
+               f"{r['bytes'] >> 10} KiB, {r['us'] / base:.2f}x uniform)")

@@ -5,7 +5,8 @@ unordered transports (RC/SRD), multi-NIC DomainGroups, the Fig. 2 API and
 the ImmCounter completion primitive.
 """
 
-from .domain import MrDesc, MrHandle, NetAddr, Pages, ScatterDst, WrBatch
+from .domain import (MrDesc, MrHandle, NetAddr, Pages, PayloadDst,
+                     ScatterDst, WrBatch)
 from .engine import (BatchState, BatchStats, Fabric, Flag, TransferEngine,
                      WriteState, NIC_PRESETS)
 from .imm_counter import ImmCounter
@@ -14,7 +15,7 @@ from .uvm import UvmWatcher
 
 __all__ = [
     "Fabric", "TransferEngine", "Flag", "NIC_PRESETS",
-    "MrDesc", "MrHandle", "NetAddr", "Pages", "ScatterDst",
+    "MrDesc", "MrHandle", "NetAddr", "Pages", "PayloadDst", "ScatterDst",
     "WrBatch", "BatchState", "BatchStats", "WriteState",
     "ImmCounter", "UvmWatcher",
     "EventLoop", "NicSpec", "CX7", "EFA_100", "EFA_200",

@@ -109,6 +109,21 @@ class ScatterDst:
     dst: Tuple[MrDesc, int]       # (remote descriptor, remote offset)
 
 
+@dataclass(frozen=True)
+class PayloadDst:
+    """A scatter destination that carries its own payload bytes.
+
+    The gather-into-snapshot fast path: the caller hands a freshly
+    gathered, contiguous uint8 buffer that IS the submission snapshot —
+    no staging copy into a registered region and no second snapshot copy.
+    The caller must honour the WRITE contract (don't touch the buffer
+    until completion); a fancy-indexing gather result trivially does.
+    """
+
+    payload: object               # contiguous 1-D uint8 buffer
+    dst: Tuple[MrDesc, int]       # (remote descriptor, remote offset)
+
+
 class WrBatch:
     """A template of N work requests posted in ONE event-loop entry.
 

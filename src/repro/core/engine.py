@@ -29,7 +29,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from .domain import (DomainGroup, MemoryRegion, MrDesc, MrHandle, NetAddr,
-                     Pages, ScatterDst, WrBatch)
+                     Pages, PayloadDst, ScatterDst, WrBatch)
 from .imm_counter import ImmCounter
 from .netsim import (ENQUEUE_US, EventLoop, NicSpec, CX7, EFA_100, EFA_200,
                      stable_hash)
@@ -361,7 +361,12 @@ class TransferEngine:
 
         Completion state stays per-scatter (each ``on_done`` fires when its
         own destinations have sender-side completions; each imm counts its
-        own WRITEs) — only the submission is coalesced."""
+        own WRITEs) — only the submission is coalesced.
+
+        Destinations may be :class:`ScatterDst` (payload sliced from the
+        group's ``handle`` region at submission, the snapshot copy) or
+        :class:`PayloadDst` (caller-gathered bytes used AS the snapshot —
+        zero staging copies; ``handle`` may then be None)."""
         src_group = self.groups[device]
         extra = SCATTER_EXTRA_US.get(self.nic_name, 0.0)
         n_nics = len(src_group.domains)
@@ -371,12 +376,16 @@ class TransferEngine:
             if n == 0:
                 _fire(on_done)
                 continue
-            region = src_group.region(handle.region_id)
+            region = (src_group.region(handle.region_id)
+                      if handle is not None else None)
             batch_state = BatchState(n, on_done)
             for k, sd in enumerate(dsts):
                 desc, off = sd.dst
-                self._add_logical_write(batch, batch_state,
-                                        region.snapshot(sd.src, sd.len),
+                if isinstance(sd, PayloadDst):
+                    payload = sd.payload
+                else:
+                    payload = region.snapshot(sd.src, sd.len)
+                self._add_logical_write(batch, batch_state, payload,
                                         desc, off, imm, stripe=False,
                                         nic_rr=k % n_nics,
                                         extra_post_us=extra)

@@ -54,11 +54,12 @@ class ControlClient:
     # -- outbound ------------------------------------------------------------
     def join(self, *, nic: str, kv_desc: Optional[MrDesc],
              geom: Dict[str, Any], n_pages: int,
-             lease_us: float = 0.0) -> None:
+             lease_us: float = 0.0,
+             schema: Optional[Dict[str, Any]] = None) -> None:
         self.engine.submit_send(self.ctrl_addr, m.encode(m.Join(
             peer_id=self.peer_id, role=self.role,
             addr=self.engine.address(0), nic=nic, kv_desc=kv_desc,
-            geom=geom, n_pages=n_pages, lease_us=lease_us)))
+            geom=geom, n_pages=n_pages, lease_us=lease_us, schema=schema)))
         self._schedule_renew()
 
     def leave(self) -> None:

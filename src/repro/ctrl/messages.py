@@ -128,9 +128,12 @@ class Join:
     addr: NetAddr
     nic: str
     kv_desc: Optional[MrDesc]
-    geom: Dict[str, Any]           # JSON-safe PoolGeometry fields
+    geom: Dict[str, Any]           # JSON-safe pool geometry fields
     n_pages: int
     lease_us: float                # requested lease duration
+    # KvSchema wire form (kvlayout.KvSchema.to_wire()) — the Scheduler
+    # refuses to pair peers whose schemas differ, at routing time
+    schema: Optional[Dict[str, Any]] = None
 
 
 @wire("JACK")
@@ -197,6 +200,8 @@ class SubmitReq:
     n_decode: int
     reply_to: NetAddr
     attempt: int = 0
+    # (vision_seq, vision_dim) patch embeddings for vlm archs (optional)
+    vision_emb: Optional[np.ndarray] = None
 
 
 @wire("CANC")

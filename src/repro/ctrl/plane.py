@@ -87,7 +87,8 @@ class ControlPlane:
             self.registry.join(
                 peer_id=msg.peer_id, role=msg.role, addr=msg.addr,
                 nic=msg.nic, kv_desc=msg.kv_desc, geom=msg.geom,
-                n_pages=msg.n_pages, lease_us=lease, now=self.fabric.now)
+                n_pages=msg.n_pages, lease_us=lease, now=self.fabric.now,
+                schema=msg.schema)
             self.engine.submit_send(
                 msg.addr,
                 m.encode(m.JoinAck(msg.peer_id, self.registry.epoch, lease)))

@@ -34,6 +34,7 @@ class PeerRecord:
     kv_desc: Optional[MrDesc]
     geom: Dict[str, Any]
     n_pages: int
+    schema: Optional[Dict[str, Any]] = None   # KvSchema wire form
     status: str = LIVE
     lease_expires_us: float = 0.0
     joined_us: float = 0.0
@@ -55,6 +56,7 @@ class PeerView:
     geom: Mapping[str, Any]
     n_pages: int
     inflight: int
+    schema: Optional[Mapping[str, Any]] = None   # KvSchema wire form
 
 
 @dataclass(frozen=True)
@@ -92,6 +94,7 @@ class MembershipView:
             "addr": enc_value(p.addr), "nic": p.nic, "status": p.status,
             "kv_desc": enc_value(p.kv_desc), "geom": enc_value(dict(p.geom)),
             "n_pages": p.n_pages, "inflight": p.inflight,
+            "schema": enc_value(dict(p.schema) if p.schema else None),
         } for p in self.peers]
 
     @staticmethod
@@ -101,7 +104,8 @@ class MembershipView:
                      addr=dec_value(e["addr"]), nic=e["nic"],
                      status=e["status"], kv_desc=dec_value(e["kv_desc"]),
                      geom=dec_value(e["geom"]), n_pages=int(e["n_pages"]),
-                     inflight=int(e["inflight"]))
+                     inflight=int(e["inflight"]),
+                     schema=dec_value(e.get("schema")))
             for e in peers))
 
 
@@ -126,11 +130,12 @@ class PeerRegistry:
     # -- membership transitions ---------------------------------------------
     def join(self, *, peer_id: str, role: str, addr: NetAddr, nic: str,
              kv_desc: Optional[MrDesc], geom: Dict[str, Any], n_pages: int,
-             lease_us: float, now: float) -> int:
+             lease_us: float, now: float,
+             schema: Optional[Dict[str, Any]] = None) -> int:
         """Admit (or re-admit) a peer; returns the new epoch."""
         self._peers[peer_id] = PeerRecord(
             peer_id=peer_id, role=role, addr=addr, nic=nic, kv_desc=kv_desc,
-            geom=dict(geom), n_pages=n_pages, status=LIVE,
+            geom=dict(geom), n_pages=n_pages, schema=schema, status=LIVE,
             lease_expires_us=now + lease_us, joined_us=now,
             free_pages=n_pages)
         return self._bump(f"join:{peer_id}")
@@ -181,5 +186,5 @@ class PeerRegistry:
         return MembershipView(self._epoch, tuple(
             PeerView(peer_id=r.peer_id, role=r.role, addr=r.addr, nic=r.nic,
                      status=r.status, kv_desc=r.kv_desc, geom=dict(r.geom),
-                     n_pages=r.n_pages, inflight=r.inflight)
+                     n_pages=r.n_pages, inflight=r.inflight, schema=r.schema)
             for r in self._peers.values()))

@@ -1,0 +1,17 @@
+"""repro.kvlayout: KV-state schemas + the transfer-plan compiler.
+
+Opens disaggregated serving to every cache architecture the model stack
+can produce: uniform k/v, gemma3-style local/global pattern splits, vlm
+cross layers, SSM/hybrid state, and first-k-dense head layers.  See
+``schema.py`` (what the cache *is*) and ``plan.py`` (how it moves).
+"""
+
+from .plan import TransferPlan, compile_plan, fill_cache, stage_cache
+from .schema import (DECODE_MARGIN, KvComponent, KvSchema, handoff_max_len,
+                     schema_from_config)
+
+__all__ = [
+    "KvSchema", "KvComponent", "schema_from_config",
+    "TransferPlan", "compile_plan", "stage_cache", "fill_cache",
+    "handoff_max_len", "DECODE_MARGIN",
+]

@@ -4,7 +4,10 @@ Two modes:
   * monolithic  — sharded prefill_step + decode_step on the local mesh
   * disagg      — the §4 disaggregated path over the simulated fabric
                   (prefillers + decoders + scheduler), verified against the
-                  monolithic generation
+                  monolithic generation.  Works for EVERY arch family:
+                  ``repro.kvlayout`` derives the cache schema (uniform,
+                  pattern-split, SSM/hybrid, first-k-dense) and compiles
+                  the transfer plan.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
         --requests 4 --prompt-len 48 --decode 8 [--disagg]
@@ -25,11 +28,13 @@ from ..models import decode_step, init_params, prefill
 from .mesh import make_local_mesh
 
 
-def monolithic(cfg, params, prompts, n_decode: int):
+def monolithic(cfg, params, prompts, n_decode: int, vision_emb=None):
+    ve = None if vision_emb is None else jnp.asarray(vision_emb)[None]
     outs = []
     for ids in prompts:
         lg, cache = prefill(params, jnp.asarray(ids)[None], cfg,
-                            max_len=len(ids) + n_decode + 8, moe_mode="dense")
+                            max_len=len(ids) + n_decode + 8, moe_mode="dense",
+                            vision_emb=ve)
         toks = [int(jnp.argmax(lg[0, :cfg.vocab]))]
         pos = len(ids)
         for _ in range(n_decode - 1):
@@ -57,18 +62,21 @@ def main() -> None:
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, size=args.prompt_len)
                for _ in range(args.requests)]
+    # vlm archs need patch embeddings; the launcher synthesises one image
+    # shared by all requests (both paths use the same one, so parity holds)
+    vision_emb = (rng.normal(size=(cfg.vision_seq, cfg.vision_dim))
+                  .astype(np.float32) if cfg.family == "vlm" else None)
 
     t0 = time.time()
-    mono = monolithic(cfg, params, prompts, args.decode)
+    mono = monolithic(cfg, params, prompts, args.decode, vision_emb)
     print(f"monolithic: {args.requests} requests x {args.decode} tokens "
           f"in {time.time() - t0:.1f}s")
 
     if args.disagg:
         from ..serving import disagg_unsupported_reason
         reason = disagg_unsupported_reason(cfg)
-        if reason:
-            print(f"disagg path cannot serve '{args.arch}': {reason} "
-                  "(state-handoff schema is a ROADMAP item)")
+        if reason:  # retired guard: no current family triggers it
+            print(f"disagg path cannot serve '{args.arch}': {reason}")
             return
         from ..core import Fabric
         from ..ctrl import ControlPlane
@@ -80,7 +88,8 @@ def main() -> None:
         dec = [Decoder(fab, f"d{i}", cfg, params, nic=args.nic, ctrl=ctrl)
                for i in range(2)]
         sched = Scheduler(fab, ctrl)
-        rids = [sched.submit(ids, n_decode=args.decode) for ids in prompts]
+        rids = [sched.submit(ids, n_decode=args.decode,
+                             vision_emb=vision_emb) for ids in prompts]
         fab.run()
         sched.check_drained()
         ok = 0

@@ -30,7 +30,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import Fabric, MrDesc, NetAddr, ScatterDst, TransferEngine
+from ..core import (Fabric, MrDesc, NetAddr, PayloadDst, ScatterDst,
+                    TransferEngine)
 
 KERNEL_LAUNCH_US = 15.0      # launch -> first transfer (paper §6.2)
 ROUTE_PROC_US = 20.0         # host-side route processing before the second
@@ -133,31 +134,30 @@ class MoEEndpoint:
                     len=E * 4, src=len(self.send_buf) - N * E * 4,
                     dst=(p.d_routes, self.rank * E * 4)))
 
-            # 3. speculative private-buffer tokens (first t_priv per dest)
+            # 3. speculative private-buffer tokens (first t_priv per dest).
+            # Gather-into-snapshot fast path: ONE vectorised fancy-index
+            # gather per destination produces the contiguous payload that
+            # IS the submission snapshot — no per-row copies into send_buf
+            # and no second snapshot copy (zero-copy like the rest of the
+            # batch path).
             tb = cfg.token_bytes
             priv_dsts, priv_meta = [], {}
-            send_off = 0
             for r in range(N):
                 rows = np.nonzero(dest == r)[0]
                 take = rows[:cfg.t_priv]
                 priv_meta[r] = take
                 if take.size == 0:
                     continue
-                for i, idx in enumerate(take):
-                    self.send_buf[send_off + i * tb: send_off + (i + 1) * tb] = \
-                        tokens[ft_s[idx]]
-                priv_dsts.append(ScatterDst(
-                    len=take.size * tb, src=send_off,
+                priv_dsts.append(PayloadDst(
+                    payload=tokens[ft_s[take]].reshape(-1),
                     dst=(self.peers[r].d_priv, self.rank * cfg.t_priv * tb)))
-                send_off += take.size * tb
             # routes + private tokens ride ONE WrBatch (one proxy handoff);
             # each keeps its own imm so completion accounting is unchanged
             self.engine.submit_scatters([
                 (self.h_send, route_dsts, route_imm, None),
-                (self.h_send, priv_dsts, tok_imm, None),
+                (None, priv_dsts, tok_imm, None),
             ])
             ctx["priv_meta"] = priv_meta
-            ctx["send_off"] = send_off
 
         self.fabric.loop.schedule(KERNEL_LAUNCH_US, proxy_phase1)
 
@@ -169,7 +169,6 @@ class MoEEndpoint:
             all_counts = self.routes_buf.view(np.int32).reshape(N, E)
             ctx["all_counts"] = all_counts.copy()
             tb = cfg.token_bytes
-            send_off = ctx["send_off"]
             shared_dsts = []
             for r in range(N):
                 rows = np.nonzero(dest == r)[0]
@@ -178,10 +177,9 @@ class MoEEndpoint:
                     continue
                 # offset of MY block for expert e at receiver r:
                 #   sum_{e' local-before e} total(e') + sum_{s'<me} cnt[s'][e]
-                base = send_off
-                for i, idx in enumerate(rest):
-                    self.send_buf[send_off + i * tb: send_off + (i + 1) * tb] = \
-                        tokens[ft_s[idx]]
+                # Gather-into-snapshot: one vectorised gather per receiver;
+                # per-expert payloads are zero-copy row slices of it.
+                gathered = tokens[ft_s[rest]]
                 # tokens in `rest` are expert-sorted; split per expert
                 split_start = 0
                 for e in np.unique(fe_s[rest]):
@@ -193,16 +191,15 @@ class MoEEndpoint:
                     # skip this source's private tokens of expert e
                     n_priv_e = int((fe_s[ctx["priv_meta"][r]] == e).sum())
                     dst_tok = tot_before + src_before + n_priv_e
-                    shared_dsts.append(ScatterDst(
-                        len=blk.size * tb,
-                        src=base + split_start * tb,
+                    shared_dsts.append(PayloadDst(
+                        payload=gathered[split_start:split_start + blk.size]
+                        .reshape(-1),
                         dst=(self.peers[r].d_shared, dst_tok * tb)))
                     split_start += blk.size
-                send_off += rest.size * tb
             if shared_dsts:
-                self.engine.submit_scatter(self.h_send, shared_dsts, imm=tok_imm,
-                                           on_done=lambda: ctx.__setitem__(
-                                               "sent_at", self.fabric.now))
+                self.engine.submit_scatters(
+                    [(None, shared_dsts, tok_imm,
+                      lambda: ctx.__setitem__("sent_at", self.fabric.now))])
             else:
                 ctx["sent_at"] = self.fabric.now
 

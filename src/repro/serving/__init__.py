@@ -1,7 +1,7 @@
 from .disagg import (Decoder, DispatchReq, Prefiller,
                      disagg_unsupported_reason)
-from .kvpool import PagedKvPool, PoolGeometry
+from .kvpool import KvPool, PagedKvPool, PoolGeometry
 from .scheduler import Scheduler
 
-__all__ = ["Prefiller", "Decoder", "DispatchReq", "PagedKvPool",
+__all__ = ["Prefiller", "Decoder", "DispatchReq", "KvPool", "PagedKvPool",
            "PoolGeometry", "Scheduler", "disagg_unsupported_reason"]

@@ -1,15 +1,27 @@
 """Disaggregated inference: KvCache transfer over the TransferEngine (§4).
 
-Faithful implementation of the paper's Appendix A pseudocode:
+Faithful implementation of the paper's Appendix A pseudocode, generalised
+over :mod:`repro.kvlayout` so EVERY cache architecture serves — uniform k/v
+stacks, gemma3-style local/global pattern splits, vlm cross layers,
+SSM/hybrid state, and first-k-dense head layers:
 
-  decoder:  allocate pages + tail slot -> register ImmCounter expectation
-            (n_pages * n_layers + 1) -> SEND DispatchReq -> wait on the
-            counter -> decode.
-  prefiller: recv loop -> on DispatchReq: run prefill, increment a
-            UvmWatcher after each layer's attention output projection ->
-            the watcher callback issues that layer's submit_paged_writes ->
-            after the last chunk, submit_single_write of the tail context
-            (last-token logits) -> poll cnt_done before freeing pages.
+  decoder:  compile the request's ``TransferPlan`` -> allocate canonical
+            pool pages + a tail slot -> arm one ImmCounter expectation per
+            schema component (plus the tail) -> SEND DispatchReq -> wait on
+            the counters -> reassemble the cache from the plan -> decode.
+  prefiller: recv loop -> on DispatchReq: run prefill, stage the whole
+            cache pytree into pool slots (plan canonical order), increment
+            a UvmWatcher after each model layer -> the watcher callback
+            submits the completed layer span as ONE WrBatch
+            (``TransferPlan.submit_span`` — one ``submit_scatters`` call
+            covering every component's pages for that span, distinct imm
+            per component) -> after the last layer, submit_single_write of
+            the tail context (last-token logits) -> poll before freeing.
+
+All layout decisions happen at plan-compile time (arXiv 2605.00686's
+plan-ahead principle): the per-request hot path is one enqueue per layer
+span regardless of schema complexity, asserted via
+``TransferEngine.batch_stats`` in the tests.
 
 Model compute is REAL (a reduced-config jax model); compute time is mapped
 onto the virtual clock so the layer-by-layer transfer/compute overlap is
@@ -19,26 +31,27 @@ TTFT meaningful autoscaling signals.
 
 Elastic membership (§4 "dynamic scaling") runs through ``repro.ctrl``:
 pass ``ctrl=`` and the peer JOINs the control plane at startup, publishing
-its wire address, KV-pool ``MrDesc``, NIC kind, and pool geometry; leases
-renew in the background, DRAIN finishes in-flight work and frees every
-page before LEAVE, and a crash (``crash()``) simply stops renewals so the
-lease lapses.  All messages — including ``DispatchReq``, formerly an
-ad-hoc pickle — go through the typed wire codec of ``repro.ctrl.messages``.
+its wire address, KV-pool ``MrDesc``, NIC kind, pool geometry AND its
+``KvSchema`` — the Scheduler refuses to pair peers whose schemas differ at
+routing time, never mid-transfer.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import Fabric, MrDesc, NetAddr, Pages
+from ..core import Fabric, MrDesc, NetAddr
 from ..ctrl import ControlClient, ControlPlane
 from ..ctrl import messages as m
+from ..kvlayout import (DECODE_MARGIN, KvSchema, TransferPlan, fill_cache,
+                        schema_from_config, stage_cache)
 from ..models import decode_step, init_cache, prefill
-from .kvpool import PagedKvPool, PoolGeometry
+from .kvpool import KvPool
 
 
 @m.wire("DREQ")
@@ -46,52 +59,64 @@ from .kvpool import PagedKvPool, PoolGeometry
 class DispatchReq:
     input_ids: np.ndarray                 # (S,)
     decoder_addr: NetAddr
-    imm: int
+    imm: int                              # base immediate of the imm block
     kv_desc: MrDesc
-    pages: List[int]                      # decoder page indices, per chunk x layer
+    pages: List[int]                      # decoder pages, plan canonical order
     tail_desc: MrDesc
     tail_idx: int
     request_id: int
+    vision_emb: Optional[np.ndarray] = None   # (Sv, Dv) for vlm archs
+    # the decoder's KvSchema wire form: the prefiller validates it against
+    # its own schema BEFORE any WRITE — the last line of defence for
+    # hand-wired peers that bypass the Scheduler's routing-time gate
+    schema: Optional[Dict[str, Any]] = None
+
+
+def _geom_wire(cfg, schema: KvSchema) -> Dict[str, Any]:
+    """JSON-safe pool geometry advertised in the ctrl JOIN."""
+    return dict(n_layers=cfg.n_layers, page_tokens=schema.page_tokens,
+                slot_bytes=schema.slot_bytes)
+
+
+def _cached_plan(plans: Dict[int, TransferPlan], schema: KvSchema,
+                 seq_len: int) -> TransferPlan:
+    plan = plans.get(seq_len)
+    if plan is None:
+        plan = plans[seq_len] = TransferPlan(schema, seq_len)
+    return plan
 
 
 def disagg_unsupported_reason(cfg) -> Optional[str]:
     """Why the §4 KvCache protocol cannot serve ``cfg`` (None = it can).
 
-    The paged transfer moves a uniform ``(L, S, K, Dh)`` k/v stack.  Archs
-    whose reduced cache is *split* — pattern archs (gemma3 local/global,
-    vlm cross layers), SSM/hybrid state, or leading dense layers — need a
-    per-kind state-handoff schema that doesn't exist yet (ROADMAP item).
-    This is the single guard for the whole serving stack: constructors
-    raise on it, launchers print it.
+    Since ``repro.kvlayout`` every family the model stack produces has a
+    transfer schema — uniform k/v, pattern-split (gemma3 local/global, vlm
+    cross), SSM/hybrid state, and first-k-dense head layers all serve
+    disaggregated.  The guard is retained as the single serving-stack
+    capability probe (constructors raise on it, launchers print it) in
+    case future families outrun the schema compiler.
     """
-    if cfg.family in ("ssm", "hybrid"):
-        return (f"family '{cfg.family}' carries SSM state, not a uniform "
-                "KV cache")
-    if cfg.global_every or cfg.cross_every:
-        return ("pattern-split KV cache (lk/lv/sk/sv local+special stacks, "
-                "not a uniform k/v stack)")
-    if cfg.first_k_dense:
-        return "first-k-dense split cache (k0/v0 head layers)"
+    try:
+        schema_from_config(cfg)
+    except Exception as e:  # pragma: no cover - no current family hits this
+        return f"no KvSchema derivation for family '{cfg.family}': {e}"
     return None
 
 
 def _check_supported(cfg) -> None:
     reason = disagg_unsupported_reason(cfg)
-    if reason is not None:
+    if reason is not None:  # pragma: no cover - see above
         raise ValueError(
             f"disaggregated serving cannot handle '{cfg.name}': {reason}")
 
 
-def _geom(cfg, page_tokens: int) -> PoolGeometry:
-    return PoolGeometry(n_layers=cfg.n_layers, page_tokens=page_tokens,
-                        n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim)
-
-
-def _geom_wire(geom: PoolGeometry) -> Dict[str, Any]:
-    """JSON-safe pool geometry for the control plane's JOIN message."""
-    return dict(n_layers=geom.n_layers, page_tokens=geom.page_tokens,
-                n_kv=geom.n_kv, head_dim=geom.head_dim,
-                dtype=geom.dtype.str, page_bytes=geom.page_bytes)
+def _vision_batch(cfg, vision_emb) -> Optional[jnp.ndarray]:
+    """Wire (Sv, Dv) embeddings -> (1, Sv, Dv); zeros when absent."""
+    if cfg.family != "vlm":
+        return None
+    if vision_emb is None:
+        return jnp.zeros((1, cfg.vision_seq, cfg.vision_dim), jnp.float32)
+    return jnp.asarray(vision_emb, jnp.float32)[None]
 
 
 class Prefiller:
@@ -109,10 +134,15 @@ class Prefiller:
         self.engine = fabric.add_engine(node, nic=nic)
         self.fabric = fabric
         self.nic = nic
-        self.geom = _geom(cfg, page_tokens)
-        self.pool = PagedKvPool(self.engine, self.geom, n_pages)
+        self.schema = schema_from_config(cfg, page_tokens)
+        self.pool = KvPool(self.engine, self.schema, n_pages)
+        self._plans: Dict[int, TransferPlan] = {}   # seq_len -> compiled plan
         self.layer_compute_us = layer_compute_us
         self.stats: Dict[str, float] = {}
+        # (rid, lo, hi, n_writes) per submitted span batch; bounded — only
+        # tests read it, a long-lived peer must not accumulate per-request
+        # tuples forever
+        self.span_log: Deque[tuple] = deque(maxlen=256)
         self._cancelled: set = set()
         self.alive = True
         self.draining = False
@@ -131,7 +161,11 @@ class Prefiller:
                 free_pages_fn=lambda: len(self.pool._free),
                 on_drain=self._on_drain)
             self.client.join(nic=nic, kv_desc=self.pool.desc,
-                             geom=_geom_wire(self.geom), n_pages=n_pages)
+                             geom=_geom_wire(cfg, self.schema),
+                             n_pages=n_pages, schema=self.schema.to_wire())
+
+    def _plan(self, seq_len: int) -> TransferPlan:
+        return _cached_plan(self._plans, self.schema, seq_len)
 
     def address(self) -> NetAddr:
         return self.engine.address(0)
@@ -176,9 +210,14 @@ class Prefiller:
             self.stats["rejected"] = self.stats.get("rejected", 0) + 1
             return
         cfg = self.cfg
+        if req.schema is not None:
+            reason = self.schema.mismatch(KvSchema.from_wire(req.schema))
+            if reason is not None:
+                raise ValueError(
+                    f"DispatchReq {req.request_id}: decoder KvSchema "
+                    f"incompatible with this prefiller: {reason}")
         S = len(req.input_ids)
-        page_tokens = self.geom.page_tokens
-        n_chunks = -(-S // page_tokens)
+        plan = self._plan(S)
         t_start = self.fabric.now
         self.inflight += 1
         self.served += 1
@@ -189,21 +228,18 @@ class Prefiller:
         delay0 = start - t_start
         self.stats[f"req{req.request_id}_queued_us"] = delay0
 
-        # REAL prefill compute (all layers at once — jax scan); K/V per layer.
+        # REAL prefill compute (all layers at once — jax scan); both ends
+        # derive cache geometry from plan.max_len so ring slot assignment
+        # and padding agree bit-for-bit.
         tokens = jnp.asarray(req.input_ids, jnp.int32)[None]
-        logits, cache = prefill(self.params, tokens, cfg, max_len=S,
-                                moe_mode="dense")
+        logits, cache = prefill(self.params, tokens, cfg,
+                                max_len=plan.max_len, moe_mode="dense",
+                                vision_emb=_vision_batch(cfg, req.vision_emb))
         logits = logits[..., :cfg.vocab]   # drop vocab padding
-        k = np.asarray(cache["k"], np.float32)   # (L,1,S,K,Dh)
-        v = np.asarray(cache["v"], np.float32)
 
-        # local staging pages: chunk c of layer l -> pool page
-        local_pages = self.pool.alloc(n_chunks * cfg.n_layers)
-        for l in range(cfg.n_layers):
-            for c in range(n_chunks):
-                lo, hi = c * page_tokens, min(S, (c + 1) * page_tokens)
-                self.pool.write_page(local_pages[l * n_chunks + c],
-                                     k[l, 0, lo:hi], v[l, 0, lo:hi])
+        # stage EVERY schema component into pool slots, canonical order
+        local_pages = self.pool.alloc(plan.n_slots)
+        stage_cache(plan, self.pool, local_pages, cache)
 
         # tail context: last-token logits
         tail = np.asarray(logits, np.float32).reshape(-1).view(np.uint8)
@@ -212,27 +248,25 @@ class Prefiller:
         tail_handle, _ = self.engine.reg_mr(tail_buf)
 
         cnt = {"done": 0}
-        total_writes = n_chunks * cfg.n_layers + 1
+        total_writes = plan.total_writes + 1
 
         def send_layers(lo: int, hi: int) -> None:
-            # Layers [lo, hi) completed since the last poll land as ONE
-            # batched paged-write submission: the UVM poller coalesces
-            # increments, so coalesced layers share a single WrBatch.
+            # Model layers [lo, hi) completed since the last poll land as
+            # ONE batched submission: every component page the span unlocks
+            # rides a single WrBatch, distinct imm per component.  The UVM
+            # poller coalesces increments, so coalesced layers share it too.
             if (not self.alive or req.request_id in self._cancelled
                     or hi <= lo):
                 return
-            src = Pages(indices=tuple(local_pages[lo * n_chunks:hi * n_chunks]),
-                        stride=self.geom.page_bytes)
-            dst = Pages(indices=tuple(req.pages[lo * n_chunks:hi * n_chunks]),
-                        stride=self.geom.page_bytes)
-            n_sent = (hi - lo) * n_chunks
-            self.engine.submit_paged_writes(
-                self.geom.page_bytes, req.imm,
-                (self.pool.handle, src), (req.kv_desc, dst),
-                on_done=lambda: cnt.__setitem__("done", cnt["done"] + n_sent))
+            n = plan.submit_span(
+                self.engine, self.pool.handle, local_pages,
+                req.kv_desc, req.pages, req.imm, lo, hi,
+                on_sent=lambda n: cnt.__setitem__("done", cnt["done"] + n))
+            if n:
+                self.span_log.append((req.request_id, lo, hi, n))
 
-        # UvmWatcher: the "GPU" increments after each layer's attn output
-        # projection; the watcher callback sends the completed span (App. A).
+        # UvmWatcher: the "GPU" increments after each layer's output is
+        # ready; the watcher callback sends the completed span (App. A).
         watcher = self.engine.alloc_uvm_watcher(send_layers)
         for l in range(cfg.n_layers):
             self.fabric.loop.schedule(delay0 + (l + 1) * self.layer_compute_us,
@@ -242,8 +276,8 @@ class Prefiller:
             if not self.alive or req.request_id in self._cancelled:
                 return
             self.engine.submit_single_write(
-                tail.size, req.imm, (tail_handle, 0), (req.tail_desc,
-                                                       req.tail_idx * tail.size),
+                tail.size, req.imm + plan.n_imms, (tail_handle, 0),
+                (req.tail_desc, req.tail_idx * tail.size),
                 on_done=lambda: cnt.__setitem__("done", cnt["done"] + 1))
 
         self.fabric.loop.schedule(
@@ -289,8 +323,9 @@ class Decoder:
         self.params = params
         self.fabric = fabric
         self.engine = fabric.add_engine(node, nic=nic)
-        self.geom = _geom(cfg, page_tokens)
-        self.pool = PagedKvPool(self.engine, self.geom, n_pages)
+        self.schema = schema_from_config(cfg, page_tokens)
+        self.pool = KvPool(self.engine, self.schema, n_pages)
+        self._plans: Dict[int, TransferPlan] = {}
         tail_bytes = cfg.vocab * 4
         self.tail_buf = np.zeros(max_tail * tail_bytes, np.uint8)
         self.tail_handle, self.tail_desc = self.engine.reg_mr(self.tail_buf)
@@ -313,7 +348,11 @@ class Decoder:
                 free_pages_fn=lambda: len(self.pool._free),
                 on_drain=self._on_drain)
             self.client.join(nic=nic, kv_desc=self.pool.desc,
-                             geom=_geom_wire(self.geom), n_pages=n_pages)
+                             geom=_geom_wire(cfg, self.schema),
+                             n_pages=n_pages, schema=self.schema.to_wire())
+
+    def _plan(self, seq_len: int) -> TransferPlan:
+        return _cached_plan(self._plans, self.schema, seq_len)
 
     def address(self) -> NetAddr:
         return self.engine.address(0)
@@ -348,7 +387,7 @@ class Decoder:
             self._attempt[msg.request_id] = msg.attempt
             self.submit(msg.request_id, msg.input_ids, msg.prefiller,
                         n_decode=msg.n_decode, reply_to=msg.reply_to,
-                        attempt=msg.attempt)
+                        attempt=msg.attempt, vision_emb=msg.vision_emb)
         elif isinstance(msg, m.CancelReq):
             # only the newest attempt may be cancelled; an unordered SEND
             # can deliver a stale CANCEL after its re-route's SUBMIT
@@ -356,12 +395,14 @@ class Decoder:
                 self.cancel(msg.request_id)
 
     def cancel(self, request_id: int) -> bool:
-        """Abandon an in-flight attempt: free pages + tail slot, drop the
-        ImmCounter expectation.  Nothing leaks — failover re-allocates."""
+        """Abandon an in-flight attempt: free pages + tail slot, drop every
+        component's ImmCounter expectation.  Nothing leaks — failover
+        re-allocates."""
         st = self._pending.pop(request_id, None)
         if st is None:
             return False
-        self.engine.counters[0].reset(st["imm"])
+        for off in range(st["n_imms"] + 1):   # components + tail
+            self.engine.counters[0].reset(st["imm"] + off)
         self.pool.free(st["pages"])
         self._tail_free.append(st["tail_idx"])
         self.results.pop(request_id, None)
@@ -371,19 +412,26 @@ class Decoder:
     # ------------------------------------------------------------------
     def submit(self, request_id: int, input_ids: np.ndarray,
                prefiller: NetAddr, n_decode: int = 4, *,
-               reply_to: Optional[NetAddr] = None, attempt: int = 0) -> None:
-        cfg = self.cfg
+               reply_to: Optional[NetAddr] = None, attempt: int = 0,
+               vision_emb: Optional[np.ndarray] = None) -> None:
+        if n_decode > DECODE_MARGIN:
+            # the handoff cache holds seq_len + DECODE_MARGIN positions;
+            # decoding past it would silently drop cache updates (jax
+            # clips out-of-bounds .at[] writes) and diverge from monolithic
+            raise ValueError(
+                f"n_decode={n_decode} exceeds the handoff cache headroom "
+                f"(DECODE_MARGIN={DECODE_MARGIN})")
         S = len(input_ids)
-        page_tokens = self.geom.page_tokens
-        n_chunks = -(-S // page_tokens)
-        pages = self.pool.alloc(n_chunks * cfg.n_layers)
+        plan = self._plan(S)
+        pages = self.pool.alloc(plan.n_slots)
         tail_idx = self._tail_free.pop(0)
+        # one immediate per schema component plus the tail write
         imm = self._imm_next
-        self._imm_next += 1
-        imm_count = n_chunks * cfg.n_layers + 1
+        self._imm_next += plan.n_imms + 1
         t0 = self.fabric.now
         self._pending[request_id] = {
             "pages": pages, "tail_idx": tail_idx, "imm": imm,
+            "n_imms": plan.n_imms, "plan": plan,
             "attempt": attempt, "reply_to": reply_to, "seq_len": S,
         }
 
@@ -391,39 +439,37 @@ class Decoder:
                           decoder_addr=self.address(),
                           imm=imm, kv_desc=self.pool.desc, pages=pages,
                           tail_desc=self.tail_desc, tail_idx=tail_idx,
-                          request_id=request_id)
+                          request_id=request_id, vision_emb=vision_emb,
+                          schema=self.schema.to_wire())
 
-        def on_complete() -> None:
+        expectations = plan.expected_counts() + [(plan.n_imms, 1)]  # + tail
+        remaining = {"n": len(expectations)}
+
+        def part_done() -> None:
             st = self._pending.get(request_id)
             if st is None or st["imm"] != imm:
                 return      # attempt was cancelled / superseded
+            remaining["n"] -= 1
+            if remaining["n"]:
+                return
             self.results[request_id] = {
                 "ttft_us": self.fabric.now - t0,
                 "pages": pages, "tail_idx": tail_idx, "seq_len": S,
+                "plan": plan,
             }
             self._decode(request_id, n_decode)
 
-        self.engine.expect_imm_count(imm, imm_count, on_complete)
+        for off, count in expectations:
+            self.engine.expect_imm_count(imm + off, count, part_done)
         self.engine.submit_send(prefiller, m.encode(req))
 
     def _assemble_cache(self, request_id: int):
-        cfg = self.cfg
         r = self.results[request_id]
-        S = r["seq_len"]
-        page_tokens = self.geom.page_tokens
-        n_chunks = -(-S // page_tokens)
-        max_len = S + 64
-        cache = init_cache(cfg, 1, max_len)
-        k = np.zeros((cfg.n_layers, 1, max_len, cfg.n_kv_heads, cfg.head_dim), np.float32)
-        v = np.zeros_like(k)
-        for l in range(cfg.n_layers):
-            for c in range(n_chunks):
-                pk, pv = self.pool.read_page(r["pages"][l * n_chunks + c])
-                lo, hi = c * page_tokens, min(S, (c + 1) * page_tokens)
-                k[l, 0, lo:hi] = pk[: hi - lo]
-                v[l, 0, lo:hi] = pv[: hi - lo]
-        cache["k"] = jnp.asarray(k, cache["k"].dtype)
-        cache["v"] = jnp.asarray(v, cache["v"].dtype)
+        plan: TransferPlan = r["plan"]
+        cache = init_cache(self.cfg, 1, plan.max_len)
+        for name, arr in fill_cache(plan, self.pool, r["pages"],
+                                    cache).items():
+            cache[name] = jnp.asarray(arr, cache[name].dtype)
         return cache
 
     def _decode(self, request_id: int, n_decode: int) -> None:

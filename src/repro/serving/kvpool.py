@@ -1,9 +1,22 @@
-"""Paged KV pool: fixed-size pages in a registered memory region.
+"""Paged KV pools: fixed-size pages in a registered memory region.
 
 Layout follows the paper's §4 note: heads PRECEDE pages ("the KvCaches are
 laid out with heads preceding the pages, ensuring continuity within
-consecutive heads") — a page is a contiguous (page_tokens x n_kv x head_dim
-x 2) block for one layer, so one RDMA WRITE moves one page.
+consecutive heads") — a page is a contiguous block for one layer, so one
+RDMA WRITE moves one page.
+
+Two pools live here:
+
+* :class:`PagedKvPool` — the original single-geometry pool (a page is one
+  layer's ``page_tokens x n_kv x head_dim x 2`` k+v block).  Kept for
+  uniform-stack tooling and control-plane tests.
+* :class:`KvPool` — the schema-driven multi-component pool used by the
+  serving stack: one page size per component (``KvComponent.page_len``)
+  drawn from a SINGLE shared page allocator.  Slots are sized to the
+  largest component page, so any free slot can host any component's page
+  and the whole pool stays one ``MrDesc`` — a peer's entire reduced-cache
+  state is addressable through one registered region regardless of how
+  many components its architecture splits into.
 """
 
 from __future__ import annotations
@@ -14,6 +27,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from ..core import MrDesc, MrHandle, TransferEngine
+from ..kvlayout import KvSchema
 
 
 @dataclass
@@ -38,7 +52,7 @@ class PoolGeometry:
 
 
 class PagedKvPool:
-    """A pool of KV pages registered with a TransferEngine."""
+    """A pool of uniform KV pages registered with a TransferEngine."""
 
     def __init__(self, engine: TransferEngine, geom: PoolGeometry,
                  n_pages: int, device: int = 0):
@@ -75,3 +89,42 @@ class PagedKvPool:
     def read_page(self, page: int) -> Tuple[np.ndarray, np.ndarray]:
         view = self.page_view(page)
         return view[0], view[1]
+
+
+class KvPool:
+    """Schema-driven multi-component pool with a shared page allocator.
+
+    Slot ``i`` occupies bytes ``[i * slot_bytes, (i+1) * slot_bytes)`` of
+    one registered region; a component's page uses the first
+    ``page_len`` bytes of its slot (``TransferPlan`` WRITEs exactly that
+    many).  Allocation order is the plan's canonical slot order, so a flat
+    page-id list describes a whole multi-component handoff.
+    """
+
+    def __init__(self, engine: TransferEngine, schema: KvSchema,
+                 n_pages: int, device: int = 0):
+        self.schema = schema
+        self.slot_bytes = schema.slot_bytes
+        self.n_pages = n_pages
+        self.buf = np.zeros(n_pages * self.slot_bytes, np.uint8)
+        self.handle, self.desc = engine.reg_mr(self.buf, device)
+        self._free = list(range(n_pages))
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(f"KV pool exhausted ({n} > {len(self._free)})")
+        out = self._free[:n]
+        del self._free[:n]
+        return out
+
+    def free(self, pages: List[int]) -> None:
+        self._free.extend(pages)
+
+    # -- slot access (used by plan.stage_cache / plan.fill_cache) -----------
+    def write_slot(self, page: int, data: np.ndarray) -> None:
+        lo = page * self.slot_bytes
+        self.buf[lo:lo + data.size] = data
+
+    def read_slot(self, page: int, nbytes: int) -> np.ndarray:
+        lo = page * self.slot_bytes
+        return self.buf[lo:lo + nbytes]

@@ -5,8 +5,10 @@ The scheduler holds NO static peer list and NO peer object references.  It
 subscribes to the control plane and routes every request against the
 current epoch's :class:`~repro.ctrl.registry.MembershipView`:
 
-* requests enter a backlog and are pumped whenever both a routable (live,
-  non-draining) prefiller and decoder exist in the view;
+* requests enter a backlog and are pumped whenever the view offers a
+  routable (live, non-draining) prefiller/decoder pair whose advertised
+  ``KvSchema``s match — mismatched cache layouts are refused HERE, at
+  routing time, never mid-transfer (``schema_mismatches`` counts refusals);
 * routing is a wire operation — a typed ``SubmitReq`` SENT to the chosen
   decoder, which dispatches to the chosen prefiller; completion comes back
   as a ``ReqDone`` carrying TTFT and the generated tokens;
@@ -14,8 +16,13 @@ current epoch's :class:`~repro.ctrl.registry.MembershipView`:
   every in-flight request routed through it is cancelled at its decoder
   (freeing the attempt's KV pages) and re-queued with a bumped attempt
   number — post-failure requests complete on the surviving peers;
-* liveness is entirely the control plane's lease machinery; the seed's
-  hand-rolled heartbeat loop is gone.
+* liveness is entirely the control plane's lease machinery.
+
+Routing policy is a knob: ``policy="round-robin"`` (default) rotates
+through the routable peers; ``policy="least-loaded"`` orders them by load
+— the ``inflight`` signal piggybacked on LEASE-RENEWs (refreshed into
+views at every epoch bump) combined with this scheduler's own outstanding
+count per peer, which is exact between view refreshes.
 
 ``routing_log`` records ``(rid, epoch, prefiller, decoder)`` per route so
 tests and benchmarks can prove that all routing went through epoch views.
@@ -32,23 +39,34 @@ import numpy as np
 from ..core import Fabric
 from ..ctrl import ControlPlane, MembershipView
 from ..ctrl import messages as m
+from ..kvlayout import DECODE_MARGIN
 
 TTFT_EMA_ALPHA = 0.3
+
+POLICIES = ("round-robin", "least-loaded")
 
 
 class Scheduler:
     def __init__(self, fabric: Fabric, ctrl: ControlPlane, *,
-                 node: str = "sched"):
+                 node: str = "sched", policy: str = "round-robin"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.fabric = fabric
         self.ctrl = ctrl
+        self.policy = policy
         self.engine = fabric.add_engine(node, nic=ctrl.nic)
         self.engine.submit_recvs(1 << 16, 64, self._on_msg)
         self.view = MembershipView(0, ())
         self.view_epochs: List[int] = []       # every accepted epoch, in order
         self._rr = {"prefill": 0, "decode": 0}
         self._req = itertools.count()
-        # (rid, input_ids, n_decode, attempt); appendleft on re-route
-        self.backlog: Deque[Tuple[int, np.ndarray, int, int]] = deque()
+        # locally routed, not-yet-done requests per peer id (exact between
+        # view refreshes; the view's inflight is the cross-scheduler signal)
+        self._outstanding: Dict[str, int] = {}
+        self.schema_mismatches = 0
+        # (rid, input_ids, n_decode, attempt, vision_emb); appendleft on
+        # re-route
+        self.backlog: Deque[Tuple] = deque()
         self.inflight: Dict[int, Dict] = {}
         self.completed: Dict[int, Dict] = {}
         self.ttft_ema: Optional[float] = None
@@ -65,49 +83,100 @@ class Scheduler:
         the fabric runs (requests may arrive before peers join — that is
         the elasticity contract), but anything still queued or in flight
         once the loop is idle means the fleet was misconfigured (peers
-        built without ``ctrl=``, wrong NIC, no decoders, ...)."""
+        built without ``ctrl=``, wrong NIC, no decoders, mismatched
+        KvSchemas, ...)."""
         if self.backlog or self.inflight:
             routable = {role: [p.peer_id for p in self.view.routable(role)]
                         for role in ("prefill", "decode")}
             raise RuntimeError(
                 f"{len(self.backlog)} queued + {len(self.inflight)} in-flight "
                 f"requests never completed (view epoch {self.view.epoch}, "
-                f"routable {routable})")
+                f"routable {routable}, "
+                f"schema mismatches {self.schema_mismatches})")
 
     # -- submission ---------------------------------------------------------
-    def submit(self, input_ids: np.ndarray, n_decode: int = 4) -> int:
+    def submit(self, input_ids: np.ndarray, n_decode: int = 4, *,
+               vision_emb: Optional[np.ndarray] = None) -> int:
         """Queue a request; it is routed when the view offers capacity."""
+        if n_decode > DECODE_MARGIN:
+            # reject before routing: the decoder enforces the same bound,
+            # but a wire-path rejection would crash the decoder's recv
+            # callback mid-run instead of failing the caller cleanly
+            raise ValueError(
+                f"n_decode={n_decode} exceeds the handoff cache headroom "
+                f"(DECODE_MARGIN={DECODE_MARGIN})")
         rid = next(self._req)
-        self.backlog.append((rid, np.asarray(input_ids), n_decode, 0))
+        self.backlog.append((rid, np.asarray(input_ids), n_decode, 0,
+                             vision_emb))
         self._pump()
         return rid
 
-    def _pick(self, role: str):
-        cands = self.view.routable(role)
+    def _load(self, p) -> int:
+        """Effective load of a peer: the LEASE-RENEW-piggybacked inflight
+        captured at the last epoch bump, or this scheduler's own
+        outstanding count when that is fresher."""
+        return max(p.inflight, self._outstanding.get(p.peer_id, 0))
+
+    def _candidates(self, role: str):
+        """Routable peers of ``role`` in policy preference order."""
+        cands = list(self.view.routable(role))
         if not cands:
-            return None
-        c = cands[self._rr[role] % len(cands)]
-        self._rr[role] += 1
-        return c
+            return []
+        if self.policy == "least-loaded":
+            return sorted(cands, key=lambda p: (self._load(p), p.peer_id))
+        i = self._rr[role] % len(cands)
+        return cands[i:] + cands[:i]
+
+    @staticmethod
+    def _schemas_match(pf, dc) -> bool:
+        if pf.schema is None or dc.schema is None:
+            return True      # schema-less (hand-wired) peers: no gating
+        return pf.schema == dc.schema
+
+    def _pick_pair(self):
+        """First (prefiller, decoder) pair with compatible KvSchemas."""
+        dcs = self._candidates("decode")
+        rejected = False
+        for pf in self._candidates("prefill"):
+            for dc in dcs:
+                if self._schemas_match(pf, dc):
+                    return pf, dc
+                rejected = True
+        if rejected:
+            self.schema_mismatches += 1
+        return None
 
     def _pump(self) -> None:
         while self.backlog:
-            pf = self._pick("prefill")
-            dc = self._pick("decode")
-            if pf is None or dc is None:
+            pair = self._pick_pair()
+            if pair is None:
                 return
-            rid, ids, n_decode, attempt = self.backlog.popleft()
+            pf, dc = pair
+            if self.policy == "round-robin":
+                self._rr["prefill"] += 1
+                self._rr["decode"] += 1
+            rid, ids, n_decode, attempt, vis = self.backlog.popleft()
             self.inflight[rid] = dict(
-                ids=ids, n_decode=n_decode, attempt=attempt,
+                ids=ids, n_decode=n_decode, attempt=attempt, vision_emb=vis,
                 prefiller=pf.peer_id, decoder=dc.peer_id,
                 decoder_addr=dc.addr, epoch=self.view.epoch,
                 t_routed=self.fabric.now)
+            for pid in (pf.peer_id, dc.peer_id):
+                self._outstanding[pid] = self._outstanding.get(pid, 0) + 1
             self.routing_log.append((rid, self.view.epoch,
                                      pf.peer_id, dc.peer_id))
             self.engine.submit_send(dc.addr, m.encode(m.SubmitReq(
                 request_id=rid, input_ids=ids, prefiller=pf.addr,
                 n_decode=n_decode, reply_to=self.engine.address(0),
-                attempt=attempt)))
+                attempt=attempt, vision_emb=vis)))
+
+    def _release(self, st: Dict) -> None:
+        for pid in (st["prefiller"], st["decoder"]):
+            n = self._outstanding.get(pid, 0)
+            if n > 1:
+                self._outstanding[pid] = n - 1
+            else:
+                self._outstanding.pop(pid, None)
 
     # -- wire handling ------------------------------------------------------
     def _on_msg(self, payload: bytes) -> None:
@@ -127,6 +196,7 @@ class Scheduler:
             if st is None or st["attempt"] != msg.attempt:
                 return     # stale attempt (already re-routed)
             del self.inflight[msg.request_id]
+            self._release(st)
             self.completed[msg.request_id] = dict(
                 ttft_us=msg.ttft_us, tokens=list(msg.tokens),
                 decoder=msg.peer_id, prefiller=st["prefiller"],
@@ -143,10 +213,12 @@ class Scheduler:
             if st["prefiller"] not in gone and st["decoder"] not in gone:
                 continue
             del self.inflight[rid]
+            self._release(st)
             if st["decoder"] not in gone:
                 # free the dead attempt's pages at the (live) decoder
                 self.engine.submit_send(st["decoder_addr"], m.encode(
                     m.CancelReq(rid, st["attempt"])))
             self.rerouted.append(rid)
             self.backlog.appendleft(
-                (rid, st["ids"], st["n_decode"], st["attempt"] + 1))
+                (rid, st["ids"], st["n_decode"], st["attempt"] + 1,
+                 st["vision_emb"]))

@@ -246,3 +246,54 @@ def test_batch_stats_striping_counts_per_nic_wrs():
     assert a.batch_stats.batches == 1
     assert a.batch_stats.wrs == 4
     assert a.batch_stats.nbytes == size
+
+
+# ---------------------------------------------------------------------------
+# gather-into-snapshot payload scatters (PayloadDst)
+# ---------------------------------------------------------------------------
+
+def test_payload_scatter_delivers_caller_snapshot():
+    """PayloadDst bytes are used AS the snapshot: exact delivery, imm
+    parity with the MR-sourced path, and no re-read of any source region
+    (the caller's gather is the only copy)."""
+    from repro.core import PayloadDst
+    fab, a, b = _pair("efa", seed=5)
+    rng = np.random.default_rng(2)
+    table = rng.integers(0, 255, size=(8, 512), dtype=np.uint8)
+    dst = np.zeros(4096, np.uint8)
+    _, dd = b.reg_mr(dst)
+    rows = np.asarray([5, 1, 6, 2])
+    gathered = table[rows]                  # the gather IS the snapshot
+    f = Flag()
+    a.submit_scatters([(None, [
+        PayloadDst(payload=gathered[i:i + 1].reshape(-1),
+                   dst=(dd, i * 512)) for i in range(4)], 31, f)])
+    # mutating the table after submit must not change what lands
+    table[:] = 0
+    fab.run()
+    assert f.is_set()
+    assert b.imm_value(31) == 4
+    assert np.array_equal(dst[:2048].reshape(4, 512), gathered)
+    assert np.array_equal(dst[2048:], np.zeros(2048, np.uint8))
+
+
+def test_payload_and_mr_groups_share_one_batch():
+    """A payload-sourced group and an MR-sourced group coalesce into ONE
+    WrBatch/enqueue, each keeping its own imm."""
+    from repro.core import PayloadDst
+    fab, a, b = _pair("cx7")
+    src = np.random.default_rng(3).integers(0, 255, 1024, dtype=np.uint8)
+    hs, _ = a.reg_mr(src)
+    dst = np.zeros(2048, np.uint8)
+    _, dd = b.reg_mr(dst)
+    payload = np.arange(1024, dtype=np.uint32).view(np.uint8)[:1024].copy()
+    before = a.batch_stats.batches
+    a.submit_scatters([
+        (hs, [ScatterDst(len=1024, src=0, dst=(dd, 0))], 41, None),
+        (None, [PayloadDst(payload=payload, dst=(dd, 1024))], 42, None),
+    ])
+    assert a.batch_stats.batches == before + 1
+    fab.run()
+    assert np.array_equal(dst[:1024], src)
+    assert np.array_equal(dst[1024:], payload)
+    assert b.imm_value(41) == 1 and b.imm_value(42) == 1

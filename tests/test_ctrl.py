@@ -384,20 +384,73 @@ def test_autoscaler_respects_min_prefillers():
 
 
 # ---------------------------------------------------------------------------
-# satellite: the seed KeyError 'k' guard, centralised
+# the state-handoff guard is RETIRED: every cache shape has a KvSchema
 # ---------------------------------------------------------------------------
 
-def test_disagg_guard_rejects_split_caches():
-    assert disagg_unsupported_reason(get_config("stablelm-3b").reduced()) is None
-    gemma = get_config("gemma3-1b").reduced()
-    assert "pattern-split" in disagg_unsupported_reason(gemma)
-    assert "state" in disagg_unsupported_reason(get_config("mamba2-780m").reduced())
-    assert "first-k-dense" in disagg_unsupported_reason(
-        get_config("deepseek-moe-16b").reduced())
-    # constructors enforce the same guard (the seed example crashed with
-    # KeyError: 'k' instead, deep inside the prefill path)
+def test_disagg_guard_retired_for_all_archs():
+    """`disagg_unsupported_reason` is None for pattern-split (gemma3, vlm),
+    SSM/hybrid, and first-k-dense archs — the ROADMAP guard is gone."""
+    from repro.configs import ARCH_IDS
+    for arch in ARCH_IDS:
+        assert disagg_unsupported_reason(get_config(arch).reduced()) is None
+    # constructors admit the formerly rejected families (params untouched
+    # at construction time, so None suffices here)
     fab = Fabric(seed=0)
-    with pytest.raises(ValueError, match="pattern-split"):
-        Prefiller(fab, "p0", gemma, None, nic="efa")
-    with pytest.raises(ValueError, match="pattern-split"):
-        Decoder(fab, "d0", gemma, None, nic="efa")
+    for i, arch in enumerate(("gemma3-1b", "mamba2-780m",
+                              "deepseek-moe-16b")):
+        cfg = get_config(arch).reduced()
+        Prefiller(fab, f"p{i}", cfg, None, nic="efa")
+        Decoder(fab, f"d{i}", cfg, None, nic="efa")
+
+
+def test_scheduler_refuses_mismatched_schemas():
+    """A gemma3 prefiller and a stablelm decoder must never be paired: the
+    route is refused at the scheduler, not discovered mid-transfer."""
+    from repro.kvlayout import schema_from_config
+
+    fab = Fabric(seed=21)
+    ctrl = ControlPlane(fab, nic="efa", max_sweeps=16)
+    sched = Scheduler(fab, ctrl)
+    pf = WirePeer(fab, ctrl, "p0", "prefill", max_renewals=8)
+    dc = WirePeer(fab, ctrl, "d0", "decode", max_renewals=8)
+    # overwrite the advertised schemas with incompatible ones
+    pf_schema = schema_from_config(get_config("gemma3-1b").reduced())
+    dc_schema = schema_from_config(get_config("stablelm-3b").reduced())
+    fab.loop.schedule(50.0, lambda: pf.client.join(
+        nic="efa", kv_desc=pf.pool.desc, geom={}, n_pages=8,
+        schema=pf_schema.to_wire()))
+    fab.loop.schedule(50.0, lambda: dc.client.join(
+        nic="efa", kv_desc=dc.pool.desc, geom={}, n_pages=8,
+        schema=dc_schema.to_wire()))
+    fab.loop.schedule(200.0, lambda: sched.submit(np.arange(4), n_decode=1))
+    fab.run()
+    assert len(sched.routing_log) == 0
+    assert sched.schema_mismatches > 0
+    assert len(sched.backlog) == 1        # parked, never mis-routed
+    with pytest.raises(RuntimeError, match="schema mismatches"):
+        sched.check_drained()
+
+
+def test_least_loaded_policy_orders_by_load():
+    """policy="least-loaded" prefers the peer with the smallest effective
+    load (LEASE-RENEW-piggybacked inflight, or the scheduler's own
+    outstanding count when fresher); round-robin stays the default."""
+    fab = Fabric(seed=22)
+    ctrl = ControlPlane(fab, nic="efa", max_sweeps=4)
+    sched = Scheduler(fab, ctrl, policy="least-loaded")
+    assert Scheduler(fab, ctrl, node="sched2").policy == "round-robin"
+    with pytest.raises(ValueError, match="unknown policy"):
+        Scheduler(fab, ctrl, node="sched3", policy="busiest-first")
+    sched.view = MembershipView(3, (
+        _pf("a", inflight=2), _pf("b", inflight=0), _pf("c", inflight=1)))
+    order = [p.peer_id for p in sched._candidates("prefill")]
+    assert order == ["b", "c", "a"]
+    # the scheduler's own outstanding count dominates when fresher
+    sched._outstanding["b"] = 5
+    order = [p.peer_id for p in sched._candidates("prefill")]
+    assert order == ["c", "a", "b"]
+    # round-robin rotates instead
+    rr = Scheduler(fab, ctrl, node="sched4")
+    rr.view = sched.view
+    rr._rr["prefill"] = 1
+    assert [p.peer_id for p in rr._candidates("prefill")] == ["b", "c", "a"]
