@@ -2,34 +2,66 @@
 
 256 training GPUs (bf16, FSDP) -> 128 inference GPUs (fp8).  Uses synthetic
 (timing-only) writes — 1 TB of payload is pointless to materialise — while
-the schedule itself is the real planner output.  Baseline: rank0
-gather+broadcast, the pattern of existing RL frameworks (paper: 10-100 s).
+the schedule itself is the real planner output and the pipeline is the real
+``rlweights`` engine: watermark-bounded chunked staging, window-coalesced
+WrBatches, two-phase commit.  Baseline: rank0 gather+broadcast, the pattern
+of existing RL frameworks (paper: 10-100 s).
+
+Emits Table-5-style rows — p2p vs rank0, full vs delta, EFA vs CX7 — and a
+``BENCH_rlweights.json`` summary into the bench output dir for
+perf-trajectory tracking across PRs.
+
+Env knobs:
+  BENCH_RL_SMOKE=1    shrink the cluster ~8x for CI bench-smoke
+  BENCH_RL_COMPARE=1  also run the pre-PR per-route submission path
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+import json
+import os
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core import Fabric
 from repro.rlweights.planner import ParamMeta, compute_routing, schedule_stats
+from repro.rlweights.transfer import (arm_commit_gates, commit_imm, data_imm,
+                                      plan_chunks, run_pipelined_update)
 
 # pipeline stage rates calibrated to Table 5 (Kimi-K2, 256 ranks)
 H2D_GBPS = 43.0        # 8 GB/rank in 184 ms
 PREP_GBPS = 15.5       # full_tensor+fuse+quantise: 8 GB in ~520 ms
-N_TRAIN, N_INFER = 256, 128
-TOTAL_PARAMS = 1.04e12  # Kimi-K2
+INFER_TP = 8
+QUANT = 0.5            # bf16 -> fp8
+STAGE_SCALE = 1.0 / QUANT   # staged input bytes per wire byte
+
+SMOKE = os.environ.get("BENCH_RL_SMOKE") == "1"
+if SMOKE:
+    N_TRAIN, N_INFER, N_PARAMS = 32, 16, 8
+    TOTAL_PARAMS = 1.04e12 / 64
+else:
+    N_TRAIN, N_INFER, N_PARAMS = 256, 128, 61
+    TOTAL_PARAMS = 1.04e12      # Kimi-K2
+
+WATERMARK = 2 << 30    # staging memory bound per training rank
+CHUNK = 32 << 20       # wire bytes per staged chunk (sub-parameter)
+DIRTY_EVERY = 4        # delta mode: every 4th layer dirty (async fine-tune)
+
+OUT_DIR = os.environ.get(
+    "BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
 
 
-def _routes():
-    # one flat MeshGroup-style param per layer (61 layers) — the schedule
-    # granularity at which the paper's pipeline moves tensors
-    n_params = 61
-    per = int(TOTAL_PARAMS / n_params)
-    params = [ParamMeta(f"w{i}", (per,), 2) for i in range(n_params)]
-    return compute_routing(params, N_TRAIN, N_INFER, infer_tp=8,
-                           quant_ratio=0.5)
+def _params() -> List[ParamMeta]:
+    # one flat MeshGroup-style param per layer — the schedule granularity
+    # at which the paper's pipeline moves tensors
+    per = int(TOTAL_PARAMS / N_PARAMS)
+    return [ParamMeta(f"w{i}", (per,), 2) for i in range(N_PARAMS)]
+
+
+def _routes(changed: Optional[List[str]] = None):
+    return compute_routing(_params(), N_TRAIN, N_INFER, infer_tp=INFER_TP,
+                           quant_ratio=QUANT, changed=changed)
 
 
 def synthetic_cluster(n_train: int, n_infer: int, nic: str = "efa"):
@@ -44,22 +76,69 @@ def synthetic_cluster(n_train: int, n_infer: int, nic: str = "efa"):
     return fab, te, ie, descs
 
 
-def p2p_synthetic(nic: str = "efa") -> Dict[str, float]:
-    """Four-stage pipeline per (rank, param) task: H2D -> prepare -> RDMA.
+def p2p_synthetic(nic: str = "efa",
+                  changed: Optional[List[str]] = None) -> Dict[str, float]:
+    """The staged §5.2 pipeline over synthetic writes: chunked staging under
+    the watermark, one WrBatch per pipeline window, two-phase commit.  Each
+    FSDP source range is H2D'd + prepared ONCE and WRITTEN to every TP
+    replica (16x wire amplification — exactly why the paper needs
+    full-cluster bisection)."""
+    routes, _sizes = _routes(changed)
+    fab, te, ie, descs = synthetic_cluster(N_TRAIN, N_INFER, nic)
+    chunks_by_rank = plan_chunks(routes, chunk_bytes=CHUNK,
+                                 watermark_bytes=WATERMARK,
+                                 stage_scale=STAGE_SCALE)
 
-    H2D/prepare touch each rank's FSDP shard ONCE per parameter; the
-    prepared bytes are then WRITTEN to every TP replica (16x wire
-    amplification — exactly why the paper needs full-cluster bisection)."""
-    routes, sizes = _routes()
+    gates = arm_commit_gates(ie, chunks_by_rank, 0)
+
+    def make_submit(rank, pipe):
+        eng = te[rank]
+
+        def submit(window):
+            entries = []
+            for c in window:
+                left = {"n": len(c.targets)}
+
+                def done(c=c, left=left):
+                    left["n"] -= 1
+                    if left["n"] == 0:
+                        pipe.chunk_done_cb(c)
+
+                for ir, _doff in c.targets:
+                    entries.append((c.nbytes, data_imm(0), descs[ir], done))
+            eng.submit_synthetic_batch(entries)
+
+        return submit
+
+    stats = run_pipelined_update(
+        fab, chunks_by_rank, make_submit=make_submit,
+        commit_fn=lambda: te[0].submit_barrier(descs, commit_imm(0)),
+        watermark_bytes=WATERMARK, window_us=2.0, h2d=True,
+        h2d_gbps=H2D_GBPS, prep_gbps=PREP_GBPS)
+    out = {k: v for k, v in stats.items()}
+    out["total_ms"] = stats["total_us"] * 1e-3
+    out["h2d_ms"] = stats["h2d_us"] * 1e-3
+    out["prep_ms"] = stats["prep_us"] * 1e-3
+    out["committed"] = all(len(g.flips) == 1 for g in gates)
+    out.update(schedule_stats(routes, N_TRAIN, N_INFER,
+                              full_routes=_routes()[0] if changed else None))
+    return out
+
+
+def p2p_synthetic_prepr(nic: str = "efa") -> Dict[str, float]:
+    """The pre-PR path, kept for in-bench before/after: one
+    ``submit_synthetic_write`` per route at whole-(rank, param) prepare
+    granularity, no watermark, no batching, no commit."""
+    routes, _ = _routes()
     fab, te, ie, descs = synthetic_cluster(N_TRAIN, N_INFER, nic)
     by_rank_param: Dict[int, Dict[str, List]] = {}
     for r in routes:
         by_rank_param.setdefault(r.train_rank, {}).setdefault(r.param, []).append(r)
     stats = {"h2d_ms": 0.0, "prep_ms": 0.0, "writes": 0}
+    n_rep = N_INFER // INFER_TP
     for rank, per_param in by_rank_param.items():
         t_h2d = t_prep = 0.0
         for pname, rs in per_param.items():
-            n_rep = N_INFER // 8
             shard_in = 2 * sum(r.nbytes for r in rs) // n_rep   # bf16 shard
             t_h2d += (shard_in / H2D_GBPS) * 1e-3
             t_prep = max(t_prep, t_h2d) + (shard_in / PREP_GBPS) * 1e-3
@@ -72,12 +151,11 @@ def p2p_synthetic(nic: str = "efa") -> Dict[str, float]:
         stats["prep_ms"] = max(stats["prep_ms"], t_prep * 1e-3)
     t = fab.run()
     stats["total_ms"] = t * 1e-3
-    stats.update(schedule_stats(routes, N_TRAIN, N_INFER))
     return stats
 
 
 def rank0_synthetic(nic: str = "efa") -> Dict[str, float]:
-    routes, sizes = _routes()
+    routes, _ = _routes()
     fab, te, ie, descs = synthetic_cluster(N_TRAIN, N_INFER, nic)
     buf = np.zeros(1, np.uint8)
     _, d0 = te[0].reg_mr(buf)
@@ -87,9 +165,9 @@ def rank0_synthetic(nic: str = "efa") -> Dict[str, float]:
     fab.run()
     t_gather = fab.now
     # rank0 broadcasts each inference rank's fp8 shard (TP=8, EP-style 1/16)
-    out_bytes = int(TOTAL_PARAMS)  # fp8
+    out_bytes = int(TOTAL_PARAMS * 2 * QUANT)  # fp8
     for r in range(N_INFER):
-        te[0].submit_synthetic_write(out_bytes // 16, None, descs[r])
+        te[0].submit_synthetic_write(out_bytes // (2 * INFER_TP), None, descs[r])
     t = fab.run()
     return {"gather_ms": t_gather * 1e-3, "total_ms": t * 1e-3}
 
@@ -105,14 +183,61 @@ def run(report) -> None:
 
 
 def _run_inner(report) -> None:
-    p2p = p2p_synthetic()
-    report("rl_p2p_total", p2p["total_ms"] * 1e3,
-           f"us = {p2p['total_ms']:.0f}ms total (paper 1233ms), "
-           f"h2d {p2p['h2d_ms']:.0f}ms (paper 184), "
-           f"prep {p2p['prep_ms']:.0f}ms (paper 518+88), "
-           f"{p2p['writes']} writes (paper 1144)")
-    r0 = rank0_synthetic()
-    report("rl_rank0_total", r0["total_ms"] * 1e3,
-           f"us = {r0['total_ms'] / 1e3:.1f}s total (paper: 10-100s for "
-           f"existing frameworks); p2p speedup "
-           f"{r0['total_ms'] / p2p['total_ms']:.0f}x")
+    dirty = [f"w{i}" for i in range(0, N_PARAMS, DIRTY_EVERY)]
+    summary: Dict[str, Dict] = {}
+
+    for nic in ("efa", "cx7"):
+        suffix = "" if nic == "efa" else f"_{nic}"
+        p2p = p2p_synthetic(nic)
+        summary[f"p2p{suffix or '_efa'}"] = p2p
+        report(f"rl_p2p_total{suffix}", p2p["total_ms"] * 1e3,
+               f"us = {p2p['total_ms']:.0f}ms total (paper 1233ms on efa), "
+               f"h2d {p2p['h2d_ms']:.0f}ms (paper 184), "
+               f"prep {p2p['prep_ms']:.0f}ms (paper 518+88), "
+               f"{p2p['writes']} writes / {p2p['n_batches']} enqueues, "
+               f"peak staged {p2p['peak_staged_bytes'] / (1 << 30):.2f}GiB "
+               f"(wm {WATERMARK / (1 << 30):.0f}GiB), "
+               f"committed={p2p['committed']}")
+
+        delta = p2p_synthetic(nic, changed=dirty)
+        summary[f"p2p_delta{suffix or '_efa'}"] = delta
+        report(f"rl_p2p_delta{suffix}", delta["total_ms"] * 1e3,
+               f"us = {delta['total_ms']:.0f}ms for "
+               f"{len(dirty)}/{N_PARAMS} dirty layers "
+               f"({delta['delta_frac'] * 100:.0f}% of full bytes), "
+               f"{delta['writes']} writes, committed={delta['committed']}")
+
+        r0 = rank0_synthetic(nic)
+        summary[f"rank0{suffix or '_efa'}"] = r0
+        report(f"rl_rank0_total{suffix}", r0["total_ms"] * 1e3,
+               f"us = {r0['total_ms'] / 1e3:.1f}s total (paper: 10-100s for "
+               f"existing frameworks); p2p speedup "
+               f"{r0['total_ms'] / p2p['total_ms']:.0f}x")
+
+    if os.environ.get("BENCH_RL_COMPARE") == "1":
+        pre = p2p_synthetic_prepr("efa")
+        summary["p2p_prepr_efa"] = pre
+        report("rl_p2p_prepr", pre["total_ms"] * 1e3,
+               f"us = {pre['total_ms']:.0f}ms pre-PR per-route path "
+               f"({pre['writes']} writes, no watermark/batching/commit)")
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    doc = {
+        "bench": "rlweights",
+        "smoke": SMOKE,
+        "config": {"n_train": N_TRAIN, "n_infer": N_INFER,
+                   "infer_tp": INFER_TP, "n_params": N_PARAMS,
+                   "total_params": TOTAL_PARAMS, "quant_ratio": QUANT,
+                   "watermark_bytes": WATERMARK, "chunk_bytes": CHUNK,
+                   "dirty_every": DIRTY_EVERY},
+        "paper_ms": {"p2p": 1233, "rank0_low": 10_000, "rank0_high": 100_000},
+        "rows": {k: {kk: vv for kk, vv in v.items()
+                     if isinstance(vv, (int, float, bool))}
+                 for k, v in summary.items()},
+        "speedup_p2p_vs_rank0_efa":
+            summary["rank0_efa"]["total_ms"] / summary["p2p_efa"]["total_ms"],
+        "delta_frac": summary["p2p_delta_efa"].get("delta_frac"),
+    }
+    with open(os.path.join(OUT_DIR, "BENCH_rlweights.json"), "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")

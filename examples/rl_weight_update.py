@@ -1,11 +1,16 @@
 """RL rollout weight-update demo (paper §5).
 
 Part 1: small cluster with REAL bytes — plan a static routing schedule,
-execute P2P and rank0-gather/broadcast transfers, verify bit-exactness and
-compare virtual-time latency.
+execute the staged P2P pipeline (watermark-bounded chunked staging,
+window-coalesced WrBatches, two-phase commit) and the rank0
+gather/broadcast baseline, verify bit-exactness and compare virtual time.
 
-Part 2: Kimi-K2 scale (1T params, 256 -> 128 GPUs) with synthetic writes —
-reproduces the paper's 1.3 s claim and the ~100x gap.
+Part 2: async fine-tuning — a DELTA update moves only the dirty layers
+through the same pipeline; clean regions are never touched and the
+inference fleet still flips atomically.
+
+Part 3: Kimi-K2 scale (1T params, 256 -> 128 GPUs) with synthetic writes —
+reproduces the paper's 1.3 s claim and the ~100x gap to rank0.
 
     PYTHONPATH=src python examples/rl_weight_update.py
 """
@@ -16,7 +21,7 @@ from repro.rlweights import (ParamMeta, compute_routing, make_cluster,
                              p2p_transfer, rank0_transfer, schedule_stats,
                              verify_contents)
 
-# -- Part 1: real bytes --------------------------------------------------------
+# -- Part 1: real bytes, staged pipeline --------------------------------------
 params = [ParamMeta(f"layer{i}", (1024, 512), 2) for i in range(24)]  # 24 MB
 routes, sizes = compute_routing(params, n_train=8, n_infer=4, infer_tp=2,
                                 quant_ratio=0.5)
@@ -24,17 +29,37 @@ print("schedule:", schedule_stats(routes, 8, 4))
 
 cl = make_cluster(8, 4, max(sizes["train"].values()),
                   max(sizes["infer"].values()), nic="cx7")
-r_p2p = p2p_transfer(cl, routes)
+r_p2p = p2p_transfer(cl, routes, watermark_bytes=1 << 20, chunk_bytes=65536)
 assert verify_contents(cl, routes)
+assert r_p2p["committed"] and r_p2p["watermark_ok"]
 cl2 = make_cluster(8, 4, max(sizes["train"].values()),
                    max(sizes["infer"].values()), nic="cx7")
 r_r0 = rank0_transfer(cl2, routes)
 assert verify_contents(cl2, routes)
-print(f"P2P   : {r_p2p['total_us']:8.0f} us  ({r_p2p['writes']} writes, bit-exact)")
+print(f"P2P   : {r_p2p['total_us']:8.0f} us  "
+      f"({r_p2p['n_chunks']} chunks -> {r_p2p['writes']} writes in "
+      f"{r_p2p['n_batches']} enqueues, peak staged "
+      f"{r_p2p['peak_staged_bytes'] >> 10} KiB, "
+      f"commit flips {r_p2p['commits']}, bit-exact)")
 print(f"rank0 : {r_r0['total_us']:8.0f} us  (gather {r_r0['gather_us']:.0f} us)")
 print(f"speedup {r_r0['total_us'] / r_p2p['total_us']:.1f}x on an 8->4 toy cluster\n")
 
-# -- Part 2: trillion-parameter scale (synthetic) ---------------------------------
+# -- Part 2: delta update (async fine-tuning) ---------------------------------
+dirty = [f"layer{i}" for i in (3, 11, 19)]
+delta_routes, _ = compute_routing(params, n_train=8, n_infer=4, infer_tp=2,
+                                  quant_ratio=0.5, changed=dirty)
+# scribble fresh "fine-tuned" bytes into the dirty source ranges
+for r in delta_routes:
+    cl.train_bufs[r.train_rank][r.src_off:r.src_off + r.nbytes] ^= 0xA5
+r_delta = p2p_transfer(cl, delta_routes, watermark_bytes=1 << 20,
+                       chunk_bytes=65536, update_id=1)
+assert verify_contents(cl, delta_routes) and r_delta["committed"]
+d = schedule_stats(delta_routes, 8, 4, full_routes=routes)
+print(f"DELTA : {r_delta['total_us']:8.0f} us for {len(dirty)}/24 dirty "
+      f"layers — {d['delta_bytes']} of {d['full_bytes']} bytes "
+      f"({d['delta_frac'] * 100:.0f}%), second atomic flip per rank\n")
+
+# -- Part 3: trillion-parameter scale (synthetic) -----------------------------
 from benchmarks.bench_rlweights import p2p_synthetic, rank0_synthetic
 from repro.core.transport import Channel
 
@@ -42,7 +67,9 @@ Channel.MAX_CHUNKS = 2
 p2p = p2p_synthetic()
 print(f"Kimi-K2 1T, 256 bf16 -> 128 fp8 GPUs over 2x200G EFA:")
 print(f"  P2P pipelined: {p2p['total_ms']:.0f} ms "
-      f"(paper: 1233 ms; h2d {p2p['h2d_ms']:.0f} ms, prep {p2p['prep_ms']:.0f} ms)")
+      f"(paper: 1233 ms; h2d {p2p['h2d_ms']:.0f} ms, prep {p2p['prep_ms']:.0f} ms, "
+      f"peak staged {p2p['peak_staged_bytes'] / (1 << 30):.2f} GiB, "
+      f"committed={p2p['committed']})")
 r0 = rank0_synthetic()
 print(f"  rank0 gather+broadcast: {r0['total_ms'] / 1e3:.1f} s "
       f"-> {r0['total_ms'] / p2p['total_ms']:.0f}x slower (paper: >100x)")

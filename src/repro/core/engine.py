@@ -162,6 +162,9 @@ class TransferEngine:
         self.counters: Dict[int, ImmCounter] = {}
         self._recv_pools: Dict[int, List] = {}
         self._pending_sends: Dict[int, List] = {}
+        # device -> (WrBatch, created_at): SENDs submitted in the same loop
+        # entry coalesce into one enqueue (flushed ENQUEUE_US later)
+        self._send_batches: Dict[int, Tuple[WrBatch, float]] = {}
         self.batch_stats = BatchStats()
         for dev in range(num_devices):
             addr = NetAddr(node, dev)
@@ -212,7 +215,15 @@ class TransferEngine:
 
     def submit_send(self, addr: NetAddr, msg: bytes,
                     cb: OnDone = None, device: int = 0) -> None:
-        """RPC-style two-sided send; copies ``msg`` at submission."""
+        """RPC-style two-sided send; copies ``msg`` at submission.
+
+        SENDs ride a :class:`WrBatch` (§3.4): every send submitted in the
+        same event-loop entry joins the pending batch and the whole train is
+        posted by ONE flush ``ENQUEUE_US`` later — control-plane bursts
+        (view broadcasts, lease sweeps) pay one app->worker handoff instead
+        of one per message.  Submission order is preserved; per-WR posting
+        cost on the worker is unchanged.
+        """
         payload = bytes(msg)
         src = self.groups[device]
         dst_group, dst_engine = self.fabric._lookup(addr)
@@ -224,8 +235,24 @@ class TransferEngine:
                     imm=None, on_delivered=on_delivered,
                     on_sent=(lambda now: _fire(cb)) if cb is not None else None,
                     nbytes=len(payload))
-        # SEND/RECV uses only the first NIC in the group.
-        self.loop.schedule(ENQUEUE_US, lambda: src.post_write(dst_group, op, nic_index=0))
+        pending = self._send_batches.get(device)
+        if pending is not None and pending[1] == self.loop.now:
+            # SEND/RECV uses only the first NIC in the group.
+            pending[0].add(op, dst_group, nic_index=0)
+            return
+        batch = WrBatch(src)
+        batch.add(op, dst_group, nic_index=0)
+        self._send_batches[device] = (batch, self.loop.now)
+
+        def flush() -> None:
+            cur = self._send_batches.get(device)
+            if cur is not None and cur[0] is batch:
+                del self._send_batches[device]
+            # batch_stats stays a one-sided-WRITE submission metric
+            # (bench_ablation/kvlayout hot-path assertions count on it)
+            batch.post()
+
+        self.loop.schedule(ENQUEUE_US, flush)
 
     # -- completion notification --------------------------------------------
     def expect_imm_count(self, imm: int, count: int,
@@ -400,6 +427,25 @@ class TransferEngine:
         batch = WrBatch(src_group)
         self._add_logical_write(batch, BatchState(1, on_done), None, dst, 0,
                                 imm, stripe=True, synthetic_bytes=nbytes)
+        self._enqueue_batch(batch)
+
+    def submit_synthetic_batch(self, writes: Sequence[Tuple[int, Optional[int],
+                                                            MrDesc, OnDone]],
+                               device: int = 0) -> None:
+        """Batched timing-only writes: N ``(nbytes, imm, desc, on_done)``
+        entries templated into ONE WrBatch / event-loop entry.  Each entry
+        keeps ``submit_synthetic_write`` semantics (NIC striping, its own
+        immediate and sender-side ``on_done``) — only the submission is
+        coalesced, mirroring ``submit_scatters`` for the payload-free path
+        used by cluster-scale benches."""
+        src_group = self.groups[device]
+        if not writes:
+            return
+        batch = WrBatch(src_group)
+        for nbytes, imm, desc, on_done in writes:
+            self._add_logical_write(batch, BatchState(1, on_done), None,
+                                    desc, 0, imm, stripe=True,
+                                    synthetic_bytes=nbytes)
         self._enqueue_batch(batch)
 
     def submit_barrier(self, dsts: Sequence[MrDesc], imm: int,

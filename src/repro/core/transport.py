@@ -81,8 +81,22 @@ class Channel:
                 arrive = max(arrive, self._last_delivery)
                 self._last_delivery = arrive
             else:
-                # SRD: deterministic pseudo-random reordering jitter.
-                arrive = arrive + float(self.rng.uniform(0.0, self.spec.srd_jitter_us))
+                # SRD: deterministic pseudo-random reordering jitter.  When
+                # MAX_CHUNKS makes a coarse chunk span several wire packets
+                # (GB-scale writes), the chunk is only fully visible once its
+                # slowest packet lands — draw per-packet jitter and take the
+                # max, instead of pretending the whole span is one packet.
+                # Single-packet chunks keep the exact scalar draw (bit-
+                # identical RNG stream for every sub-571KB EFA write).
+                lo_ = idx * per
+                npkt = max(1, (min(nbytes, lo_ + per) - lo_ + mtu - 1) // mtu)
+                if npkt == 1:
+                    arrive = arrive + float(self.rng.uniform(0.0, self.spec.srd_jitter_us))
+                else:
+                    # max of npkt iid U(0, j) via inverse CDF — one draw,
+                    # same distribution, O(1) for millions of packets
+                    arrive = arrive + self.spec.srd_jitter_us * float(
+                        self.rng.random()) ** (1.0 / npkt)
 
             def land() -> None:
                 if payload is not None and op.dst_region is not None:

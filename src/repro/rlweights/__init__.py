@@ -1,7 +1,11 @@
 from .planner import ParamMeta, Route, compute_routing, schedule_stats
-from .transfer import (Cluster, make_cluster, p2p_transfer, rank0_transfer,
+from .transfer import (Cluster, CommitGate, StageChunk, arm_commit_gates,
+                       commit_imm, data_imm, make_cluster, p2p_transfer,
+                       plan_chunks, rank0_transfer, run_pipelined_update,
                        verify_contents)
 
 __all__ = ["ParamMeta", "Route", "compute_routing", "schedule_stats",
-           "Cluster", "make_cluster", "p2p_transfer", "rank0_transfer",
+           "Cluster", "CommitGate", "StageChunk", "arm_commit_gates",
+           "commit_imm", "data_imm", "make_cluster", "p2p_transfer",
+           "plan_chunks", "rank0_transfer", "run_pipelined_update",
            "verify_contents"]

@@ -18,7 +18,7 @@ Shardings modeled:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -56,8 +56,9 @@ def fsdp_ranges(total: int, n: int) -> List[Tuple[int, int]]:
 
 
 def compute_routing(params: List[ParamMeta], n_train: int, n_infer: int,
-                    infer_tp: int = 1,
-                    quant_ratio: float = 1.0) -> Tuple[List[Route], Dict[str, int]]:
+                    infer_tp: int = 1, quant_ratio: float = 1.0,
+                    changed: Optional[Iterable[str]] = None,
+                    ) -> Tuple[List[Route], Dict[str, int]]:
     """Overlap-intersect FSDP source ranges with TP destination ranges.
 
     ``quant_ratio``: output bytes per input byte (bf16 -> fp8 => 0.5); the
@@ -65,30 +66,43 @@ def compute_routing(params: List[ParamMeta], n_train: int, n_infer: int,
     ``infer_tp``: TP degree of the inference fleet; each parameter is split
     into ``infer_tp`` contiguous byte ranges, and the fleet holds
     n_infer/infer_tp replicas of each range.
+    ``changed``: delta mode for async fine-tuning — when given, routes are
+    emitted ONLY for the named (dirty) parameters, while the source and
+    destination cursors still advance over the full parameter list, so every
+    delta route is byte-identical (same offsets, same sizes) to the full
+    plan's route for that parameter: inference buffers keep the full-state
+    layout and clean regions are simply never touched.
     Returns (routes, dst_offsets per (param, infer_rank))."""
     routes: List[Route] = []
     n_replica = n_infer // infer_tp
     dst_cursor = [0] * n_infer
     src_cursor = [0] * n_train
+    dirty = None if changed is None else frozenset(changed)
+    if dirty is not None:
+        unknown = dirty - {pm.name for pm in params}
+        if unknown:
+            raise ValueError(f"changed names not in params: {sorted(unknown)}")
 
     for pm in params:
+        emit = dirty is None or pm.name in dirty
         out_bytes = int(pm.nbytes * quant_ratio)
         src = fsdp_ranges(out_bytes, n_train)       # ranges in OUTPUT space
         dst = fsdp_ranges(out_bytes, infer_tp)      # TP split of the output
-        for t, (slo, shi) in enumerate(src):
-            if shi <= slo:
-                continue
-            for tp, (dlo, dhi) in enumerate(dst):
-                lo, hi = max(slo, dlo), min(shi, dhi)
-                if hi <= lo:
+        if emit:
+            for t, (slo, shi) in enumerate(src):
+                if shi <= slo:
                     continue
-                for rep in range(n_replica):
-                    ir = rep * infer_tp + tp
-                    routes.append(Route(
-                        param=pm.name, train_rank=t, infer_rank=ir,
-                        src_off=src_cursor[t] + (lo - slo),
-                        dst_off=dst_cursor[ir] + (lo - dlo),
-                        nbytes=hi - lo))
+                for tp, (dlo, dhi) in enumerate(dst):
+                    lo, hi = max(slo, dlo), min(shi, dhi)
+                    if hi <= lo:
+                        continue
+                    for rep in range(n_replica):
+                        ir = rep * infer_tp + tp
+                        routes.append(Route(
+                            param=pm.name, train_rank=t, infer_rank=ir,
+                            src_off=src_cursor[t] + (lo - slo),
+                            dst_off=dst_cursor[ir] + (lo - dlo),
+                            nbytes=hi - lo))
         for t, (slo, shi) in enumerate(src):
             src_cursor[t] += max(0, shi - slo)
         for tp in range(infer_tp):
@@ -101,16 +115,26 @@ def compute_routing(params: List[ParamMeta], n_train: int, n_infer: int,
     return routes, sizes
 
 
-def schedule_stats(routes: List[Route], n_train: int, n_infer: int) -> Dict:
+def schedule_stats(routes: List[Route], n_train: int, n_infer: int,
+                   full_routes: Optional[List[Route]] = None) -> Dict:
+    """Per-rank byte loads and balance.  Pass the full plan's routes as
+    ``full_routes`` when ``routes`` is a delta plan to also report delta vs
+    full wire bytes (the async fine-tuning saving)."""
     per_train = np.zeros(n_train, np.int64)
     per_infer = np.zeros(n_infer, np.int64)
     for r in routes:
         per_train[r.train_rank] += r.nbytes
         per_infer[r.infer_rank] += r.nbytes
-    return {
+    stats = {
         "n_routes": len(routes),
         "total_bytes": int(per_train.sum()),
         "max_train_bytes": int(per_train.max()),
         "max_infer_bytes": int(per_infer.max()),
         "balance": float(per_train.max() / max(1, per_train.mean())),
     }
+    if full_routes is not None:
+        full = sum(r.nbytes for r in full_routes)
+        stats["delta_bytes"] = stats["total_bytes"]
+        stats["full_bytes"] = int(full)
+        stats["delta_frac"] = stats["total_bytes"] / max(1, full)
+    return stats

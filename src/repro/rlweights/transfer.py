@@ -1,33 +1,64 @@
-"""Weight-transfer execution: pipelined P2P vs rank0 gather+broadcast (§5).
+"""Weight-update execution: the staged P2P pipeline vs rank0 gather+broadcast.
 
-Two executors over the simulated fabric:
+``p2p_transfer`` is the paper's §5.2 engine, rebuilt around three ideas:
 
-* ``p2p_transfer`` — the paper's approach.  Every training rank WRITEs its
-  routed byte ranges directly to inference ranks, with the 4-stage pipeline
-  (H2D memcpy -> prepare/quantise -> RDMA -> barrier) overlapped per task
-  and a GPU-memory watermark limiting in-flight tasks.
-* ``rank0_transfer`` — the baseline used by existing RL frameworks: all
-  shards are gathered to training rank 0, then broadcast to inference
-  rank 0s — bottlenecked by rank 0's NIC.
+* **Watermark-bounded chunked staging** — every route is split into chunks
+  small enough that ``watermark_bytes`` of staging memory bounds what is in
+  flight per training rank.  The H2D memcpy engine and the GPU prepare
+  (full_tensor + fuse + quantise) are serialised resources; chunks move
+  through H2D -> prepare -> NIC as a pipeline, so stage k of chunk i
+  overlaps stage k+1 of chunk i-1 at sub-parameter granularity.  Staging
+  memory is reserved at admission and released on the chunk's sender-side
+  completion — the watermark is honoured exactly (the seed accepted the
+  argument and ignored it).
+* **Window-coalesced WrBatches** — chunks whose prepare completes within
+  the same pipeline window are templated into ONE ``WrBatch`` via
+  ``submit_scatters`` (one app->worker enqueue for the whole window),
+  retiring the per-route closure + per-submit enqueue of the old path.
+  Replicas are deduplicated at staging: a source range is H2D'd and
+  prepared ONCE, then WRITTEN to every TP replica.
+* **Two-phase commit** — inference ranks arm a :class:`CommitGate` per
+  update; data WRITEs carry ``data_imm(update_id)``, and once every data
+  WRITE has a sender-side completion the coordinator posts a
+  ``submit_barrier`` carrying ``commit_imm(update_id)``.  A rank flips to
+  the new version exactly once, when BOTH its expected data count and the
+  commit write have fully landed — in any arrival order (the paper's
+  no-ordering contract: SRD may deliver the commit before late data).
+
+``rank0_transfer`` stays the baseline used by existing RL frameworks: all
+shards gathered to training rank 0, then broadcast — bottlenecked by rank
+0's NIC (paper: 10-100 s vs 1.3 s).
 
 Both move REAL bytes through the fabric (content validated by tests); the
-virtual clock gives the latency comparison (paper: 1.3 s vs 10-100 s).
+virtual clock gives the latency comparison.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core import Fabric, MrDesc, MrHandle, TransferEngine
+from ..core import Fabric, MrDesc, MrHandle, ScatterDst, TransferEngine
 from .planner import ParamMeta, Route
 
 # Pipeline stage rates (paper Table 5 calibration)
 H2D_GBPS = 25.0            # PCIe H2D memcpy
 PREP_GBPS = 150.0          # full_tensor + fusion + quantise, GPU-side
-POST_US = 23.0             # per-WRITE submit overhead (Table 5: 26ms/1144)
+DEFAULT_WINDOW_US = 2.0    # pipeline window for WrBatch coalescing
+
+# Immediate-value block for weight updates: data and commit immediates are
+# distinct per update_id so back-to-back updates never alias counters.
+IMM_BASE = 0x52570000
+
+
+def data_imm(update_id: int) -> int:
+    return IMM_BASE + 2 * update_id
+
+
+def commit_imm(update_id: int) -> int:
+    return IMM_BASE + 2 * update_id + 1
 
 
 @dataclass
@@ -59,43 +90,318 @@ def make_cluster(n_train: int, n_infer: int, shard_bytes: int,
     return Cluster(fab, te, ie, tb, ib, th, idesc)
 
 
-def p2p_transfer(cluster: Cluster, routes: List[Route], *,
-                 watermark_bytes: int = 2 << 30,
-                 h2d: bool = True) -> Dict[str, float]:
-    """Pipelined point-to-point transfer.  Returns stage timings (us)."""
-    fab = cluster.fabric
-    by_rank: Dict[int, List[Route]] = {}
+# ---------------------------------------------------------------------------
+# two-phase commit (consumer side)
+# ---------------------------------------------------------------------------
+
+class CommitGate:
+    """Per-inference-rank version gate for two-phase weight commits.
+
+    ``arm`` registers two ImmCounter expectations: ``n_data`` WRITEs
+    carrying the update's data immediate, and the single commit-barrier
+    write.  The version flips exactly once, when both have fired —
+    correctness never depends on the order the transport delivered them.
+    """
+
+    def __init__(self, engine: TransferEngine, device: int = 0):
+        self.engine = engine
+        self.device = device
+        self.version = 0
+        self.flips: List[Tuple[float, int]] = []   # (virtual time, update_id)
+
+    def arm(self, update_id: int, n_data: int,
+            on_flip: Optional[Callable[[int], None]] = None) -> None:
+        state = {"data": False, "commit": False}
+
+        def check(kind: str) -> None:
+            state[kind] = True
+            if state["data"] and state["commit"]:
+                self.version += 1
+                self.flips.append((self.engine.fabric.now, update_id))
+                if on_flip is not None:
+                    on_flip(update_id)
+
+        self.engine.expect_imm_count(data_imm(update_id), n_data,
+                                     lambda: check("data"), device=self.device)
+        self.engine.expect_imm_count(commit_imm(update_id), 1,
+                                     lambda: check("commit"), device=self.device)
+
+
+def arm_commit_gates(engines: Sequence[TransferEngine],
+                     chunks_by_rank: Dict[int, List["StageChunk"]],
+                     update_id: int) -> List[CommitGate]:
+    """Arm one :class:`CommitGate` per inference engine with its expected
+    data-write count under ``chunks_by_rank`` (one WRITE per chunk target)
+    — shared by the real-bytes executor and the synthetic bench so the
+    commit protocol has a single definition."""
+    n_data = [0] * len(engines)
+    for chunks in chunks_by_rank.values():
+        for c in chunks:
+            for ir, _ in c.targets:
+                n_data[ir] += 1
+    gates = []
+    for ir, eng in enumerate(engines):
+        gate = CommitGate(eng)
+        gate.arm(update_id, n_data[ir])
+        gates.append(gate)
+    return gates
+
+
+# ---------------------------------------------------------------------------
+# staged pipeline (producer side)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StageChunk:
+    """One staged unit: a contiguous sub-parameter source range, prepared
+    once and WRITTEN to every replica target."""
+
+    param: str
+    src_off: int                              # train-shard offset (out space)
+    nbytes: int                               # wire bytes per target
+    stage_bytes: int                          # staging footprint (input side)
+    targets: Tuple[Tuple[int, int], ...]      # (infer_rank, dst_off)
+
+
+def plan_chunks(routes: Sequence[Route], *, chunk_bytes: Optional[int],
+                watermark_bytes: int,
+                stage_scale: float = 1.0) -> Dict[int, List[StageChunk]]:
+    """Group a route schedule into per-rank staged chunks.
+
+    Routes sharing ``(train_rank, param, src_off, nbytes)`` are TP replicas
+    of one source range: they are staged (H2D + prepare) once and fanned
+    out on the wire.  Each range is then split into chunks of at most
+    ``chunk_bytes`` wire bytes, additionally capped so that one chunk's
+    staging footprint (``stage_scale`` input bytes per wire byte, e.g. 2.0
+    for bf16 -> fp8) never exceeds the watermark on its own.
+    """
+    if watermark_bytes <= 0:
+        raise ValueError("watermark_bytes must be positive")
+    cap = max(1, int(watermark_bytes / max(stage_scale, 1e-9)))
+    eff_chunk = cap if chunk_bytes is None else max(1, min(chunk_bytes, cap))
+
+    groups: Dict[int, Dict[Tuple[str, int, int], List[Tuple[int, int]]]] = {}
     for r in routes:
-        by_rank.setdefault(r.train_rank, []).append(r)
+        key = (r.param, r.src_off, r.nbytes)
+        groups.setdefault(r.train_rank, {}).setdefault(key, []).append(
+            (r.infer_rank, r.dst_off))
 
-    stats = {"h2d_us": 0.0, "prep_us": 0.0, "writes": 0}
-    done = {"sent": 0, "need": len(routes)}
+    chunks: Dict[int, List[StageChunk]] = {}
+    for rank, ranges in groups.items():
+        out = chunks.setdefault(rank, [])
+        for (param, src_off, nbytes), targets in ranges.items():
+            off = 0
+            while off < nbytes:
+                n = min(eff_chunk, nbytes - off)
+                out.append(StageChunk(
+                    param=param, src_off=src_off + off, nbytes=n,
+                    stage_bytes=max(1, int(n * stage_scale)),
+                    targets=tuple((ir, doff + off) for ir, doff in targets)))
+                off += n
+    return chunks
 
-    for rank, rs in by_rank.items():
+
+class RankPipeline:
+    """Event-driven H2D -> prepare -> post pipeline for ONE training rank.
+
+    H2D and prepare are serialised engines (``busy-until`` clocks); chunks
+    are admitted FIFO whenever their staging footprint fits under the
+    watermark, and released on sender-side completion.  Prepared chunks
+    collect into a window; one flush per window hands the whole batch to
+    the submit callback (-> one WrBatch enqueue).
+    """
+
+    def __init__(self, fabric: Fabric, chunks: Sequence[StageChunk], *,
+                 watermark_bytes: int, window_us: float,
+                 submit_window: Callable[[List[StageChunk]], None],
+                 h2d: bool = True, h2d_gbps: float = H2D_GBPS,
+                 prep_gbps: float = PREP_GBPS):
+        self.loop = fabric.loop
+        self.queue = list(chunks)[::-1]        # pop() from the tail = FIFO
+        self.watermark = watermark_bytes
+        self.window_us = window_us
+        self.submit_window = submit_window
+        self.h2d = h2d
+        self.h2d_gbps = h2d_gbps
+        self.prep_gbps = prep_gbps
+        self.staged = 0
+        self.peak_staged = 0
+        self.h2d_busy = self.prep_busy = self.loop.now
+        self.h2d_work_us = 0.0    # pure stage service time (Table-5 style:
+        self.prep_work_us = 0.0   # excludes watermark-admission stalls)
+        self.n_flushes = 0
+        self._ready: List[StageChunk] = []
+        self._flush_scheduled = False
+        # assigned by run_pipelined_update: shared sent-accounting + release
+        self.chunk_done_cb: Callable[[StageChunk], None] = self.chunk_sent
+
+    def start(self) -> None:
+        self._admit()
+
+    def _admit(self) -> None:
+        while self.queue:
+            c = self.queue[-1]
+            if self.staged + c.stage_bytes > self.watermark:
+                return                       # FIFO: wait for a release
+            self.queue.pop()
+            self.staged += c.stage_bytes
+            self.peak_staged = max(self.peak_staged, self.staged)
+            h2d_us = (c.stage_bytes / self.h2d_gbps) * 1e-3 if self.h2d else 0.0
+            prep_us = (c.stage_bytes / self.prep_gbps) * 1e-3
+            self.h2d_work_us += h2d_us
+            self.prep_work_us += prep_us
+            self.h2d_busy = max(self.loop.now, self.h2d_busy) + h2d_us
+            t_ready = max(self.prep_busy, self.h2d_busy) + prep_us
+            self.prep_busy = t_ready
+            self.loop.schedule_at(t_ready, lambda c=c: self._prepared(c))
+
+    def _prepared(self, c: StageChunk) -> None:
+        self._ready.append(c)
+        if not self._flush_scheduled:
+            self._flush_scheduled = True
+            self.loop.schedule(self.window_us, self._flush)
+
+    def _flush(self) -> None:
+        self._flush_scheduled = False
+        window, self._ready = self._ready, []
+        if window:
+            self.n_flushes += 1
+            self.submit_window(window)
+
+    def chunk_sent(self, c: StageChunk) -> None:
+        """Sender-side completion of every WRITE of ``c``: staging freed."""
+        self.staged -= c.stage_bytes
+        self._admit()
+
+    @property
+    def h2d_total_us(self) -> float:
+        return self.h2d_work_us
+
+    @property
+    def prep_total_us(self) -> float:
+        return self.prep_work_us
+
+
+def run_pipelined_update(
+        fabric: Fabric, chunks_by_rank: Dict[int, List[StageChunk]], *,
+        make_submit: Callable[[int, "RankPipeline"],
+                              Callable[[List[StageChunk]], None]],
+        commit_fn: Optional[Callable[[], None]],
+        watermark_bytes: int, window_us: float, h2d: bool,
+        h2d_gbps: float, prep_gbps: float) -> Dict[str, float]:
+    """Drive every rank's pipeline to completion and (optionally) commit.
+
+    ``make_submit(rank, pipe)`` returns the window-flush callback that
+    actually posts the chunk WRITEs; it must arrange for
+    ``pipe.chunk_done_cb(c)`` to run on each chunk's sender-side completion
+    — wiring kept in the callers so the real-bytes and synthetic paths
+    share this exact scheduler.  ``commit_fn`` is invoked once, after every
+    chunk of every rank has sender-side completions.
+    """
+    pipes: Dict[int, RankPipeline] = {}
+    state = {"remaining": sum(len(v) for v in chunks_by_rank.values()),
+             "writes_sent": 0}
+
+    def chunk_done(pipe: RankPipeline, c: StageChunk) -> None:
+        pipe.chunk_sent(c)
+        state["writes_sent"] += len(c.targets)
+        state["remaining"] -= 1
+        if state["remaining"] == 0 and commit_fn is not None:
+            commit_fn()
+
+    for rank, chunks in chunks_by_rank.items():
+        pipe = RankPipeline(
+            fabric, chunks, watermark_bytes=watermark_bytes,
+            window_us=window_us, h2d=h2d, h2d_gbps=h2d_gbps,
+            prep_gbps=prep_gbps,
+            submit_window=lambda w: None)      # bound just below
+        pipe.submit_window = make_submit(rank, pipe)
+        pipe.chunk_done_cb = lambda c, pipe=pipe: chunk_done(pipe, c)
+        pipes[rank] = pipe
+
+    t0 = fabric.now
+    for pipe in pipes.values():
+        pipe.start()
+    if state["remaining"] == 0 and commit_fn is not None:
+        commit_fn()                            # empty (all-clean delta) update
+    t_end = fabric.run()
+
+    n_chunks = sum(len(v) for v in chunks_by_rank.values())
+    return {
+        "total_us": t_end - t0,
+        "h2d_us": max((p.h2d_total_us for p in pipes.values()), default=0.0),
+        "prep_us": max((p.prep_total_us for p in pipes.values()), default=0.0),
+        "writes": state["writes_sent"],
+        "n_chunks": n_chunks,
+        "n_batches": sum(p.n_flushes for p in pipes.values()),
+        "peak_staged_bytes": max((p.peak_staged for p in pipes.values()),
+                                 default=0),
+        "watermark_ok": all(p.peak_staged <= watermark_bytes
+                            for p in pipes.values()),
+        "all_sent": state["remaining"] == 0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
+
+def p2p_transfer(cluster: Cluster, routes: List[Route], *,
+                 watermark_bytes: int = 2 << 30, h2d: bool = True,
+                 chunk_bytes: Optional[int] = None,
+                 window_us: float = DEFAULT_WINDOW_US,
+                 stage_scale: float = 1.0,
+                 h2d_gbps: float = H2D_GBPS, prep_gbps: float = PREP_GBPS,
+                 update_id: int = 0, commit: bool = True) -> Dict[str, float]:
+    """Pipelined point-to-point weight update.  Returns stage timings (us).
+
+    Every training rank runs the watermark-bounded chunk pipeline; windows
+    of prepared chunks post as single WrBatches (``submit_scatters``, one
+    group per chunk so staging frees per chunk); with ``commit=True`` the
+    update ends with the two-phase commit barrier and the returned stats
+    carry per-rank flip records ("commits").
+    """
+    fab = cluster.fabric
+    chunks_by_rank = plan_chunks(routes, chunk_bytes=chunk_bytes,
+                                 watermark_bytes=watermark_bytes,
+                                 stage_scale=stage_scale)
+
+    gates: List[CommitGate] = []
+    if commit:
+        gates = arm_commit_gates(cluster.infer_engines, chunks_by_rank,
+                                 update_id)
+
+    imm = data_imm(update_id) if commit else None
+
+    def make_submit(rank: int, pipe: RankPipeline):
         eng = cluster.train_engines[rank]
         handle = cluster.train_handles[rank]
-        # per-rank pipeline: stage k+1 of task i overlaps stage k of task i+1
-        t_h2d, t_prep = 0.0, 0.0
-        for r in rs:
-            h2d_us = (r.nbytes / H2D_GBPS) * 1e-3 if h2d else 0.0
-            prep_us = (r.nbytes / PREP_GBPS) * 1e-3
-            t_h2d = t_h2d + h2d_us                 # H2D engine serialises
-            t_prep = max(t_prep, t_h2d) + prep_us  # GPU prepare after H2D
-            stats["h2d_us"] = max(stats["h2d_us"], t_h2d)
-            stats["prep_us"] = max(stats["prep_us"], t_prep)
 
-            def submit(r=r, eng=eng, handle=handle):
-                eng.submit_single_write(
-                    r.nbytes, None, (handle, r.src_off),
-                    (cluster.infer_descs[r.infer_rank], r.dst_off),
-                    on_done=lambda: done.__setitem__("sent", done["sent"] + 1))
+        def submit(window: List[StageChunk]) -> None:
+            eng.submit_scatters([
+                (handle,
+                 [ScatterDst(len=c.nbytes, src=c.src_off,
+                             dst=(cluster.infer_descs[ir], doff))
+                  for ir, doff in c.targets],
+                 imm, (lambda c=c: pipe.chunk_done_cb(c)))
+                for c in window])
 
-            fab.loop.schedule(t_prep, submit)
-            stats["writes"] += 1
+        return submit
 
-    t_end = fab.run()
-    stats["total_us"] = t_end
-    stats["all_sent"] = done["sent"] == done["need"]
+    def commit_fn() -> None:
+        cluster.train_engines[0].submit_barrier(
+            list(cluster.infer_descs), commit_imm(update_id))
+
+    stats = run_pipelined_update(
+        fab, chunks_by_rank,
+        make_submit=make_submit,
+        commit_fn=commit_fn if commit else None,
+        watermark_bytes=watermark_bytes, window_us=window_us, h2d=h2d,
+        h2d_gbps=h2d_gbps, prep_gbps=prep_gbps)
+    if commit:
+        stats["commits"] = [len(g.flips) for g in gates]
+        stats["committed"] = all(
+            len(g.flips) == 1 and g.flips[0][1] == update_id for g in gates)
     return stats
 
 

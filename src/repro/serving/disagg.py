@@ -147,6 +147,7 @@ class Prefiller:
         self.alive = True
         self.draining = False
         self.inflight = 0
+        self.inflight_slots = 0   # KV pool slots staged for in-flight reqs
         self.served = 0
         self._busy_until = 0.0
         self.engine.submit_recvs(1 << 16, 8, self._on_msg)
@@ -157,7 +158,10 @@ class Prefiller:
                 peer_id or node, "prefill", renew_us=renew_us,
                 max_renewals=max_renewals,
                 alive_fn=lambda: self.alive,
-                inflight_fn=lambda: self.inflight,
+                # piggybacked load is POOL-SLOT pressure, not request count:
+                # the scheduler's least-loaded policy compares it with its
+                # own slot-weighted outstanding ledger (same units)
+                inflight_fn=lambda: self.inflight_slots,
                 free_pages_fn=lambda: len(self.pool._free),
                 on_drain=self._on_drain)
             self.client.join(nic=nic, kv_desc=self.pool.desc,
@@ -220,6 +224,7 @@ class Prefiller:
         plan = self._plan(S)
         t_start = self.fabric.now
         self.inflight += 1
+        self.inflight_slots += plan.n_slots
         self.served += 1
 
         # One request occupies the GPU at a time: queue behind _busy_until.
@@ -289,11 +294,13 @@ class Prefiller:
             if req.request_id in self._cancelled:
                 self.pool.free(local_pages)
                 self.inflight -= 1
+                self.inflight_slots -= plan.n_slots
                 self._maybe_finish_drain()
                 return
             if cnt["done"] >= total_writes:
                 self.pool.free(local_pages)
                 self.inflight -= 1
+                self.inflight_slots -= plan.n_slots
                 self.stats[f"req{req.request_id}_prefill_us"] = \
                     self.fabric.now - t_start
                 self._maybe_finish_drain()
@@ -344,7 +351,8 @@ class Decoder:
                 peer_id or node, "decode", renew_us=renew_us,
                 max_renewals=max_renewals,
                 alive_fn=lambda: self.alive,
-                inflight_fn=lambda: len(self._pending),
+                inflight_fn=lambda: sum(st["plan"].n_slots
+                                        for st in self._pending.values()),
                 free_pages_fn=lambda: len(self.pool._free),
                 on_drain=self._on_drain)
             self.client.join(nic=nic, kv_desc=self.pool.desc,

@@ -22,7 +22,11 @@ Routing policy is a knob: ``policy="round-robin"`` (default) rotates
 through the routable peers; ``policy="least-loaded"`` orders them by load
 — the ``inflight`` signal piggybacked on LEASE-RENEWs (refreshed into
 views at every epoch bump) combined with this scheduler's own outstanding
-count per peer, which is exact between view refreshes.
+ledger, which is exact between view refreshes.  The local ledger weights
+every routed request by its ``TransferPlan.n_slots`` on the chosen
+decoder's advertised ``KvSchema`` — actual KV-pool pressure — so a peer
+holding one 4000-token prompt is not considered "less loaded" than one
+holding three 20-token prompts (schema-less peers weigh 1 per request).
 
 ``routing_log`` records ``(rid, epoch, prefiller, decoder)`` per route so
 tests and benchmarks can prove that all routing went through epoch views.
@@ -39,7 +43,7 @@ import numpy as np
 from ..core import Fabric
 from ..ctrl import ControlPlane, MembershipView
 from ..ctrl import messages as m
-from ..kvlayout import DECODE_MARGIN
+from ..kvlayout import DECODE_MARGIN, KvSchema, TransferPlan
 
 TTFT_EMA_ALPHA = 0.3
 
@@ -60,9 +64,11 @@ class Scheduler:
         self.view_epochs: List[int] = []       # every accepted epoch, in order
         self._rr = {"prefill": 0, "decode": 0}
         self._req = itertools.count()
-        # locally routed, not-yet-done requests per peer id (exact between
-        # view refreshes; the view's inflight is the cross-scheduler signal)
+        # locally routed, not-yet-done load per peer id, in KV pool slots
+        # (exact between view refreshes; the view's inflight is the
+        # cross-scheduler signal)
         self._outstanding: Dict[str, int] = {}
+        self._slot_cache: Dict[Tuple[str, int], int] = {}
         self.schema_mismatches = 0
         # (rid, input_ids, n_decode, attempt, vision_emb); appendleft on
         # re-route
@@ -114,8 +120,20 @@ class Scheduler:
     def _load(self, p) -> int:
         """Effective load of a peer: the LEASE-RENEW-piggybacked inflight
         captured at the last epoch bump, or this scheduler's own
-        outstanding count when that is fresher."""
+        slot-weighted outstanding ledger when that is fresher."""
         return max(p.inflight, self._outstanding.get(p.peer_id, 0))
+
+    def _req_slots(self, peer, seq_len: int) -> int:
+        """Pool-pressure weight of one request: the KV pool slots its
+        transfer plan occupies on ``peer`` (1 for schema-less peers)."""
+        if peer.schema is None:
+            return 1
+        key = (peer.peer_id, seq_len)
+        n = self._slot_cache.get(key)
+        if n is None:
+            plan = TransferPlan(KvSchema.from_wire(dict(peer.schema)), seq_len)
+            n = self._slot_cache[key] = plan.n_slots
+        return n
 
     def _candidates(self, role: str):
         """Routable peers of ``role`` in policy preference order."""
@@ -156,13 +174,16 @@ class Scheduler:
                 self._rr["prefill"] += 1
                 self._rr["decode"] += 1
             rid, ids, n_decode, attempt, vis = self.backlog.popleft()
+            # both ends stage the same handoff cache: charge each the
+            # request's slot footprint on the decoder's advertised schema
+            slots = self._req_slots(dc, len(ids))
             self.inflight[rid] = dict(
                 ids=ids, n_decode=n_decode, attempt=attempt, vision_emb=vis,
-                prefiller=pf.peer_id, decoder=dc.peer_id,
+                prefiller=pf.peer_id, decoder=dc.peer_id, slots=slots,
                 decoder_addr=dc.addr, epoch=self.view.epoch,
                 t_routed=self.fabric.now)
             for pid in (pf.peer_id, dc.peer_id):
-                self._outstanding[pid] = self._outstanding.get(pid, 0) + 1
+                self._outstanding[pid] = self._outstanding.get(pid, 0) + slots
             self.routing_log.append((rid, self.view.epoch,
                                      pf.peer_id, dc.peer_id))
             self.engine.submit_send(dc.addr, m.encode(m.SubmitReq(
@@ -172,9 +193,9 @@ class Scheduler:
 
     def _release(self, st: Dict) -> None:
         for pid in (st["prefiller"], st["decoder"]):
-            n = self._outstanding.get(pid, 0)
-            if n > 1:
-                self._outstanding[pid] = n - 1
+            n = self._outstanding.get(pid, 0) - st.get("slots", 1)
+            if n > 0:
+                self._outstanding[pid] = n
             else:
                 self._outstanding.pop(pid, None)
 
@@ -184,6 +205,8 @@ class Scheduler:
         if isinstance(msg, m.ViewUpdate):
             if msg.epoch <= self.view.epoch:
                 return     # stale/duplicate view: epochs only move forward
+            # a peer may have re-joined under the same id with a new schema
+            self._slot_cache.clear()
             new = MembershipView.from_wire(msg.epoch, msg.peers)
             self.view_epochs.append(new.epoch)
             gone = set(self.view.ids()) - set(new.ids())

@@ -297,3 +297,43 @@ def test_payload_and_mr_groups_share_one_batch():
     assert np.array_equal(dst[:1024], src)
     assert np.array_equal(dst[1024:], payload)
     assert b.imm_value(41) == 1 and b.imm_value(42) == 1
+
+
+# ---------------------------------------------------------------------------
+# two-sided SENDs ride a WrBatch
+# ---------------------------------------------------------------------------
+
+def test_sends_in_same_loop_entry_coalesce_into_one_enqueue():
+    """N SENDs submitted in the same event-loop entry share one WrBatch
+    flush (one app->worker enqueue), preserve submission order, and SENDs
+    from a later entry open a fresh batch."""
+    fab, a, b = _pair("cx7")
+    got = []
+    b.submit_recvs(256, 8, got.append)
+    calls = []
+    orig = fab.loop.schedule
+    fab.loop.schedule = lambda d, fn: (calls.append(d), orig(d, fn))
+    try:
+        a.submit_send(b.address(0), b"one")
+        a.submit_send(b.address(0), b"two")
+        a.submit_send(b.address(0), b"three")
+    finally:
+        fab.loop.schedule = orig
+    assert len(calls) == 1      # ONE flush event for all three SENDs
+    fab.run()
+    assert got == [b"one", b"two", b"three"]
+    # a later loop entry gets its own batch and still delivers
+    a.submit_send(b.address(0), b"four")
+    fab.run()
+    assert got == [b"one", b"two", b"three", b"four"]
+
+
+def test_send_batch_callbacks_fire_per_send():
+    from repro.core import Flag
+    fab, a, b = _pair("efa")
+    b.submit_recvs(64, 4, lambda p: None)
+    f1, f2 = Flag(), Flag()
+    a.submit_send(b.address(0), b"x", cb=f1)
+    a.submit_send(b.address(0), b"y", cb=f2)
+    fab.run()
+    assert f1.is_set() and f2.is_set()

@@ -454,3 +454,44 @@ def test_least_loaded_policy_orders_by_load():
     rr.view = sched.view
     rr._rr["prefill"] = 1
     assert [p.peer_id for p in rr._candidates("prefill")] == ["b", "c", "a"]
+
+
+def test_least_loaded_weights_by_plan_slots(model):
+    """The local outstanding ledger charges each request its
+    ``TransferPlan.n_slots`` on the decoder's advertised KvSchema — pool
+    pressure — so one long prompt outweighs several short ones."""
+    from repro.kvlayout import KvSchema, TransferPlan, schema_from_config
+
+    cfg, _ = model
+    schema = schema_from_config(cfg)
+    fab = Fabric(seed=31)
+    ctrl = ControlPlane(fab, nic="efa", max_sweeps=4)
+    sched = Scheduler(fab, ctrl, policy="least-loaded")
+
+    def _dc(pid):
+        return PeerView(peer_id=pid, role="decode", addr=NetAddr(pid, 0),
+                        nic="efa", status="live", kv_desc=None, geom={},
+                        n_pages=8, inflight=0, schema=schema.to_wire())
+
+    d1, d2 = _dc("d1"), _dc("d2")
+    long_slots = sched._req_slots(d1, 400)
+    short_slots = sched._req_slots(d1, 10)
+    assert long_slots == TransferPlan(schema, 400).n_slots
+    assert short_slots == TransferPlan(schema, 10).n_slots
+    assert long_slots > 2 * short_slots
+    # schema-less peers weigh 1 per request (raw count fallback)
+    assert sched._req_slots(_pf("x"), 400) == 1
+
+    # d1 holds ONE long prompt, d2 holds TWO short ones: raw request count
+    # says d1 is less loaded; pool pressure says d2 is
+    sched.view = MembershipView(3, (d1, d2))
+    sched._outstanding = {"d1": long_slots, "d2": 2 * short_slots}
+    order = [p.peer_id for p in sched._candidates("decode")]
+    assert order == ["d2", "d1"]
+
+    # the ledger releases exactly what routing charged
+    st = dict(prefiller="d1", decoder="d2", slots=2 * short_slots)
+    sched._release(st)
+    assert sched._outstanding == {"d1": long_slots - 2 * short_slots}
+    sched._release(dict(prefiller="d1", decoder="x", slots=10 ** 6))
+    assert "d1" not in sched._outstanding and "x" not in sched._outstanding

@@ -1,0 +1,309 @@
+"""Staged RL weight-update engine: chunked staging under the watermark,
+window-coalesced WrBatches, two-phase commit, and the delta planner."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import Fabric
+from repro.rlweights import (CommitGate, ParamMeta, commit_imm,
+                             compute_routing, data_imm, make_cluster,
+                             p2p_transfer, plan_chunks, schedule_stats,
+                             verify_contents)
+
+
+def _plan(n_params=6, n_train=4, n_infer=4, tp=2, quant=0.5, changed=None):
+    params = [ParamMeta(f"w{i}", (512, 64 + 32 * i), 2)
+              for i in range(n_params)]
+    return params, *compute_routing(params, n_train, n_infer, infer_tp=tp,
+                                    quant_ratio=quant, changed=changed)
+
+
+def _cluster(sizes, n_train=4, n_infer=4, nic="cx7", seed=0):
+    return make_cluster(n_train, n_infer, max(sizes["train"].values()),
+                        max(sizes["infer"].values()), nic=nic, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# bytes conservation under chunked staging
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nic,chunk", [("cx7", 4096), ("efa", 8192),
+                                       ("cx7", None)])
+def test_chunked_staging_conserves_bytes(nic, chunk):
+    """Whatever the chunking, every routed byte lands bit-exact exactly
+    once and the NICs carry exactly the scheduled payload."""
+    _, routes, sizes = _plan()
+    cl = _cluster(sizes, nic=nic, seed=3)
+    stats = p2p_transfer(cl, routes, chunk_bytes=chunk)
+    assert stats["all_sent"] and verify_contents(cl, routes)
+    total = sum(r.nbytes for r in routes)
+    sent = sum(sum(d.nic.bytes_sent for d in e.groups[0].domains)
+               for e in cl.train_engines)
+    # + one accounting byte per zero-length commit-barrier descriptor
+    assert sent == total + len(cl.infer_engines)
+    # every inference byte covered exactly once
+    for ir in range(4):
+        need = sizes["infer"][ir]
+        cover = np.zeros(need, np.int32)
+        for r in routes:
+            if r.infer_rank == ir:
+                cover[r.dst_off:r.dst_off + r.nbytes] += 1
+        assert (cover == 1).all()
+
+
+def test_chunking_splits_to_subparameter_granularity():
+    _, routes, sizes = _plan()
+    chunks = plan_chunks(routes, chunk_bytes=1024, watermark_bytes=1 << 20)
+    for rank, cs in chunks.items():
+        assert all(c.nbytes <= 1024 for c in cs)
+        # replicas are staged once: each chunk fans out to >1 target here
+        assert all(len(c.targets) == 2 for c in cs)   # n_infer/tp replicas
+    # chunks of one source range reassemble it exactly
+    per_route = sum(r.nbytes for r in routes)
+    per_chunk = sum(c.nbytes * len(c.targets)
+                    for cs in chunks.values() for c in cs)
+    assert per_chunk == per_route
+
+
+# ---------------------------------------------------------------------------
+# watermark: staging memory is bounded and the bound is honoured
+# ---------------------------------------------------------------------------
+
+def test_watermark_never_exceeded_and_serialises():
+    _, routes, sizes = _plan()
+    cl = _cluster(sizes, nic="cx7", seed=1)
+    wm = 4096
+    stats = p2p_transfer(cl, routes, watermark_bytes=wm, chunk_bytes=2048)
+    assert stats["watermark_ok"] and stats["peak_staged_bytes"] <= wm
+    assert verify_contents(cl, routes)
+    # a generous watermark pipelines deeper and finishes no later
+    cl2 = _cluster(sizes, nic="cx7", seed=1)
+    stats2 = p2p_transfer(cl2, routes, watermark_bytes=1 << 30,
+                          chunk_bytes=2048)
+    assert stats2["peak_staged_bytes"] >= stats["peak_staged_bytes"]
+    assert stats2["total_us"] <= stats["total_us"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 8), st.sampled_from([1.0, 2.0]))
+def test_watermark_property(wm_chunks, chunk_kb, stage_scale):
+    """Property: for any (watermark, chunk size, stage scale), planned
+    chunks individually fit the watermark and the executed pipeline's peak
+    staging never exceeds it."""
+    params = [ParamMeta(f"w{i}", (256, 96), 2) for i in range(3)]
+    routes, sizes = compute_routing(params, 2, 2, infer_tp=1)
+    chunk = chunk_kb << 10
+    wm = wm_chunks * 1024
+    chunks = plan_chunks(routes, chunk_bytes=chunk, watermark_bytes=wm,
+                         stage_scale=stage_scale)
+    assert all(c.stage_bytes <= wm for cs in chunks.values() for c in cs)
+    cl = make_cluster(2, 2, max(sizes["train"].values()),
+                      max(sizes["infer"].values()), nic="cx7", seed=2)
+    stats = p2p_transfer(cl, routes, watermark_bytes=wm, chunk_bytes=chunk,
+                         stage_scale=stage_scale)
+    assert stats["watermark_ok"] and stats["peak_staged_bytes"] <= wm
+    assert verify_contents(cl, routes)
+
+
+# ---------------------------------------------------------------------------
+# two-phase commit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_commit_fires_only_after_all_data(seed):
+    """Under SRD's shuffled delivery, every inference rank flips exactly
+    once, and AT the flip its whole byte range is already bit-exact —
+    checked inside the flip callback, not after the run."""
+    _, routes, sizes = _plan()
+    cl = _cluster(sizes, nic="efa", seed=seed)
+    checked = {}
+
+    by_rank = {}
+    for r in routes:
+        by_rank.setdefault(r.infer_rank, []).append(r)
+
+    # observer gates armed on the same imms the transfer will use; they
+    # fire at the same ImmCounter events as the engine's own gates
+    chunks = plan_chunks(routes, chunk_bytes=4096, watermark_bytes=2 << 30)
+    n_data = [0] * 4
+    for cs in chunks.values():
+        for c in cs:
+            for ir, _ in c.targets:
+                n_data[ir] += 1
+
+    gates = []
+    for ir, eng in enumerate(cl.infer_engines):
+        gate = CommitGate(eng)
+
+        def on_flip(_uid, ir=ir):
+            ok = all(np.array_equal(
+                cl.train_bufs[r.train_rank][r.src_off:r.src_off + r.nbytes],
+                cl.infer_bufs[r.infer_rank][r.dst_off:r.dst_off + r.nbytes])
+                for r in by_rank.get(ir, []))
+            checked.setdefault(ir, []).append(ok)
+
+        gate.arm(0, n_data[ir], on_flip=on_flip)
+        gates.append(gate)
+
+    stats = p2p_transfer(cl, routes, chunk_bytes=4096)
+    assert stats["committed"] and stats["commits"] == [1, 1, 1, 1]
+    # observer gates flipped exactly once per rank, with all data in place
+    assert sorted(checked) == [0, 1, 2, 3]
+    assert all(v == [True] for v in checked.values())
+    assert all(len(g.flips) == 1 and g.version == 1 for g in gates)
+
+
+def test_commit_requires_both_data_and_commit_write():
+    """The gate must hold with the commit write delivered BEFORE the data
+    (the no-ordering contract): drive an ImmCounter by hand."""
+    fab = Fabric(seed=0)
+    eng = fab.add_engine("i0", nic="cx7")
+    gate = CommitGate(eng)
+    flips = []
+    gate.arm(3, n_data=5, on_flip=flips.append)
+    ctr = eng.counters[0]
+    ctr.increment(commit_imm(3), now=1.0)        # commit arrives first
+    assert gate.version == 0 and not flips
+    for k in range(5):
+        ctr.increment(data_imm(3), now=2.0 + k)  # data trickles in
+        assert gate.version == (1 if k == 4 else 0)
+    assert flips == [3] and len(gate.flips) == 1
+    # duplicate/late events never flip again
+    ctr.increment(data_imm(3), now=10.0)
+    ctr.increment(commit_imm(3), now=11.0)
+    assert gate.version == 1 and len(gate.flips) == 1
+
+
+def test_empty_delta_update_still_commits():
+    params, routes, sizes = _plan(changed=[])
+    assert routes == []
+    cl = _cluster(sizes, seed=5)
+    stats = p2p_transfer(cl, routes, update_id=2)
+    assert stats["writes"] == 0 and stats["committed"]
+    assert stats["commits"] == [1, 1, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# delta planner
+# ---------------------------------------------------------------------------
+
+def test_delta_plan_equals_full_plan_on_dirty_subset():
+    dirty = ["w1", "w3", "w4"]
+    params, full, sizes_full = _plan()
+    _, delta, sizes_delta = _plan(changed=dirty)
+    assert sizes_full == sizes_delta          # layout identical
+    assert delta == [r for r in full if r.param in dirty]
+    stats = schedule_stats(delta, 4, 4, full_routes=full)
+    assert stats["delta_bytes"] == sum(r.nbytes for r in delta)
+    assert stats["full_bytes"] == sum(r.nbytes for r in full)
+    assert 0 < stats["delta_frac"] < 1
+    with pytest.raises(ValueError, match="not in params"):
+        compute_routing(params, 4, 4, infer_tp=2, changed=["nope"])
+
+
+def test_delta_transfer_touches_only_dirty_ranges():
+    dirty = ["w0", "w2"]
+    params, full, sizes = _plan(quant=1.0)
+    _, delta, _ = _plan(quant=1.0, changed=dirty)
+    cl = _cluster(sizes, seed=9)
+    stats = p2p_transfer(cl, delta, chunk_bytes=4096)
+    assert stats["committed"] and verify_contents(cl, delta)
+    # clean params' destination ranges were never written
+    clean = [r for r in full if r.param not in dirty]
+    for r in clean:
+        dst = cl.infer_bufs[r.infer_rank][r.dst_off:r.dst_off + r.nbytes]
+        assert not dst.any()
+
+
+# ---------------------------------------------------------------------------
+# batching: ImmCounter parity and windowed submission
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nic", ["cx7", "efa"])
+def test_batched_pipeline_imm_parity_with_per_op_path(nic):
+    """The windowed WrBatch submission must land the same ImmCounter state
+    (one event per fully-landed chunk write) as issuing every chunk write
+    as its own single WRITE."""
+    _, routes, sizes = _plan()
+    chunk = 4096
+    cl1 = _cluster(sizes, nic=nic, seed=11)
+    stats = p2p_transfer(cl1, routes, chunk_bytes=chunk)
+
+    cl2 = _cluster(sizes, nic=nic, seed=11)
+    chunks = plan_chunks(routes, chunk_bytes=chunk, watermark_bytes=2 << 30)
+    n_data = [0] * 4
+    for rank, cs in chunks.items():
+        eng = cl2.train_engines[rank]
+        h = cl2.train_handles[rank]
+        for c in cs:
+            for ir, doff in c.targets:
+                n_data[ir] += 1
+                eng.submit_single_write(c.nbytes, data_imm(0),
+                                        (h, c.src_off),
+                                        (cl2.infer_descs[ir], doff))
+    cl2.fabric.run()
+    for ir in range(4):
+        assert (cl1.infer_engines[ir].imm_value(data_imm(0))
+                == cl2.infer_engines[ir].imm_value(data_imm(0))
+                == n_data[ir])
+    for a, b in zip(cl1.infer_bufs, cl2.infer_bufs):
+        assert np.array_equal(a, b)
+
+
+def test_window_coalesces_chunks_into_fewer_enqueues():
+    """Chunks prepared inside one pipeline window share a WrBatch: with a
+    wide window the whole rank's schedule is a handful of enqueues, never
+    one per chunk."""
+    _, routes, sizes = _plan()
+    cl = _cluster(sizes, seed=4)
+    stats = p2p_transfer(cl, routes, chunk_bytes=2048, window_us=50.0)
+    assert stats["n_chunks"] > 4 * stats["n_batches"]
+    assert verify_contents(cl, routes)
+    batches = sum(e.batch_stats.batches for e in cl.train_engines)
+    assert batches == stats["n_batches"] + 1   # + the rank-0 commit barrier
+
+
+def _prepr_transfer(cluster, routes, h2d_gbps, prep_gbps):
+    """The seed's per-route path, verbatim: one submission per whole route
+    at per-route prepare granularity — no chunking, batching, or commit."""
+    fab = cluster.fabric
+    by_rank = {}
+    for r in routes:
+        by_rank.setdefault(r.train_rank, []).append(r)
+    for rank, rs in by_rank.items():
+        eng = cluster.train_engines[rank]
+        handle = cluster.train_handles[rank]
+        t_h2d, t_prep = 0.0, 0.0
+        for r in rs:
+            t_h2d = t_h2d + (r.nbytes / h2d_gbps) * 1e-3
+            t_prep = max(t_prep, t_h2d) + (r.nbytes / prep_gbps) * 1e-3
+
+            def submit(r=r, eng=eng, handle=handle):
+                eng.submit_single_write(
+                    r.nbytes, None, (handle, r.src_off),
+                    (cluster.infer_descs[r.infer_rank], r.dst_off))
+
+            fab.loop.schedule(t_prep, submit)
+    return fab.run()
+
+
+def test_p2p_pipelined_beats_prepr_path_simulated_time():
+    """Acceptance: the staged pipeline improves simulated total vs the
+    pre-PR per-route submission under the identical route schedule."""
+    from repro.rlweights.transfer import H2D_GBPS, PREP_GBPS
+    params = [ParamMeta(f"w{i}", (1024, 512), 2) for i in range(24)]
+    routes, sizes = compute_routing(params, 8, 4, infer_tp=2,
+                                    quant_ratio=0.5)
+    for nic in ("cx7", "efa"):
+        old = make_cluster(8, 4, max(sizes["train"].values()),
+                           max(sizes["infer"].values()), nic=nic)
+        t_old = _prepr_transfer(old, routes, H2D_GBPS, PREP_GBPS)
+        assert verify_contents(old, routes)
+        new = make_cluster(8, 4, max(sizes["train"].values()),
+                           max(sizes["infer"].values()), nic=nic)
+        stats = p2p_transfer(new, routes)
+        assert verify_contents(new, routes)
+        assert stats["total_us"] < t_old
+        for a, b in zip(old.infer_bufs, new.infer_bufs):
+            assert np.array_equal(a, b)   # identical schedule, same bytes

@@ -107,3 +107,78 @@ def test_nvlink_intra_node_fast_path():
     t = fab.run()
     assert np.array_equal(src, dst)
     assert t < 10.0  # NVLink-class latency, far below EFA's ~31us rtt
+
+
+# ---------------------------------------------------------------------------
+# SRD jitter granularity under coarse chunking
+# ---------------------------------------------------------------------------
+
+class _CountingRng:
+    """Wraps a Generator to record scalar-uniform vs max-of-n draws."""
+
+    def __init__(self, rng):
+        self._rng = rng
+        self.uniforms = 0     # single-packet chunks: scalar uniform draw
+        self.maxdraws = 0     # multi-packet chunks: one inverse-CDF draw
+
+    def uniform(self, lo, hi):
+        self.uniforms += 1
+        return self._rng.uniform(lo, hi)
+
+    def random(self):
+        self.maxdraws += 1
+        return self._rng.random()
+
+
+def test_rc_channel_never_draws_jitter():
+    """The ordered (CX7) path must not consume randomness — pinning that
+    finer SRD modeling leaves every RC-transport result bit-identical."""
+    from repro.core.netsim import EventLoop, NicQueue, CX7
+    from repro.core.transport import Channel, WireOp
+
+    loop = EventLoop()
+    ch = Channel(loop, NicQueue(loop, CX7), seed=1)
+
+    class _Poison:
+        def uniform(self, *a, **k):
+            raise AssertionError("ordered channel drew jitter")
+
+    ch.rng = _Poison()
+    done = []
+    ch.post(WireOp(kind="write", payload=None, dst_region=None, dst_offset=0,
+                   imm=None, on_delivered=lambda op, now: done.append(now),
+                   nbytes=32 << 20))
+    loop.run_until_idle()
+    assert len(done) == 1
+
+
+def test_srd_multipacket_chunks_draw_per_packet_jitter():
+    """When MAX_CHUNKS makes one coarse chunk span several MTU packets, the
+    chunk's jitter is the max over its per-packet jitters (drawn in O(1)
+    via the inverse CDF of max-of-n); single-packet chunks keep the exact
+    scalar draw (bit-identical small-write RNG stream)."""
+    from repro.core.netsim import EventLoop, NicQueue, EFA_200
+    from repro.core.transport import Channel, WireOp
+
+    mtu = EFA_200.mtu_bytes
+    # 64 coarse chunks x 3 packets each -> one max-of-3 draw per chunk
+    loop = EventLoop()
+    ch = Channel(loop, NicQueue(loop, EFA_200), seed=2)
+    ch.rng = _CountingRng(ch.rng)
+    done = []
+    ch.post(WireOp(kind="write", payload=None, dst_region=None, dst_offset=0,
+                   imm=None, on_delivered=lambda op, now: done.append(now),
+                   nbytes=Channel.MAX_CHUNKS * 3 * mtu))
+    loop.run_until_idle()
+    assert len(done) == 1
+    assert ch.rng.maxdraws == Channel.MAX_CHUNKS and ch.rng.uniforms == 0
+
+    # sub-MTU chunks: one scalar draw per chunk, exactly as before
+    loop2 = EventLoop()
+    ch2 = Channel(loop2, NicQueue(loop2, EFA_200), seed=2)
+    ch2.rng = _CountingRng(ch2.rng)
+    ch2.post(WireOp(kind="write", payload=None, dst_region=None, dst_offset=0,
+                    imm=None, on_delivered=lambda op, now: done.append(now),
+                    nbytes=4 * mtu))
+    loop2.run_until_idle()
+    assert ch2.rng.uniforms == 4 and ch2.rng.maxdraws == 0
