@@ -8,20 +8,40 @@ A DeepEP-style baseline rides along: ordered-RC per-token writes (no
 private/contiguous two-phase, more packets, no route exchange needed
 because RC ordering carries implicit structure) — modeled as one WRITE per
 token with the same fabric.
+
+Emits ``BENCH_moe.json`` (config + paper Fig. 9/10 targets + per-row
+stats, including the per-peer WR budget actually used) into the bench
+output dir for perf-trajectory tracking across PRs.
+
+Env knobs:
+  BENCH_MOE_SMOKE=1   reduced scale for the CI bench-smoke job
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+import json
+import os
+from typing import Dict
 
 import numpy as np
 
 from repro.core import Fabric, ScatterDst
-from repro.moekit import MoEConfig, MoEEndpoint, make_endpoints
+from repro.moekit import MoEConfig, make_endpoints
 
 TOKEN_BYTES = 7168 + 56 * 4       # fp8 payload + fp32 scales
 TOP_K = 8
 E_TOTAL = 256                      # DeepSeek-V3 routed experts (EP<=64 -> >=4/rank)
+
+SMOKE = os.environ.get("BENCH_MOE_SMOKE") == "1"
+EP_SWEEP = (8, 16) if SMOKE else (8, 16, 32, 64)
+DECODE_ROUNDS = 1 if SMOKE else 3
+
+OUT_DIR = os.environ.get(
+    "BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
+
+# paper Fig. 9 anchors (us, EP64 decode, approximate bar heights)
+PAPER_EP64 = {"cx7": {"dispatch": 163.0, "combine": 318.0},
+              "efa": {"dispatch": 212.0, "combine": 413.0}}
 
 
 def _inputs(cfg: MoEConfig, seed: int = 0):
@@ -43,26 +63,38 @@ def bench_dispatch_combine(ep: int, batch: int, nic: str,
     fab = Fabric(seed=1)
     eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=8)
     disp, comb = [], []
+    disp_wr_peer = 0.0
     for rnd in range(rounds):
         tokens, eids = _inputs(cfg, seed=rnd)
-        state = {"d": 0}
+        ctxs: Dict[int, Dict] = {}
+        start = [e.engine.batch_stats.snapshot_by_dst() for e in eps]
+        disp_wrs = {"max": 0}
 
         def make_cb(r):
             def cb():
-                state["d"] += 1
+                # dispatch has fully posted for rank r here (its combine
+                # has not) — snapshot the dispatch-phase per-peer WR
+                # budget: <= 1 route + 2 data WRITEs per peer (invariant)
+                now = eps[r].engine.batch_stats.snapshot_by_dst()
+                disp_wrs["max"] = max(disp_wrs["max"], max(
+                    (now.get(a, 0) - start[r].get(a, 0) for a in now),
+                    default=0))
                 # combine echoes the received tokens straight back
-                ctx = eps[r]._last_ctx
-                slabs = eps[r].gather_expert_tokens(ctx)
-                eps[r].combine(ctx, slabs, lambda: None)
+                slabs = eps[r].gather_expert_tokens(ctxs[r])
+                eps[r].combine(ctxs[r], slabs, lambda: None)
             return cb
 
         for r in range(ep):
-            eps[r].dispatch(tokens[r], eids[r], make_cb(r))
+            ctxs[r] = eps[r].dispatch(tokens[r], eids[r], make_cb(r))
         fab.run()
         disp.append(np.median([e.stats["dispatch_us"] for e in eps]))
         comb.append(np.median([e.stats["combine_us"] for e in eps]))
+        disp_wr_peer = max(disp_wr_peer, disp_wrs["max"])
     return {"dispatch_us": float(np.median(disp)),
-            "combine_us": float(np.median(comb))}
+            "combine_us": float(np.median(comb)),
+            "dispatch_wr_per_peer": float(disp_wr_peer),
+            "enqueues": int(sum(e.engine.batch_stats.batches for e in eps)),
+            "wrs": int(sum(e.engine.batch_stats.wrs for e in eps))}
 
 
 def bench_deepep_style(ep: int, batch: int, nic: str = "cx7") -> Dict[str, float]:
@@ -78,6 +110,9 @@ def bench_deepep_style(ep: int, batch: int, nic: str = "cx7") -> Dict[str, float
     GPU_PER_TOKEN_US = 0.1      # SM-driven per-token issue cost
     for r in range(ep):
         e = eps[r]
+        # per-token staging region (the bulk path needs none: PayloadDst)
+        sbuf = np.zeros(cfg.max_tokens * cfg.token_bytes, np.uint8)
+        h_send, _ = e.engine.reg_mr(sbuf)
         fe = eids[r].reshape(-1)
         ft = np.repeat(np.arange(cfg.max_tokens), cfg.top_k)
         dest = fe // cfg.e_local
@@ -87,8 +122,8 @@ def bench_deepep_style(ep: int, batch: int, nic: str = "cx7") -> Dict[str, float
             sd = ScatterDst(len=cfg.token_bytes, src=int(ft[i]) * cfg.token_bytes,
                             dst=(eps[d].d_shared, int(i) * cfg.token_bytes))
             fab.loop.schedule(i * GPU_PER_TOKEN_US,
-                              lambda e=e, sd=sd: e.engine.submit_scatter(
-                                  e.h_send, [sd], imm=0x99))
+                              lambda e=e, sd=sd, h=h_send: e.engine.submit_scatter(
+                                  h, [sd], imm=0x99))
     # receiver: every rank expects its incoming token count
     for r in range(ep):
         incoming = sum(int(((eids[s] // cfg.e_local) == r).sum())
@@ -99,32 +134,55 @@ def bench_deepep_style(ep: int, batch: int, nic: str = "cx7") -> Dict[str, float
     return {"dispatch_us": (np.median(done) - t0) if done else t}
 
 
-# paper Fig. 9 anchors (us, EP64 decode, approximate bar heights)
-PAPER_EP64 = {"cx7": {"dispatch": 163.0, "combine": 318.0},
-              "efa": {"dispatch": 212.0, "combine": 413.0}}
-
-
 def run(report) -> None:
+    summary: Dict[str, Dict] = {}
+
+    def keep(name: str, row: Dict, value_key: str = "dispatch_us") -> None:
+        summary[name] = {k: v for k, v in row.items()
+                         if isinstance(v, (int, float, bool))}
+
     for nic in ("cx7", "efa"):
-        for ep in (8, 16, 32, 64):
-            r = bench_dispatch_combine(ep, 128, nic)
+        for ep in EP_SWEEP:
+            r = bench_dispatch_combine(ep, 128, nic, rounds=DECODE_ROUNDS)
+            keep(f"moe_decode_ep{ep}_{nic}", r)
             note = ""
             if ep == 64:
                 p = PAPER_EP64[nic]
                 note = (f" (paper ~{p['dispatch']:.0f}/{p['combine']:.0f}us)")
             report(f"moe_decode_ep{ep}_{nic}_dispatch", r["dispatch_us"],
-                   f"us dispatch; combine {r['combine_us']:.0f}us{note}")
+                   f"us dispatch; combine {r['combine_us']:.0f}us; "
+                   f"{r['dispatch_wr_per_peer']:.0f} dispatch WRs/peer "
+                   f"(<=1 route + 2 data){note}")
     # DeepEP-style ordered-RC baseline at EP32 decode
-    d = bench_deepep_style(32, 128, "cx7")
-    ours = bench_dispatch_combine(32, 128, "cx7")
-    report("moe_deepep_style_ep32", d["dispatch_us"],
+    dep = 16 if SMOKE else 32
+    d = bench_deepep_style(dep, 128, "cx7")
+    ours = bench_dispatch_combine(dep, 128, "cx7", rounds=DECODE_ROUNDS)
+    keep(f"moe_deepep_style_ep{dep}", d)
+    report(f"moe_deepep_style_ep{dep}", d["dispatch_us"],
            f"us per-token-RC dispatch vs ours {ours['dispatch_us']:.0f}us "
            f"(bulk transfers win at scale)")
     # prefill-sized chunk (Fig. 10): 4096 tokens
     pre = bench_dispatch_combine(16, 4096 // 16, "cx7", rounds=1)
+    keep("moe_prefill_ep16_cx7", pre)
     report("moe_prefill_ep16_cx7", pre["dispatch_us"],
            f"us dispatch (256 tok/rank chunk); combine {pre['combine_us']:.0f}us")
-    bench_dual_batch_overlap(report)
+    if not SMOKE:
+        bench_dual_batch_overlap(report, summary)
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    doc = {
+        "bench": "moe",
+        "smoke": SMOKE,
+        "config": {"token_bytes": TOKEN_BYTES, "top_k": TOP_K,
+                   "n_experts": E_TOTAL, "decode_batch": 128,
+                   "prefill_chunk": 4096, "ep_sweep": list(EP_SWEEP),
+                   "rounds": DECODE_ROUNDS, "t_priv": 32},
+        "paper_us_ep64": PAPER_EP64,
+        "rows": summary,
+    }
+    with open(os.path.join(OUT_DIR, "BENCH_moe.json"), "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 # DeepSeek-V3-class decode compute per token per MoE layer (us) — attention
@@ -133,7 +191,7 @@ def run(report) -> None:
 COMPUTE_US_PER_TOKEN = 7.0
 
 
-def bench_dual_batch_overlap(report) -> None:
+def bench_dual_batch_overlap(report, summary=None) -> None:
     """Table 7 analog: dual-batch overlap pipelines one half-batch's compute
     with the other's dispatch/combine.  Effective per-layer time:
       no overlap: t_comp(B) + t_comm(B)
@@ -156,6 +214,10 @@ def bench_dual_batch_overlap(report) -> None:
         t_no_hl = comp_f + 8 * comm_f
         t_dual_hl = comp_h + 8 * comm_h + max(comp_h, 8 * comm_h)
         theirs = t_no_hl / t_dual_hl
+        if summary is not None:
+            summary[f"dual_batch_overlap_b{batch}"] = {
+                "dual_us": t_dual, "no_overlap_us": t_no,
+                "gain_ours": ours, "gain_8x_comm": theirs}
         report(f"dual_batch_overlap_b{batch}", t_dual,
                f"us/layer dual-batch vs {t_no:.0f} no-overlap "
                f"(gain {ours:.2f}x ours; {theirs:.2f}x at 8x comm latency; "

@@ -27,7 +27,8 @@ import numpy as np
 from repro.core import Fabric
 from repro.rlweights.planner import ParamMeta, compute_routing, schedule_stats
 from repro.rlweights.transfer import (arm_commit_gates, commit_imm, data_imm,
-                                      plan_chunks, run_pipelined_update)
+                                      plan_chunks, resolve_chunk_bytes,
+                                      run_pipelined_update)
 
 # pipeline stage rates calibrated to Table 5 (Kimi-K2, 256 ranks)
 H2D_GBPS = 43.0        # 8 GB/rank in 184 ms
@@ -45,7 +46,7 @@ else:
     TOTAL_PARAMS = 1.04e12      # Kimi-K2
 
 WATERMARK = 2 << 30    # staging memory bound per training rank
-CHUNK = 32 << 20       # wire bytes per staged chunk (sub-parameter)
+CHUNK = 32 << 20       # legacy static chunk knob (kept as the compare row)
 DIRTY_EVERY = 4        # delta mode: every 4th layer dirty (async fine-tune)
 
 OUT_DIR = os.environ.get(
@@ -76,16 +77,21 @@ def synthetic_cluster(n_train: int, n_infer: int, nic: str = "efa"):
     return fab, te, ie, descs
 
 
-def p2p_synthetic(nic: str = "efa",
-                  changed: Optional[List[str]] = None) -> Dict[str, float]:
+def p2p_synthetic(nic: str = "efa", changed: Optional[List[str]] = None,
+                  chunk_bytes: Optional[int] = None) -> Dict[str, float]:
     """The staged §5.2 pipeline over synthetic writes: chunked staging under
     the watermark, one WrBatch per pipeline window, two-phase commit.  Each
     FSDP source range is H2D'd + prepared ONCE and WRITTEN to every TP
     replica (16x wire amplification — exactly why the paper needs
-    full-cluster bisection)."""
+    full-cluster bisection).  ``chunk_bytes`` defaults to the per-NIC
+    autotuned sweet spot (post/enqueue cost model, ROADMAP item)."""
     routes, _sizes = _routes(changed)
+    if chunk_bytes is None:
+        chunk_bytes = resolve_chunk_bytes(
+            "auto", routes, nic, watermark_bytes=WATERMARK,
+            stage_scale=STAGE_SCALE)
     fab, te, ie, descs = synthetic_cluster(N_TRAIN, N_INFER, nic)
-    chunks_by_rank = plan_chunks(routes, chunk_bytes=CHUNK,
+    chunks_by_rank = plan_chunks(routes, chunk_bytes=chunk_bytes,
                                  watermark_bytes=WATERMARK,
                                  stage_scale=STAGE_SCALE)
 
@@ -119,6 +125,7 @@ def p2p_synthetic(nic: str = "efa",
     out["total_ms"] = stats["total_us"] * 1e-3
     out["h2d_ms"] = stats["h2d_us"] * 1e-3
     out["prep_ms"] = stats["prep_us"] * 1e-3
+    out["chunk_bytes"] = chunk_bytes
     out["committed"] = all(len(g.flips) == 1 for g in gates)
     out.update(schedule_stats(routes, N_TRAIN, N_INFER,
                               full_routes=_routes()[0] if changed else None))
@@ -155,6 +162,11 @@ def p2p_synthetic_prepr(nic: str = "efa") -> Dict[str, float]:
 
 
 def rank0_synthetic(nic: str = "efa") -> Dict[str, float]:
+    """Rank0 gather+broadcast with the SAME two-phase commit as the p2p
+    path (protocol parity for the Table-5 comparison): broadcast WRITEs
+    carry the data immediate, one commit barrier follows, and every
+    inference rank's CommitGate must flip exactly once."""
+    from repro.rlweights.transfer import CommitGate
     routes, _ = _routes()
     fab, te, ie, descs = synthetic_cluster(N_TRAIN, N_INFER, nic)
     buf = np.zeros(1, np.uint8)
@@ -165,11 +177,25 @@ def rank0_synthetic(nic: str = "efa") -> Dict[str, float]:
     fab.run()
     t_gather = fab.now
     # rank0 broadcasts each inference rank's fp8 shard (TP=8, EP-style 1/16)
+    gates = []
+    for eng in ie:
+        gate = CommitGate(eng)
+        gate.arm(0, 1)
+        gates.append(gate)
     out_bytes = int(TOTAL_PARAMS * 2 * QUANT)  # fp8
+    left = {"n": N_INFER}
+
+    def sent() -> None:
+        left["n"] -= 1
+        if left["n"] == 0:
+            te[0].submit_barrier(descs, commit_imm(0))
+
     for r in range(N_INFER):
-        te[0].submit_synthetic_write(out_bytes // (2 * INFER_TP), None, descs[r])
+        te[0].submit_synthetic_write(out_bytes // (2 * INFER_TP),
+                                     data_imm(0), descs[r], on_done=sent)
     t = fab.run()
-    return {"gather_ms": t_gather * 1e-3, "total_ms": t * 1e-3}
+    return {"gather_ms": t_gather * 1e-3, "total_ms": t * 1e-3,
+            "committed": all(len(g.flips) == 1 for g in gates)}
 
 
 def run(report) -> None:
@@ -199,6 +225,15 @@ def _run_inner(report) -> None:
                f"(wm {WATERMARK / (1 << 30):.0f}GiB), "
                f"committed={p2p['committed']}")
 
+        # per-NIC chunk autotune (ROADMAP): the post/enqueue cost model
+        # picks a different sweet spot per NIC; static 32MiB for compare
+        static = p2p_synthetic(nic, chunk_bytes=CHUNK)
+        summary[f"p2p_static_chunk{suffix or '_efa'}"] = static
+        report(f"rl_chunk_autotune{suffix}", p2p["chunk_bytes"] / (1 << 20),
+               f"MiB/chunk autotuned ({p2p['total_ms']:.0f}ms) vs "
+               f"{CHUNK / (1 << 20):.0f}MiB static ({static['total_ms']:.0f}ms); "
+               f"sweet spots differ per NIC (EFA per-WR cost ~7x CX7)")
+
         delta = p2p_synthetic(nic, changed=dirty)
         summary[f"p2p_delta{suffix or '_efa'}"] = delta
         report(f"rl_p2p_delta{suffix}", delta["total_ms"] * 1e3,
@@ -211,7 +246,8 @@ def _run_inner(report) -> None:
         summary[f"rank0{suffix or '_efa'}"] = r0
         report(f"rl_rank0_total{suffix}", r0["total_ms"] * 1e3,
                f"us = {r0['total_ms'] / 1e3:.1f}s total (paper: 10-100s for "
-               f"existing frameworks); p2p speedup "
+               f"existing frameworks); committed={r0['committed']} "
+               f"(same two-phase protocol); p2p speedup "
                f"{r0['total_ms'] / p2p['total_ms']:.0f}x")
 
     if os.environ.get("BENCH_RL_COMPARE") == "1":
@@ -228,7 +264,9 @@ def _run_inner(report) -> None:
         "config": {"n_train": N_TRAIN, "n_infer": N_INFER,
                    "infer_tp": INFER_TP, "n_params": N_PARAMS,
                    "total_params": TOTAL_PARAMS, "quant_ratio": QUANT,
-                   "watermark_bytes": WATERMARK, "chunk_bytes": CHUNK,
+                   "watermark_bytes": WATERMARK,
+                   "static_chunk_bytes": CHUNK,
+                   "chunk_bytes": "auto (per-NIC cost model)",
                    "dirty_every": DIRTY_EVERY},
         "paper_ms": {"p2p": 1233, "rank0_low": 10_000, "rank0_high": 100_000},
         "rows": {k: {kk: vv for kk, vv in v.items()

@@ -76,19 +76,34 @@ def _fire(done: OnDone) -> None:
 class BatchStats:
     """Per-engine submission-batching counters (ROADMAP: WRs/enqueue for the
     ablation bench).  One ``record`` per event-loop enqueue; derived ratios
-    say how well WR templating amortises the app->worker handoff."""
+    say how well WR templating amortises the app->worker handoff.
 
-    __slots__ = ("batches", "wrs", "nbytes")
+    ``wrs_by_dst`` tracks posted WRs per destination DomainGroup address —
+    the accounting behind per-peer WR-budget assertions (the moekit decode
+    fast path's "at most 2 data WRITEs per peer per round" invariant is
+    tested as deltas of this map)."""
+
+    __slots__ = ("batches", "wrs", "nbytes", "wrs_by_dst")
 
     def __init__(self) -> None:
         self.batches = 0
         self.wrs = 0
         self.nbytes = 0
+        self.wrs_by_dst: Dict = {}
 
     def record(self, batch: WrBatch) -> None:
         self.batches += 1
         self.wrs += len(batch)
         self.nbytes += batch.nbytes
+        per = self.wrs_by_dst
+        for _op, dst_group, _nic, _extra in batch.wrs:
+            addr = dst_group.addr
+            per[addr] = per.get(addr, 0) + 1
+
+    def snapshot_by_dst(self) -> Dict:
+        """Copy of the per-destination WR counts (diff two snapshots to get
+        per-peer WRs over a protocol phase)."""
+        return dict(self.wrs_by_dst)
 
     @property
     def wrs_per_enqueue(self) -> float:

@@ -2,8 +2,20 @@
 
 Each kernel ships with a pure-jnp oracle (``ref.py``) and a jit'd wrapper
 (``ops.py``).  On CPU the kernels run in ``interpret=True`` mode.
+
+Submodules are loaded lazily (PEP 562): the fabric-side host proxy imports
+``repro.kernels.host`` (numpy-only) on its hot path and must not pay the
+jax import that ``ops``/``ref`` drag in.
 """
 
-from . import ops, ref
+import importlib
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "host"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        mod = importlib.import_module(f".{name}", __name__)
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

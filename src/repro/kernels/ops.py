@@ -84,6 +84,12 @@ def _combine_bwd(res, dy):
 moe_combine.defvjp(_combine_fwd, _combine_bwd)
 
 
+# Host-proxy entry points (moekit's receiver shuffle and combine reduce):
+# numpy-first wrappers living in the jax-free `kernels.host` module; they
+# delegate to the Pallas kernels above when an accelerator backend is live.
+from .host import moe_combine_host, moe_pack_host  # noqa: E402,F401
+
+
 def moe_pack_auto(x: jax.Array, perm: jax.Array) -> jax.Array:
     """Backend-adaptive pack: the Pallas kernel on TPU, the pure-jnp oracle
     (an XLA gather) elsewhere.  Interpret-mode Pallas inside a compiled hot

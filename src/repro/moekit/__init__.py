@@ -1,4 +1,5 @@
-from .dispatch import MoEConfig, MoEEndpoint
+from .dispatch import MoEConfig, MoEEndpoint, PeerPorts, multi_arange
 from .driver import make_endpoints, oracle, run_moe_layer
 
-__all__ = ["MoEConfig", "MoEEndpoint", "make_endpoints", "run_moe_layer", "oracle"]
+__all__ = ["MoEConfig", "MoEEndpoint", "PeerPorts", "multi_arange",
+           "make_endpoints", "run_moe_layer", "oracle"]

@@ -17,8 +17,11 @@ def make_endpoints(fabric: Fabric, cfg: MoEConfig, *, nic: str = "cx7",
         node = f"node{r // gpus_per_node}"
         eng = fabric.add_engine(f"{node}-r{r}", nic=nic)
         eps.append(MoEEndpoint(fabric, cfg, r, eng))
+    # endpoints exchange ONLY serializable ports (rank + MrDescs): all
+    # placement offsets must be derived from the routes on the wire
+    ports = [e.port() for e in eps]
     for e in eps:
-        e.connect(eps)
+        e.connect(ports)
     return eps
 
 

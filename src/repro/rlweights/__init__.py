@@ -1,11 +1,14 @@
 from .planner import ParamMeta, Route, compute_routing, schedule_stats
 from .transfer import (Cluster, CommitGate, StageChunk, arm_commit_gates,
-                       commit_imm, data_imm, make_cluster, p2p_transfer,
-                       plan_chunks, rank0_transfer, run_pipelined_update,
-                       verify_contents)
+                       autotune_chunk_bytes, commit_imm, data_imm,
+                       launch_p2p_update, launch_pipelined_update,
+                       make_cluster, p2p_transfer, plan_chunks,
+                       rank0_transfer, resolve_chunk_bytes, run_pipelined_update, verify_contents)
 
 __all__ = ["ParamMeta", "Route", "compute_routing", "schedule_stats",
            "Cluster", "CommitGate", "StageChunk", "arm_commit_gates",
-           "commit_imm", "data_imm", "make_cluster", "p2p_transfer",
-           "plan_chunks", "rank0_transfer", "run_pipelined_update",
-           "verify_contents"]
+           "autotune_chunk_bytes", "commit_imm", "data_imm",
+           "launch_p2p_update", "launch_pipelined_update", "make_cluster",
+           "p2p_transfer", "plan_chunks", "rank0_transfer",
+           "resolve_chunk_bytes",
+           "run_pipelined_update", "verify_contents"]

@@ -41,12 +41,63 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core import Fabric, MrDesc, MrHandle, ScatterDst, TransferEngine
+from ..core.engine import NIC_PRESETS
+from ..core.netsim import POST_US
 from .planner import ParamMeta, Route
 
 # Pipeline stage rates (paper Table 5 calibration)
 H2D_GBPS = 25.0            # PCIe H2D memcpy
 PREP_GBPS = 150.0          # full_tensor + fusion + quantise, GPU-side
 DEFAULT_WINDOW_US = 2.0    # pipeline window for WrBatch coalescing
+
+# chunk autotuning clamps
+MIN_CHUNK_BYTES = 256 << 10
+AUTOTUNE_STAGES = 2        # H2D + prepare: pipeline-fill stages ahead of the NIC
+
+
+def autotune_chunk_bytes(nic: str, bytes_per_rank: int, *,
+                         watermark_bytes: int = 2 << 30,
+                         stage_scale: float = 1.0,
+                         stages: int = AUTOTUNE_STAGES) -> int:
+    """Per-NIC chunk size from the preset's post/enqueue cost model.
+
+    Total pipelined time over ``B = bytes_per_rank`` at chunk size ``c`` is
+    roughly ``B*w + (B/c)*fix + stages*c*w``: the wire term, the per-chunk
+    posting overhead (``fix = POST_US + NicSpec.fixed_us``, paid once per
+    WR), and the pipeline fill (``stages`` upstream stages must each hold
+    one chunk before the NIC streams).  Minimising over ``c`` gives
+
+        c* = sqrt(B * fix / (stages * w)),   w = us per wire byte.
+
+    EFA's ~10x higher per-WR cost pushes its sweet spot to much larger
+    chunks than CX7 (per-WR posting dominated vs pipelining dominated) —
+    the Table-5 bench shows both.  The result is clamped to
+    [``MIN_CHUNK_BYTES``, watermark/(stage_scale * 2)] so at least two
+    chunks fit under the staging watermark, and rounded to 256 KiB.
+    """
+    spec, n_nics = NIC_PRESETS[nic]
+    fix_us = POST_US.get(spec.name, 0.1) + spec.fixed_us
+    wire_us_per_byte = 8e-3 / (spec.bw_gbps * spec.eff * n_nics)
+    c = (max(1, bytes_per_rank) * fix_us / (stages * wire_us_per_byte)) ** 0.5
+    cap = max(MIN_CHUNK_BYTES, int(watermark_bytes / max(stage_scale, 1e-9) / 2))
+    c = min(max(int(c), MIN_CHUNK_BYTES), cap)
+    return max(MIN_CHUNK_BYTES, (c // MIN_CHUNK_BYTES) * MIN_CHUNK_BYTES)
+
+
+def resolve_chunk_bytes(chunk_bytes, routes: Sequence[Route], nic: str, *,
+                        watermark_bytes: int = 2 << 30,
+                        stage_scale: float = 1.0):
+    """``chunk_bytes="auto"`` => derive from the NIC cost model and the
+    busiest rank's wire bytes; int/None pass through unchanged.  The
+    single aggregation point for every "auto" consumer (engine + benches)."""
+    if chunk_bytes != "auto":
+        return chunk_bytes
+    per_rank: Dict[int, int] = {}
+    for r in routes:
+        per_rank[r.train_rank] = per_rank.get(r.train_rank, 0) + r.nbytes
+    return autotune_chunk_bytes(nic, max(per_rank.values(), default=1),
+                                watermark_bytes=watermark_bytes,
+                                stage_scale=stage_scale)
 
 # Immediate-value block for weight updates: data and commit immediates are
 # distinct per update_id so back-to-back updates never alias counters.
@@ -282,14 +333,18 @@ class RankPipeline:
         return self.prep_work_us
 
 
-def run_pipelined_update(
+def launch_pipelined_update(
         fabric: Fabric, chunks_by_rank: Dict[int, List[StageChunk]], *,
         make_submit: Callable[[int, "RankPipeline"],
                               Callable[[List[StageChunk]], None]],
         commit_fn: Optional[Callable[[], None]],
         watermark_bytes: int, window_us: float, h2d: bool,
-        h2d_gbps: float, prep_gbps: float) -> Dict[str, float]:
-    """Drive every rank's pipeline to completion and (optionally) commit.
+        h2d_gbps: float, prep_gbps: float) -> Callable[[], Dict[str, float]]:
+    """Create and START every rank's pipeline NOW — without draining the
+    fabric — and return a ``collect()`` closure for the stats once the run
+    has quiesced.  This is the overlap building block: a second update can
+    be launched while the first is still in flight (its chunks admitted
+    behind the first's tail), each with its own per-``update_id`` commit.
 
     ``make_submit(rank, pipe)`` returns the window-flush callback that
     actually posts the chunk WRITEs; it must arrange for
@@ -301,6 +356,7 @@ def run_pipelined_update(
     pipes: Dict[int, RankPipeline] = {}
     state = {"remaining": sum(len(v) for v in chunks_by_rank.values()),
              "writes_sent": 0}
+    t0 = fabric.now
 
     def chunk_done(pipe: RankPipeline, c: StageChunk) -> None:
         pipe.chunk_sent(c)
@@ -319,49 +375,67 @@ def run_pipelined_update(
         pipe.chunk_done_cb = lambda c, pipe=pipe: chunk_done(pipe, c)
         pipes[rank] = pipe
 
-    t0 = fabric.now
     for pipe in pipes.values():
         pipe.start()
     if state["remaining"] == 0 and commit_fn is not None:
         commit_fn()                            # empty (all-clean delta) update
-    t_end = fabric.run()
 
-    n_chunks = sum(len(v) for v in chunks_by_rank.values())
-    return {
-        "total_us": t_end - t0,
-        "h2d_us": max((p.h2d_total_us for p in pipes.values()), default=0.0),
-        "prep_us": max((p.prep_total_us for p in pipes.values()), default=0.0),
-        "writes": state["writes_sent"],
-        "n_chunks": n_chunks,
-        "n_batches": sum(p.n_flushes for p in pipes.values()),
-        "peak_staged_bytes": max((p.peak_staged for p in pipes.values()),
-                                 default=0),
-        "watermark_ok": all(p.peak_staged <= watermark_bytes
-                            for p in pipes.values()),
-        "all_sent": state["remaining"] == 0,
-    }
+    def collect() -> Dict[str, float]:
+        return {
+            "total_us": fabric.now - t0,
+            "h2d_us": max((p.h2d_total_us for p in pipes.values()), default=0.0),
+            "prep_us": max((p.prep_total_us for p in pipes.values()), default=0.0),
+            "writes": state["writes_sent"],
+            "n_chunks": sum(len(v) for v in chunks_by_rank.values()),
+            "n_batches": sum(p.n_flushes for p in pipes.values()),
+            "peak_staged_bytes": max((p.peak_staged for p in pipes.values()),
+                                     default=0),
+            "watermark_ok": all(p.peak_staged <= watermark_bytes
+                                for p in pipes.values()),
+            "all_sent": state["remaining"] == 0,
+        }
+
+    return collect
+
+
+def run_pipelined_update(
+        fabric: Fabric, chunks_by_rank: Dict[int, List[StageChunk]], *,
+        make_submit, commit_fn, watermark_bytes: int, window_us: float,
+        h2d: bool, h2d_gbps: float, prep_gbps: float) -> Dict[str, float]:
+    """Launch one pipelined update and drive the fabric until idle."""
+    collect = launch_pipelined_update(
+        fabric, chunks_by_rank, make_submit=make_submit, commit_fn=commit_fn,
+        watermark_bytes=watermark_bytes, window_us=window_us, h2d=h2d,
+        h2d_gbps=h2d_gbps, prep_gbps=prep_gbps)
+    fabric.run()
+    return collect()
 
 
 # ---------------------------------------------------------------------------
 # executors
 # ---------------------------------------------------------------------------
 
-def p2p_transfer(cluster: Cluster, routes: List[Route], *,
-                 watermark_bytes: int = 2 << 30, h2d: bool = True,
-                 chunk_bytes: Optional[int] = None,
-                 window_us: float = DEFAULT_WINDOW_US,
-                 stage_scale: float = 1.0,
-                 h2d_gbps: float = H2D_GBPS, prep_gbps: float = PREP_GBPS,
-                 update_id: int = 0, commit: bool = True) -> Dict[str, float]:
-    """Pipelined point-to-point weight update.  Returns stage timings (us).
-
-    Every training rank runs the watermark-bounded chunk pipeline; windows
-    of prepared chunks post as single WrBatches (``submit_scatters``, one
-    group per chunk so staging frees per chunk); with ``commit=True`` the
-    update ends with the two-phase commit barrier and the returned stats
-    carry per-rank flip records ("commits").
+def launch_p2p_update(cluster: Cluster, routes: List[Route], *,
+                      watermark_bytes: int = 2 << 30, h2d: bool = True,
+                      chunk_bytes=None,
+                      window_us: float = DEFAULT_WINDOW_US,
+                      stage_scale: float = 1.0,
+                      h2d_gbps: float = H2D_GBPS, prep_gbps: float = PREP_GBPS,
+                      update_id: int = 0, commit: bool = True,
+                      src_handles: Optional[List[MrHandle]] = None
+                      ) -> Callable[[], Dict[str, float]]:
+    """Start a pipelined p2p update on a (possibly already running) fabric
+    and return its ``collect()`` closure — the overlap building block for
+    async RL, where update N+1 begins while update N's tail is still in
+    flight.  Per-``update_id`` data/commit immediates keep the two updates'
+    gates independent.  ``src_handles`` overrides the cluster's registered
+    training shards (e.g. a second set of buffers for the next version).
     """
     fab = cluster.fabric
+    nic = cluster.train_engines[0].nic_name
+    chunk_bytes = resolve_chunk_bytes(chunk_bytes, routes, nic,
+                                      watermark_bytes=watermark_bytes,
+                                      stage_scale=stage_scale)
     chunks_by_rank = plan_chunks(routes, chunk_bytes=chunk_bytes,
                                  watermark_bytes=watermark_bytes,
                                  stage_scale=stage_scale)
@@ -372,10 +446,11 @@ def p2p_transfer(cluster: Cluster, routes: List[Route], *,
                                  update_id)
 
     imm = data_imm(update_id) if commit else None
+    handles = src_handles if src_handles is not None else cluster.train_handles
 
     def make_submit(rank: int, pipe: RankPipeline):
         eng = cluster.train_engines[rank]
-        handle = cluster.train_handles[rank]
+        handle = handles[rank]
 
         def submit(window: List[StageChunk]) -> None:
             eng.submit_scatters([
@@ -392,22 +467,63 @@ def p2p_transfer(cluster: Cluster, routes: List[Route], *,
         cluster.train_engines[0].submit_barrier(
             list(cluster.infer_descs), commit_imm(update_id))
 
-    stats = run_pipelined_update(
+    collect_pipe = launch_pipelined_update(
         fab, chunks_by_rank,
         make_submit=make_submit,
         commit_fn=commit_fn if commit else None,
         watermark_bytes=watermark_bytes, window_us=window_us, h2d=h2d,
         h2d_gbps=h2d_gbps, prep_gbps=prep_gbps)
-    if commit:
-        stats["commits"] = [len(g.flips) for g in gates]
-        stats["committed"] = all(
-            len(g.flips) == 1 and g.flips[0][1] == update_id for g in gates)
-    return stats
+
+    def collect() -> Dict[str, float]:
+        stats = collect_pipe()
+        stats["chunk_bytes"] = chunk_bytes
+        if commit:
+            stats["commits"] = [len(g.flips) for g in gates]
+            stats["committed"] = all(
+                len(g.flips) == 1 and g.flips[0][1] == update_id
+                for g in gates)
+        return stats
+
+    return collect
 
 
-def rank0_transfer(cluster: Cluster, routes: List[Route]) -> Dict[str, float]:
+def p2p_transfer(cluster: Cluster, routes: List[Route], *,
+                 watermark_bytes: int = 2 << 30, h2d: bool = True,
+                 chunk_bytes=None,
+                 window_us: float = DEFAULT_WINDOW_US,
+                 stage_scale: float = 1.0,
+                 h2d_gbps: float = H2D_GBPS, prep_gbps: float = PREP_GBPS,
+                 update_id: int = 0, commit: bool = True) -> Dict[str, float]:
+    """Pipelined point-to-point weight update.  Returns stage timings (us).
+
+    Every training rank runs the watermark-bounded chunk pipeline; windows
+    of prepared chunks post as single WrBatches (``submit_scatters``, one
+    group per chunk so staging frees per chunk); with ``commit=True`` the
+    update ends with the two-phase commit barrier and the returned stats
+    carry per-rank flip records ("commits").  ``chunk_bytes`` may be an
+    int, None (watermark-capped whole ranges), or ``"auto"`` (per-NIC cost
+    model via :func:`autotune_chunk_bytes`).
+    """
+    collect = launch_p2p_update(
+        cluster, routes, watermark_bytes=watermark_bytes, h2d=h2d,
+        chunk_bytes=chunk_bytes, window_us=window_us,
+        stage_scale=stage_scale, h2d_gbps=h2d_gbps, prep_gbps=prep_gbps,
+        update_id=update_id, commit=commit)
+    cluster.fabric.run()
+    return collect()
+
+
+def rank0_transfer(cluster: Cluster, routes: List[Route], *,
+                   update_id: int = 0,
+                   commit: bool = True) -> Dict[str, float]:
     """Baseline: gather all shards to train rank0, then rank0 WRITEs
-    everything to every inference rank (collective-world pattern)."""
+    everything to every inference rank (collective-world pattern).
+
+    With ``commit=True`` the broadcast ends with the same two-phase commit
+    as the p2p path (data immediates per WRITE + one commit barrier, a
+    :class:`CommitGate` flip per inference rank) — protocol parity for the
+    Table-5 comparison: the baseline's deficit is bandwidth, not a lighter
+    contract."""
     fab = cluster.fabric
     eng0 = cluster.train_engines[0]
     # gather: every other train rank sends its shard to rank0
@@ -436,16 +552,36 @@ def rank0_transfer(cluster: Cluster, routes: List[Route]) -> Dict[str, float]:
     for r in routes:
         by_infer.setdefault(r.infer_rank, []).append(r)
     shard_sz = cluster.train_bufs[0].size
+
+    gates: List[CommitGate] = []
+    if commit:
+        for ir, eng in enumerate(cluster.infer_engines):
+            gate = CommitGate(eng)
+            gate.arm(update_id, len(by_infer.get(ir, [])))
+            gates.append(gate)
+
+    imm = data_imm(update_id) if commit else None
     writes = []
     for ir, rs in by_infer.items():
         for r in rs:
             src_off = r.train_rank * shard_sz + r.src_off
-            writes.append((r.nbytes, None, (h0, src_off),
+            writes.append((r.nbytes, imm, (h0, src_off),
                            (cluster.infer_descs[ir], r.dst_off)))
-    eng0.submit_write_batch(writes)
+
+    def broadcast_done() -> None:
+        if commit:
+            eng0.submit_barrier(list(cluster.infer_descs),
+                                commit_imm(update_id))
+
+    eng0.submit_write_batch(writes, on_done=broadcast_done)
     t_end = fab.run()
-    return {"gather_us": t_gather, "total_us": t_end,
-            "bottleneck": "train rank0 NIC"}
+    stats = {"gather_us": t_gather, "total_us": t_end,
+             "bottleneck": "train rank0 NIC"}
+    if commit:
+        stats["commits"] = [len(g.flips) for g in gates]
+        stats["committed"] = all(
+            len(g.flips) == 1 and g.flips[0][1] == update_id for g in gates)
+    return stats
 
 
 def verify_contents(cluster: Cluster, routes: List[Route]) -> bool:

@@ -1,0 +1,301 @@
+"""The rebuilt moekit decode fast path (ISSUE 5 / paper §6).
+
+Covers: bit-exactness vs the dense oracle across EP/t_priv/skewed expert
+distributions, the <=2-data-WRITEs-per-peer invariant via ``batch_stats``,
+route-only offset derivation (endpoints hold nothing but PeerPorts),
+ImmCounter parity under SRD shuffle, and cross-process bit-stability.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import Fabric, MrDesc
+from repro.moekit import (MoEConfig, MoEEndpoint, PeerPorts, make_endpoints,
+                          multi_arange, oracle, run_moe_layer)
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def _mk_inputs(cfg: MoEConfig, rng, skew: str = "uniform"):
+    """tokens/eids/gates per rank; ``skew`` shapes the expert distribution."""
+    N, E, R, T = cfg.n_ranks, cfg.n_experts, cfg.top_k, cfg.max_tokens
+    tokens, eids, gates = [], [], []
+    for r in range(N):
+        tokens.append(rng.normal(size=(T, cfg.token_bytes // 4))
+                      .astype(np.float32))
+        if skew == "hot-rank":
+            # every token routes to the lowest-ranked experts (top-k stays
+            # distinct, so the fewest ranks get the hottest load)
+            n_pool = min(E, -(-R // cfg.e_local) * cfg.e_local)
+            pool = np.arange(n_pool)
+            ei = np.stack([rng.choice(pool, R, replace=False)
+                           for _ in range(T)])
+        elif skew == "self-heavy":
+            # tokens prefer their own rank's experts, spilling to the rest
+            # only when top_k exceeds e_local (top-k stays distinct)
+            lo = r * cfg.e_local
+            own = np.arange(lo, lo + cfg.e_local)
+            rest = np.setdiff1d(np.arange(E), own)
+            rows = []
+            for _ in range(T):
+                picks = np.concatenate([rng.permutation(own),
+                                        rng.permutation(rest)])[:R]
+                rows.append(picks)
+            ei = np.stack(rows)
+        else:
+            ei = np.stack([rng.choice(E, R, replace=False) for _ in range(T)])
+        ei = ei.astype(np.int32)
+        eids.append(ei)
+        g = np.zeros((T, E), np.float32)
+        for t in range(T):
+            w = rng.random(R)
+            g[t, ei[t]] = (w / w.sum()).astype(np.float32)
+        gates.append(g)
+    return tokens, eids, gates
+
+
+def _counts_matrix(cfg, eids):
+    """n[i, j] = token copies rank i sends to rank j's local experts."""
+    N = cfg.n_ranks
+    n = np.zeros((N, N), np.int64)
+    for i in range(N):
+        dest = eids[i].reshape(-1) // cfg.e_local
+        n[i] += np.bincount(dest, minlength=N)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,R,T,t_priv,nic,skew", [
+    (2, 2, 4, 1, "efa", "uniform"),
+    (4, 4, 9, 2, "cx7", "uniform"),
+    (2, 4, 9, 64, "efa", "uniform"),       # everything fits private
+    (4, 2, 16, 0, "efa", "uniform"),       # no private buffers at all
+    (8, 8, 16, 4, "cx7", "uniform"),
+    (4, 4, 8, 2, "efa", "hot-rank"),       # max skew: one hot rank
+    (4, 4, 8, 3, "cx7", "self-heavy"),
+])
+def test_bit_exact_vs_dense_oracle(N, R, T, t_priv, nic, skew):
+    """Element-wise expert fns make the fabric result BIT-equal to the
+    dense oracle (fp32 sums accumulate in the same expert-ascending
+    order); checked with array_equal, not allclose."""
+    rng = np.random.default_rng(N * 1000 + R * 100 + T + t_priv)
+    E = max(2 * N, R)
+    cfg = MoEConfig(n_ranks=N, n_experts=E, top_k=min(R, E), max_tokens=T,
+                    token_bytes=64, t_priv=t_priv)
+    fab = Fabric(seed=7)
+    eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=2)
+    tokens, eids, gates = _mk_inputs(cfg, rng, skew)
+    f = lambda e, x: np.tanh(x) * (e + 1)
+    res, stats = run_moe_layer(fab, eps, tokens, eids, gates, f)
+    ref = oracle(tokens, eids, gates, f, E)
+    for r in range(N):
+        assert np.array_equal(res[r], ref[r])
+    assert all(d > 0 for d in stats["dispatch_us"])
+    assert all(c > 0 for c in stats["combine_us"])
+
+
+# ---------------------------------------------------------------------------
+# <=2 data WRITEs per peer, asserted via batch_stats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nic,t_priv,skew", [
+    ("efa", 2, "uniform"), ("cx7", 2, "hot-rank"), ("efa", 0, "uniform"),
+])
+def test_dispatch_posts_at_most_two_data_writes_per_peer(nic, t_priv, skew):
+    """Per dispatch round, each endpoint posts to each peer exactly
+    1 route WRITE + (<=2) data WRITEs — private iff any tokens go there,
+    shared iff they exceed the private budget — and the whole round rides
+    one WrBatch enqueue per phase."""
+    N, R, T = 4, 4, 12
+    E = 2 * N
+    cfg = MoEConfig(n_ranks=N, n_experts=E, top_k=R, max_tokens=T,
+                    token_bytes=32, t_priv=t_priv)
+    fab = Fabric(seed=3)
+    eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=2)
+    rng = np.random.default_rng(5)
+    tokens, eids, gates = _mk_inputs(cfg, rng, skew)
+    n_ij = _counts_matrix(cfg, eids)
+
+    before = [ep.engine.batch_stats.snapshot_by_dst() for ep in eps]
+    before_batches = [ep.engine.batch_stats.batches for ep in eps]
+    ctxs = [ep.dispatch(tokens[i].view(np.uint8).reshape(T, -1), eids[i],
+                        lambda: None) for i, ep in enumerate(eps)]
+    fab.run()
+
+    for i, ep in enumerate(eps):
+        after = ep.engine.batch_stats.snapshot_by_dst()
+        for j, peer in enumerate(eps):
+            addr = peer.engine.main_address()
+            sent = after.get(addr, 0) - before[i].get(addr, 0)
+            data = sent - 1                      # minus the route WRITE
+            assert data <= 2, (i, j, sent)
+            expect = int(min(n_ij[i, j], cfg.t_priv) > 0) + \
+                int(n_ij[i, j] > cfg.t_priv)
+            assert data == expect, (i, j, data, expect)
+        # one WrBatch enqueue per phase: routes+private, then shared
+        enq = ep.engine.batch_stats.batches - before_batches[i]
+        assert enq <= 2, enq
+
+    # combine adds at most ONE more WRITE and one enqueue per peer
+    before = [ep.engine.batch_stats.snapshot_by_dst() for ep in eps]
+    before_batches = [ep.engine.batch_stats.batches for ep in eps]
+    for i, ep in enumerate(eps):
+        slabs = ep.gather_expert_tokens(ctxs[i])
+        ep.combine(ctxs[i], slabs, lambda: None)
+    fab.run()
+    for i, ep in enumerate(eps):
+        after = ep.engine.batch_stats.snapshot_by_dst()
+        for j, peer in enumerate(eps):
+            addr = peer.engine.main_address()
+            sent = after.get(addr, 0) - before[i].get(addr, 0)
+            assert sent == int(n_ij[j, i] > 0), (i, j, sent)
+        assert ep.engine.batch_stats.batches - before_batches[i] <= 1
+
+
+# ---------------------------------------------------------------------------
+# route-only offset derivation: endpoints know peers ONLY as PeerPorts
+# ---------------------------------------------------------------------------
+
+def test_endpoints_hold_only_peer_ports():
+    """No endpoint object graph reaches another endpoint: connect() takes
+    serializable PeerPorts (rank + MrDescs) and nothing else; the legacy
+    ``peers`` / ``_last_ctx`` backdoors are gone."""
+    cfg = MoEConfig(n_ranks=2, n_experts=4, top_k=2, max_tokens=4,
+                    token_bytes=32, t_priv=1)
+    fab = Fabric(seed=0)
+    eps = make_endpoints(fab, cfg, nic="cx7", gpus_per_node=2)
+    for ep in eps:
+        assert not hasattr(ep, "peers")
+        assert not hasattr(ep, "_last_ctx")
+        for p in ep.ports:
+            assert isinstance(p, PeerPorts)
+            for d in (p.d_routes, p.d_priv, p.d_shared, p.d_comb):
+                assert isinstance(d, MrDesc)
+    with pytest.raises(ValueError, match="ranks 0..N-1"):
+        eps[0].connect(list(reversed(eps[0].ports)))
+
+
+def test_route_only_offsets_with_isolated_construction():
+    """Endpoints built one at a time, wired purely through the serializable
+    ports — placement must come from the wire-exchanged routes."""
+    N, E, R, T = 4, 8, 2, 6
+    cfg = MoEConfig(n_ranks=N, n_experts=E, top_k=R, max_tokens=T,
+                    token_bytes=64, t_priv=2)
+    fab = Fabric(seed=11)
+    eps = []
+    for r in range(N):
+        eng = fab.add_engine(f"iso{r}", nic="efa")
+        eps.append(MoEEndpoint(fab, cfg, r, eng))
+    ports = [ep.port() for ep in eps]
+    for ep in eps:
+        ep.connect(ports)
+    rng = np.random.default_rng(2)
+    tokens, eids, gates = _mk_inputs(cfg, rng)
+    f = lambda e, x: x * (e + 2)
+    res, _ = run_moe_layer(fab, eps, tokens, eids, gates, f)
+    ref = oracle(tokens, eids, gates, f, E)
+    for r in range(N):
+        assert np.array_equal(res[r], ref[r])
+
+
+# ---------------------------------------------------------------------------
+# ImmCounter parity under SRD shuffle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 3, 17])
+def test_srd_shuffle_parity_with_ordered_rc(seed):
+    """The same round on EFA (unordered SRD, jittered delivery) and CX7
+    (ordered RC) must land byte-identical results and identical ImmCounter
+    totals — completion accounting never leans on delivery order."""
+    N, E, R, T = 4, 8, 4, 10
+    cfg = MoEConfig(n_ranks=N, n_experts=E, top_k=R, max_tokens=T,
+                    token_bytes=64, t_priv=2)
+    rng_in = np.random.default_rng(seed)
+    inputs = _mk_inputs(cfg, rng_in)
+    f = lambda e, x: np.tanh(x) + e
+    results = {}
+    for nic in ("efa", "cx7"):
+        fab = Fabric(seed=seed)
+        eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=2)
+        res, _ = run_moe_layer(fab, eps, *inputs, f)
+        imms = [dict(ep.engine.counters[0].counts) for ep in eps]
+        results[nic] = (res, imms)
+    res_e, imm_e = results["efa"]
+    res_c, imm_c = results["cx7"]
+    for r in range(N):
+        assert np.array_equal(res_e[r], res_c[r])
+    assert imm_e == imm_c
+
+
+# ---------------------------------------------------------------------------
+# cross-process bit-stability (PYTHONHASHSEED)
+# ---------------------------------------------------------------------------
+
+_PROBE = """
+import numpy as np
+from repro.core import Fabric
+from repro.moekit import MoEConfig, make_endpoints, oracle, run_moe_layer
+cfg = MoEConfig(n_ranks=4, n_experts=8, top_k=2, max_tokens=8,
+                token_bytes=64, t_priv=2)
+fab = Fabric(seed=9)
+eps = make_endpoints(fab, cfg, nic="efa", gpus_per_node=2)
+rng = np.random.default_rng(1)
+tokens, eids, gates = [], [], []
+for r in range(4):
+    tokens.append(rng.normal(size=(8, 16)).astype(np.float32))
+    ei = np.stack([rng.choice(8, 2, replace=False) for _ in range(8)]).astype(np.int32)
+    eids.append(ei)
+    g = np.zeros((8, 8), np.float32)
+    for t in range(8):
+        g[t, ei[t]] = 0.5
+    gates.append(g)
+res, stats = run_moe_layer(fab, eps, tokens, eids, gates, lambda e, x: x + e)
+print(",".join(f"{d:.9f}" for d in stats["dispatch_us"]))
+print(",".join(f"{c:.9f}" for c in stats["combine_us"]))
+print(f"{float(np.sum([r.sum() for r in res])):.9f}")
+"""
+
+
+def test_moe_round_bit_stable_across_hashseed():
+    """Simulated dispatch/combine stats and results are identical in
+    processes with different PYTHONHASHSEED (moe.csv reproducibility)."""
+    outs = []
+    for hs in ("1", "31337"):
+        env = dict(os.environ, PYTHONPATH=SRC, PYTHONHASHSEED=hs)
+        out = subprocess.run([sys.executable, "-c", _PROBE], env=env,
+                             capture_output=True, text=True, timeout=120)
+        assert out.returncode == 0, out.stderr
+        outs.append(out.stdout)
+    assert outs[0] == outs[1]
+
+
+def test_dispatch_rejects_duplicate_expert_slots():
+    """Duplicate experts in one token's top-k would overflow the
+    T*min(top_k, E/N)-sized per-source shared regions — dispatch must
+    refuse them up front instead of corrupting a neighbour region."""
+    cfg = MoEConfig(n_ranks=2, n_experts=4, top_k=2, max_tokens=4,
+                    token_bytes=32, t_priv=1)
+    fab = Fabric(seed=0)
+    eps = make_endpoints(fab, cfg, nic="cx7", gpus_per_node=2)
+    tokens = np.zeros((4, 32), np.uint8)
+    bad = np.array([[0, 0], [1, 2], [3, 1], [2, 3]], np.int32)
+    with pytest.raises(ValueError, match="distinct experts"):
+        eps[0].dispatch(tokens, bad, lambda: None)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def test_multi_arange():
+    out = multi_arange(np.array([5, 0, 100]), np.array([3, 0, 2]))
+    assert out.tolist() == [5, 6, 7, 100, 101]
+    assert multi_arange(np.array([]), np.array([])).size == 0

@@ -6,9 +6,10 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import Fabric
-from repro.rlweights import (CommitGate, ParamMeta, commit_imm,
-                             compute_routing, data_imm, make_cluster,
-                             p2p_transfer, plan_chunks, schedule_stats,
+from repro.rlweights import (CommitGate, ParamMeta, autotune_chunk_bytes,
+                             commit_imm, compute_routing, data_imm,
+                             launch_p2p_update, make_cluster, p2p_transfer,
+                             plan_chunks, rank0_transfer, schedule_stats,
                              verify_contents)
 
 
@@ -286,6 +287,137 @@ def _prepr_transfer(cluster, routes, h2d_gbps, prep_gbps):
 
             fab.loop.schedule(t_prep, submit)
     return fab.run()
+
+
+# ---------------------------------------------------------------------------
+# per-NIC chunk autotuning
+# ---------------------------------------------------------------------------
+
+def test_autotune_picks_per_nic_sweet_spots():
+    """EFA's ~7x higher per-WR posting+fixed cost pushes its optimum to
+    much larger chunks than CX7; both respect the clamps."""
+    B = 63 << 30
+    efa = autotune_chunk_bytes("efa", B)
+    cx7 = autotune_chunk_bytes("cx7", B)
+    assert efa > 2 * cx7
+    from repro.rlweights.transfer import MIN_CHUNK_BYTES
+    for nic in ("efa", "cx7", "efa4"):
+        c = autotune_chunk_bytes(nic, B)
+        assert c % MIN_CHUNK_BYTES == 0 and c >= MIN_CHUNK_BYTES
+    # a tight watermark caps the chunk so at least two fit
+    wm = 1 << 20
+    assert autotune_chunk_bytes("efa", B, watermark_bytes=wm,
+                                stage_scale=2.0) <= wm
+    # larger jobs get larger chunks (sqrt scaling)
+    assert autotune_chunk_bytes("efa", B) > autotune_chunk_bytes("efa", B // 64)
+
+
+def test_p2p_transfer_auto_chunking_end_to_end():
+    _, routes, sizes = _plan()
+    for nic in ("cx7", "efa"):
+        cl = _cluster(sizes, nic=nic, seed=21)
+        stats = p2p_transfer(cl, routes, chunk_bytes="auto")
+        assert stats["committed"] and verify_contents(cl, routes)
+        assert stats["chunk_bytes"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# rank0 baseline: commit parity with the p2p path
+# ---------------------------------------------------------------------------
+
+def test_rank0_transfer_commits_like_p2p():
+    """The baseline now ends with the same two-phase commit: every
+    inference rank flips exactly once, with its bytes already in place
+    (checked INSIDE the flip), and the total still includes the barrier."""
+    _, routes, sizes = _plan(quant=1.0)
+    cl = _cluster(sizes, nic="efa", seed=8)
+    by_rank = {}
+    for r in routes:
+        by_rank.setdefault(r.infer_rank, []).append(r)
+    checked = {}
+    observers = []
+    for ir, eng in enumerate(cl.infer_engines):
+        gate = CommitGate(eng)
+
+        def on_flip(_uid, ir=ir):
+            ok = all(np.array_equal(
+                cl.train_bufs[r.train_rank][r.src_off:r.src_off + r.nbytes],
+                cl.infer_bufs[r.infer_rank][r.dst_off:r.dst_off + r.nbytes])
+                for r in by_rank.get(ir, []))
+            checked.setdefault(ir, []).append(ok)
+
+        gate.arm(0, len(by_rank.get(ir, [])), on_flip=on_flip)
+        observers.append(gate)
+
+    stats = rank0_transfer(cl, routes)
+    assert stats["committed"] and stats["commits"] == [1, 1, 1, 1]
+    assert verify_contents(cl, routes)
+    assert sorted(checked) == [0, 1, 2, 3]
+    assert all(v == [True] for v in checked.values())
+
+
+# ---------------------------------------------------------------------------
+# overlapping updates (async RL): gates flip in order per update_id
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nic", ["cx7", "efa"])
+def test_overlapping_updates_commit_in_order(nic):
+    """Update 1 launches while update 0's tail is still in flight; each
+    inference rank's gates flip exactly once per update_id, in order —
+    data/commit immediates are update-scoped so the interleaved WRITEs
+    never cross-talk."""
+    _, routes, sizes = _plan(quant=1.0)
+    cl = _cluster(sizes, nic=nic, seed=31)
+    fab = cl.fabric
+
+    # the next weight version lives in fresh buffers on the same engines
+    rng = np.random.default_rng(99)
+    handles2 = []
+    for i, eng in enumerate(cl.train_engines):
+        b = rng.integers(0, 255, cl.train_bufs[i].size, dtype=np.uint8)
+        h, _ = eng.reg_mr(b)
+        handles2.append(h)
+
+    # observer gates (one per rank) record flip order across BOTH updates
+    chunk = 2048
+    n_data = {}
+    for uid in (0, 1):
+        chunks = plan_chunks(routes, chunk_bytes=chunk,
+                             watermark_bytes=2 << 30)
+        cnt = [0] * len(cl.infer_engines)
+        for cs in chunks.values():
+            for c in cs:
+                for ir, _ in c.targets:
+                    cnt[ir] += 1
+        n_data[uid] = cnt
+    observers = []
+    for ir, eng in enumerate(cl.infer_engines):
+        gate = CommitGate(eng)
+        gate.arm(0, n_data[0][ir])
+        gate.arm(1, n_data[1][ir])
+        observers.append(gate)
+
+    collect0 = launch_p2p_update(cl, routes, chunk_bytes=chunk, update_id=0)
+    launched = {}
+
+    def launch1() -> None:
+        launched["t"] = fab.now
+        launched["collect"] = launch_p2p_update(
+            cl, routes, chunk_bytes=chunk, update_id=1, src_handles=handles2)
+
+    fab.loop.schedule(40.0, launch1)   # well inside update 0's lifetime
+    fab.run()
+
+    s0, s1 = collect0(), launched["collect"]()
+    assert s0["committed"] and s1["committed"]
+    assert s0["commits"] == [1] * 4 and s1["commits"] == [1] * 4
+    for gate in observers:
+        assert gate.version == 2
+        assert [uid for _, uid in gate.flips] == [0, 1]     # in order
+        t0f, t1f = gate.flips[0][0], gate.flips[1][0]
+        assert t0f < t1f
+        # the overlap was real: update 1 started before update 0 committed
+        assert launched["t"] < t0f
 
 
 def test_p2p_pipelined_beats_prepr_path_simulated_time():
