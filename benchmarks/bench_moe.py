@@ -57,11 +57,14 @@ def _inputs(cfg: MoEConfig, seed: int = 0):
 
 
 def bench_dispatch_combine(ep: int, batch: int, nic: str,
-                           t_priv: int = 32, rounds: int = 3) -> Dict[str, float]:
+                           t_priv: int = 32, rounds: int = 3,
+                           nvlink: bool = False,
+                           nics=None) -> Dict[str, float]:
     cfg = MoEConfig(n_ranks=ep, n_experts=max(E_TOTAL, ep), top_k=TOP_K,
                     max_tokens=batch, token_bytes=TOKEN_BYTES, t_priv=t_priv)
     fab = Fabric(seed=1)
-    eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=8)
+    eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=8,
+                         nvlink=nvlink, nics=nics)
     disp, comb = [], []
     disp_wr_peer = 0.0
     for rnd in range(rounds):
@@ -166,6 +169,31 @@ def run(report) -> None:
     keep("moe_prefill_ep16_cx7", pre)
     report("moe_prefill_ep16_cx7", pre["dispatch_us"],
            f"us dispatch (256 tok/rank chunk); combine {pre['combine_us']:.0f}us")
+    # NVLink intra-node rows (paper §6: same-node payloads ride NVLink while
+    # the NIC keeps cross-node traffic) — same geometry as the Fig. 9 rows
+    for nic in ("cx7", "efa"):
+        for ep in EP_SWEEP:
+            base = summary[f"moe_decode_ep{ep}_{nic}"]
+            # same round count as the all-NIC rows so the medians compare
+            r = bench_dispatch_combine(ep, 128, nic, rounds=DECODE_ROUNDS,
+                                       nvlink=True)
+            keep(f"moe_decode_ep{ep}_{nic}_nvl", r)
+            report(f"moe_decode_ep{ep}_{nic}_nvl", r["dispatch_us"],
+                   f"us dispatch w/ NVLink intra-node; combine "
+                   f"{r['combine_us']:.0f}us; all-NIC row "
+                   f"{base['dispatch_us']:.0f}us dispatch")
+    # Holmes-style mixed cluster: node0 ranks on CX7, node1 ranks on EFA,
+    # NVLink inside each node; cross-node pairs ride the derived x:cx7+efa200
+    # preset (bottleneck bw, summed latency, SRD jitter survives)
+    mep = 16
+    mixed = bench_dispatch_combine(
+        mep, 128, "cx7", rounds=1, nvlink=True,
+        nics=["cx7"] * 8 + ["efa"] * (mep - 8))
+    keep(f"moe_decode_ep{mep}_mixed_cx7_efa", mixed)
+    report(f"moe_decode_ep{mep}_mixed_cx7_efa", mixed["dispatch_us"],
+           f"us dispatch, mixed CX7+EFA nodes w/ NVLink; combine "
+           f"{mixed['combine_us']:.0f}us (cross-cluster pairs on derived "
+           f"x:cx7+efa200 cost model)")
     if not SMOKE:
         bench_dual_batch_overlap(report, summary)
 

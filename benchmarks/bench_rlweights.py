@@ -65,10 +65,12 @@ def _routes(changed: Optional[List[str]] = None):
                            quant_ratio=QUANT, changed=changed)
 
 
-def synthetic_cluster(n_train: int, n_infer: int, nic: str = "efa"):
+def synthetic_cluster(n_train: int, n_infer: int, nic: str = "efa",
+                      infer_nic: Optional[str] = None):
     fab = Fabric(seed=0)
     te = [fab.add_engine(f"t{i}", nic=nic) for i in range(n_train)]
-    ie = [fab.add_engine(f"i{i}", nic=nic) for i in range(n_infer)]
+    ie = [fab.add_engine(f"i{i}", nic=infer_nic or nic)
+          for i in range(n_infer)]
     descs = []
     for e in ie:
         buf = np.zeros(1, np.uint8)
@@ -78,19 +80,24 @@ def synthetic_cluster(n_train: int, n_infer: int, nic: str = "efa"):
 
 
 def p2p_synthetic(nic: str = "efa", changed: Optional[List[str]] = None,
-                  chunk_bytes: Optional[int] = None) -> Dict[str, float]:
+                  chunk_bytes: Optional[int] = None,
+                  infer_nic: Optional[str] = None) -> Dict[str, float]:
     """The staged §5.2 pipeline over synthetic writes: chunked staging under
     the watermark, one WrBatch per pipeline window, two-phase commit.  Each
     FSDP source range is H2D'd + prepared ONCE and WRITTEN to every TP
     replica (16x wire amplification — exactly why the paper needs
-    full-cluster bisection).  ``chunk_bytes`` defaults to the per-NIC
-    autotuned sweet spot (post/enqueue cost model, ROADMAP item)."""
+    full-cluster bisection).  ``chunk_bytes`` defaults to the per-pair
+    autotuned sweet spot (post/enqueue cost model, ROADMAP item).
+    ``infer_nic`` puts the inference cluster on a different NIC kind — the
+    Holmes cross-zone shape; writes then ride the derived cross-fabric
+    pair spec and the autotune uses its cost model."""
     routes, _sizes = _routes(changed)
     if chunk_bytes is None:
         chunk_bytes = resolve_chunk_bytes(
             "auto", routes, nic, watermark_bytes=WATERMARK,
-            stage_scale=STAGE_SCALE)
-    fab, te, ie, descs = synthetic_cluster(N_TRAIN, N_INFER, nic)
+            stage_scale=STAGE_SCALE, dst_nic=infer_nic)
+    fab, te, ie, descs = synthetic_cluster(N_TRAIN, N_INFER, nic,
+                                           infer_nic=infer_nic)
     chunks_by_rank = plan_chunks(routes, chunk_bytes=chunk_bytes,
                                  watermark_bytes=WATERMARK,
                                  stage_scale=STAGE_SCALE)
@@ -249,6 +256,17 @@ def _run_inner(report) -> None:
                f"existing frameworks); committed={r0['committed']} "
                f"(same two-phase protocol); p2p speedup "
                f"{r0['total_ms'] / p2p['total_ms']:.0f}x")
+
+    # Holmes cross-zone shape: CX7 training cluster -> EFA inference
+    # cluster in one fabric; every train->infer pair rides the derived
+    # x:cx7+efa200 cost model (bottleneck bw, summed latency, SRD jitter)
+    mixed = p2p_synthetic("cx7", infer_nic="efa")
+    summary["p2p_mixed_cx7_efa"] = mixed
+    report("rl_p2p_total_mixed_cx7_efa", mixed["total_ms"] * 1e3,
+           f"us = {mixed['total_ms']:.0f}ms total, CX7 train -> EFA infer "
+           f"(cross-fabric pair spec; chunk "
+           f"{mixed['chunk_bytes'] / (1 << 20):.1f}MiB from the pair cost "
+           f"model), committed={mixed['committed']}")
 
     if os.environ.get("BENCH_RL_COMPARE") == "1":
         pre = p2p_synthetic_prepr("efa")

@@ -10,7 +10,8 @@ from .domain import (MrDesc, MrHandle, NetAddr, Pages, PayloadDst,
 from .engine import (BatchState, BatchStats, Fabric, Flag, TransferEngine,
                      WriteState, NIC_PRESETS)
 from .imm_counter import ImmCounter
-from .netsim import CX7, EFA_100, EFA_200, EventLoop, NicSpec
+from .netsim import CX7, EFA_100, EFA_200, NVLINK, EventLoop, NicSpec
+from .topology import ChannelPlan, TopoEntry, Topology, cross_spec
 from .uvm import UvmWatcher
 
 __all__ = [
@@ -18,5 +19,6 @@ __all__ = [
     "MrDesc", "MrHandle", "NetAddr", "Pages", "PayloadDst", "ScatterDst",
     "WrBatch", "BatchState", "BatchStats", "WriteState",
     "ImmCounter", "UvmWatcher",
-    "EventLoop", "NicSpec", "CX7", "EFA_100", "EFA_200",
+    "EventLoop", "NicSpec", "CX7", "EFA_100", "EFA_200", "NVLINK",
+    "Topology", "TopoEntry", "ChannelPlan", "cross_spec",
 ]

@@ -6,6 +6,14 @@ is specialised to a single NIC (queue-pair management, work submission,
 completion polling).  Transfers submitted to the group are sharded and
 rotated across the available NICs — essential on EFA where 2-4 NICs must be
 aggregated to reach 400 Gbps.
+
+Channel selection is **per destination pair** (heterogeneous-fabric
+refactor): each Domain keeps a pair-keyed channel table and asks the
+fabric's :class:`~repro.core.topology.Topology` which transport a peer pair
+rides — NVLink for same-host pairs, the Domain's own NIC for same-kind
+pairs, or a derived cross-fabric preset for mixed-NIC pairs.  Off-NIC
+transports (NVLink, cross) are served by dedicated per-pair queues so the
+NIC pipeline stays free for the traffic that actually crosses it (paper §6).
 """
 
 from __future__ import annotations
@@ -17,6 +25,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .netsim import EventLoop, NicQueue, NicSpec, POST_US, stable_hash
+from .topology import ChannelPlan, Topology
 from .transport import Channel, WireOp
 
 
@@ -40,6 +49,7 @@ class Pages:
     offset: int = 0
 
     def resolve(self, page_len: int) -> List[int]:
+        """Byte offsets of each page within the owning region."""
         return [int(i) * self.stride + self.offset for i in self.indices]
 
 
@@ -68,6 +78,7 @@ class MemoryRegion:
         self.buf[offset:offset + n] = np.frombuffer(data, np.uint8)
 
     def read_bytes(self, offset: int, nbytes: int) -> bytes:
+        """Copy ``nbytes`` out of the region (bounds-checked)."""
         if offset < 0 or offset + nbytes > self.buf.size:
             raise IndexError("local read out of bounds")
         return self.buf[offset:offset + nbytes].tobytes()
@@ -104,6 +115,8 @@ class MrDesc:
 
 @dataclass(frozen=True)
 class ScatterDst:
+    """One scatter destination: a slice of the source MR -> a remote offset."""
+
     len: int
     src: int                      # offset into the scatter source MR
     dst: Tuple[MrDesc, int]       # (remote descriptor, remote offset)
@@ -145,6 +158,7 @@ class WrBatch:
 
     def add(self, op: WireOp, dst_group: "DomainGroup",
             nic_index: Optional[int] = None, extra_post_us: float = 0.0) -> None:
+        """Template one WR into the batch (posted later, in batch order)."""
         self.wrs.append((op, dst_group, nic_index, extra_post_us))
         self.nbytes += op.nbytes
 
@@ -160,30 +174,62 @@ class WrBatch:
 
 
 class Domain:
-    """One NIC: owns a NicQueue and per-peer channels (queue pairs).
+    """One NIC: owns a NicQueue and a pair-keyed table of peer channels.
 
-    Same-node peers bypass the NIC through an NVLink-class channel (paper
+    Same-host peers bypass the NIC through an NVLink-class channel (paper
     §6: intra-node payloads move over NVLink while RDMA transfers run in
-    the background)."""
+    the background); mixed-NIC peers ride a derived cross-fabric preset.
+    Which transport a peer gets is resolved per pair through the owning
+    fabric's :class:`~repro.core.topology.Topology` (or, for standalone
+    groups, the legacy same-node-string rule)."""
 
-    def __init__(self, loop: EventLoop, spec: NicSpec, addr: NetAddr, index: int, seed: int):
+    def __init__(self, loop: EventLoop, spec: NicSpec, addr: NetAddr, index: int,
+                 seed: int, topology: Optional[Topology] = None):
         self.loop = loop
         self.spec = spec
         self.addr = addr
         self.index = index
         self.nic = NicQueue(loop, spec)
+        self.topology = topology
         self._channels: Dict[Tuple[NetAddr, int], Channel] = {}
         self._nvlink: Dict[NetAddr, Channel] = {}
+        self._cross: Dict[Tuple[NetAddr, int], Channel] = {}
         self._seed = seed
 
-    def channel_to(self, peer: NetAddr, peer_index: int) -> Channel:
+    def plan_for(self, peer: NetAddr) -> ChannelPlan:
+        """The resolved :class:`ChannelPlan` for traffic from here to
+        ``peer`` (cached per pair inside the topology)."""
+        if self.topology is not None:
+            return self.topology.plan(self.addr, self.spec, peer)
+        # Standalone group (no fabric topology): legacy node-string rule.
         if peer.node == self.addr.node and peer.dev != self.addr.dev:
+            from .netsim import NVLINK
+            return ChannelPlan("nvlink", NVLINK, dedicated=True)
+        return ChannelPlan("nic", self.spec, dedicated=False)
+
+    def channel_to(self, peer: NetAddr, peer_index: int) -> Channel:
+        """The (lazily created) channel carrying WireOps to ``peer``.
+
+        NVLink channels are keyed per peer address; NIC and cross-fabric
+        channels per ``(peer, peer NIC index)`` — one queue pair per remote
+        NIC, like the paper's per-QP domains.  Seed derivations on the
+        NVLink and same-kind NIC paths are unchanged from the single-kind
+        fabric, keeping their jitter streams bit-identical."""
+        plan = self.plan_for(peer)
+        if plan.kind == "nvlink":
             if peer not in self._nvlink:
-                from .netsim import NVLINK
                 seed = stable_hash(self._seed, self.addr, peer, "nvl")
                 self._nvlink[peer] = Channel(
-                    self.loop, NicQueue(self.loop, NVLINK), seed)
+                    self.loop, NicQueue(self.loop, plan.spec), seed)
             return self._nvlink[peer]
+        if plan.kind == "cross":
+            key = (peer, peer_index)
+            if key not in self._cross:
+                seed = stable_hash(self._seed, self.addr, self.index, peer,
+                                   peer_index, "x", plan.spec.name)
+                self._cross[key] = Channel(
+                    self.loop, NicQueue(self.loop, plan.spec), seed)
+            return self._cross[key]
         key = (peer, peer_index)
         if key not in self._channels:
             # Deterministic per-channel seed (process-stable).
@@ -196,14 +242,18 @@ class DomainGroup:
     """All NICs serving one GPU; shards transfers across them.
 
     The paper requires all peers to use the same number of NICs per GPU so
-    any transfer has full knowledge of both sides' NICs; we enforce that at
-    fabric construction.
+    any transfer has full knowledge of both sides' NICs.  The simulator
+    relaxes that to *per pair* knowledge: sender-side striping uses this
+    group's own NIC count, and mixed-NIC pairs resolve their transport
+    through the fabric topology (Holmes-style heterogeneous clusters).
     """
 
-    def __init__(self, loop: EventLoop, addr: NetAddr, specs: Sequence[NicSpec], seed: int):
+    def __init__(self, loop: EventLoop, addr: NetAddr, specs: Sequence[NicSpec],
+                 seed: int, topology: Optional[Topology] = None):
         self.loop = loop
         self.addr = addr
-        self.domains = [Domain(loop, s, addr, i, seed + i) for i, s in enumerate(specs)]
+        self.domains = [Domain(loop, s, addr, i, seed + i, topology=topology)
+                        for i, s in enumerate(specs)]
         self._rr = 0
         self.post_us = POST_US.get(specs[0].name, 0.1)
         self._post_busy_until = 0.0
@@ -212,6 +262,7 @@ class DomainGroup:
 
     # -- memory ---------------------------------------------------------
     def register(self, buf: np.ndarray, device: int) -> Tuple[MrHandle, MrDesc]:
+        """Register ``buf`` as an MR; returns (local handle, wire descriptor)."""
         region = MemoryRegion(buf, device)
         self.regions[region.region_id] = region
         rkeys = tuple((d.index, stable_hash(region.region_id, d.index))
@@ -220,6 +271,7 @@ class DomainGroup:
                 MrDesc(region.region_id, self.addr, buf.size, rkeys))
 
     def region(self, region_id: int) -> MemoryRegion:
+        """The registered :class:`MemoryRegion` for ``region_id``."""
         return self.regions[region_id]
 
     # -- posting --------------------------------------------------------
@@ -231,6 +283,7 @@ class DomainGroup:
         return self._post_busy_until - self.loop.now
 
     def next_domain(self) -> Domain:
+        """Round-robin NIC selection for un-pinned WRs."""
         d = self.domains[self._rr % len(self.domains)]
         self._rr += 1
         return d

@@ -33,6 +33,7 @@ from .domain import (DomainGroup, MemoryRegion, MrDesc, MrHandle, NetAddr,
 from .imm_counter import ImmCounter
 from .netsim import (ENQUEUE_US, EventLoop, NicSpec, CX7, EFA_100, EFA_200,
                      stable_hash)
+from .topology import ChannelPlan, TopoEntry, Topology, cross_spec
 from .transport import WireOp
 from .uvm import UvmWatcher
 
@@ -55,9 +56,11 @@ class Flag:
         self._set = False
 
     def set(self) -> None:
+        """Mark the flag (fired by the transport on completion)."""
         self._set = True
 
     def is_set(self) -> bool:
+        """True once the associated operation completed."""
         return self._set
 
 
@@ -92,6 +95,7 @@ class BatchStats:
         self.wrs_by_dst: Dict = {}
 
     def record(self, batch: WrBatch) -> None:
+        """Account one enqueued WrBatch (called per event-loop handoff)."""
         self.batches += 1
         self.wrs += len(batch)
         self.nbytes += batch.nbytes
@@ -107,13 +111,16 @@ class BatchStats:
 
     @property
     def wrs_per_enqueue(self) -> float:
+        """Mean WRs amortised per app->worker handoff (templating win)."""
         return self.wrs / self.batches if self.batches else 0.0
 
     @property
     def bytes_per_batch(self) -> float:
+        """Mean payload bytes per enqueued batch."""
         return self.nbytes / self.batches if self.batches else 0.0
 
     def as_dict(self) -> Dict[str, float]:
+        """All counters + derived ratios as a flat dict (bench rows)."""
         return {"batches": self.batches, "wrs": self.wrs,
                 "nbytes": self.nbytes,
                 "wrs_per_enqueue": self.wrs_per_enqueue,
@@ -132,6 +139,7 @@ class BatchState:
         self.on_done = on_done
 
     def note_sent(self) -> None:
+        """One logical write finished sending; fires ``on_done`` at zero."""
         self.remaining -= 1
         if self.remaining == 0:
             _fire(self.on_done)
@@ -156,23 +164,39 @@ class WriteState:
         self.batch = batch
 
     def on_delivered(self, op, now: float) -> None:
+        """Receiver-side stripe landing; fires the immediate on the last."""
         self.delivered += 1
         if self.delivered == self.n_parts and self.imm is not None:
             self.counter.increment(self.imm, now)
 
     def on_sent(self, now: float) -> None:
+        """Sender-side stripe completion; notifies the batch on the last."""
         self.sent += 1
         if self.sent == self.n_parts:
             self.batch.note_sent()
 
 
 class TransferEngine:
-    def __init__(self, fabric: "Fabric", node: str, nic: str, num_devices: int):
+    """The paper's Fig. 2 uniform transfer API for one node's GPUs.
+
+    One engine per (simulated) process: it owns a :class:`DomainGroup` per
+    device, the per-device :class:`ImmCounter`s, and the two-sided SEND/
+    RECV pools.  ``host`` names the physical machine the engine runs on —
+    engines sharing a host reach each other over NVLink (when ``nvlink``)
+    regardless of NIC kind; it defaults to ``node``, so a single-engine-
+    per-name fabric behaves exactly as before the heterogeneous-fabric
+    refactor."""
+
+    def __init__(self, fabric: "Fabric", node: str, nic: str, num_devices: int,
+                 host: Optional[str] = None, nvlink: bool = True):
         self.fabric = fabric
         self.loop = fabric.loop
         self.node = node
+        self.host = host if host is not None else node
+        self.nvlink = nvlink
         spec, default_n = NIC_PRESETS[nic]
         self.nic_name = nic
+        self.nic_spec = spec
         self.groups: Dict[int, DomainGroup] = {}
         self.counters: Dict[int, ImmCounter] = {}
         self._recv_pools: Dict[int, List] = {}
@@ -184,15 +208,18 @@ class TransferEngine:
         for dev in range(num_devices):
             addr = NetAddr(node, dev)
             seed = fabric.seed ^ (stable_hash(addr) & 0xFFFF)
-            self.groups[dev] = DomainGroup(self.loop, addr, [spec] * default_n, seed)
+            self.groups[dev] = DomainGroup(self.loop, addr, [spec] * default_n,
+                                           seed, topology=fabric.topology)
             self.counters[dev] = ImmCounter()
             fabric._register_group(addr, self.groups[dev], self)
 
     # -- identity ---------------------------------------------------------
     def main_address(self) -> NetAddr:
+        """The engine's device-0 address (control-plane endpoint)."""
         return NetAddr(self.node, 0)
 
     def address(self, device: int = 0) -> NetAddr:
+        """The :class:`NetAddr` of one of this engine's devices."""
         return NetAddr(self.node, device)
 
     # -- memory region management ------------------------------------------
@@ -201,11 +228,14 @@ class TransferEngine:
         return self.groups[device].register(buf, device)
 
     def region_of(self, handle: MrHandle) -> MemoryRegion:
+        """The backing :class:`MemoryRegion` for a local handle."""
         return self.fabric.group(handle.owner).region(handle.region_id)
 
     # -- two-sided SEND/RECV ------------------------------------------------
     def submit_recvs(self, length: int, count: int,
                      cb: Callable[[bytes], None], device: int = 0) -> None:
+        """Post ``count`` RECV buffers of ``length`` bytes; ``cb`` gets each
+        arriving payload and the buffer is auto re-posted (paper §3.3)."""
         pool = self._recv_pools.setdefault(device, [])
         for _ in range(count):
             pool.append((length, cb))
@@ -272,9 +302,11 @@ class TransferEngine:
     # -- completion notification --------------------------------------------
     def expect_imm_count(self, imm: int, count: int,
                          cb: Callable[[], None], device: int = 0) -> None:
+        """Fire ``cb`` when ``count`` WRITEIMMs carrying ``imm`` have landed."""
         self.counters[device].expect(imm, count, cb)
 
     def imm_value(self, imm: int, device: int = 0) -> int:
+        """Current landed-WRITEIMM count for ``imm`` on ``device``."""
         return self.counters[device].value(imm)
 
     # -- one-sided WRITE ------------------------------------------------------
@@ -316,6 +348,9 @@ class TransferEngine:
     def submit_single_write(self, length: int, imm: Optional[int],
                             src: Tuple[MrHandle, int], dst: Tuple[MrDesc, int],
                             on_done: OnDone = None) -> None:
+        """One-sided WRITE of ``length`` bytes, striped across all NICs;
+        ``imm`` (if set) increments the receiver's counter once, when the
+        last stripe lands."""
         handle, src_off = src
         desc, dst_off = dst
         src_group = self.fabric.group(handle.owner)
@@ -382,6 +417,7 @@ class TransferEngine:
 
     # -- peer groups: scatter / barrier ---------------------------------------
     def add_peer_group(self, addrs: Sequence[NetAddr]) -> int:
+        """Register a peer group for scatter/barrier; returns its id."""
         return self.fabric._add_peer_group(list(addrs))
 
     def submit_scatter(self, handle: MrHandle, dsts: Sequence[ScatterDst],
@@ -485,40 +521,73 @@ class TransferEngine:
 
     # -- UVM watcher -----------------------------------------------------------
     def alloc_uvm_watcher(self, cb: Callable[[int, int], None]) -> UvmWatcher:
+        """A :class:`UvmWatcher` for GPU-progress-driven transfers (§3.3)."""
         return UvmWatcher(self.loop, cb)
 
     # -- stats -------------------------------------------------------------------
     def bytes_sent(self, device: int = 0) -> int:
+        """Total payload bytes this device's NICs have transmitted."""
         return sum(d.nic.bytes_sent for d in self.groups[device].domains)
 
 
 class Fabric:
-    """A simulated cluster: nodes x GPUs x NICs sharing one event loop."""
+    """A simulated cluster: nodes x GPUs x NICs sharing one event loop.
+
+    Engines of different NIC kinds may coexist in one fabric (the
+    heterogeneous-fabric refactor): the per-fabric :class:`Topology`
+    resolves each (src, dst) address pair to its transport — NVLink for
+    same-host pairs, the sender's NIC for same-kind pairs, a derived
+    cross-fabric preset for mixed-NIC pairs (see ``docs/TOPOLOGY.md``).
+    """
 
     def __init__(self, seed: int = 0):
         self.loop = EventLoop()
         self.seed = seed
+        self.topology = Topology()
         self._groups: Dict[NetAddr, Tuple[DomainGroup, TransferEngine]] = {}
         self._peer_groups: List[List[NetAddr]] = []
-        self._nic_kind: Optional[str] = None
+        self.nic_kinds: set = set()
 
-    def add_engine(self, node: str, nic: str = "cx7", num_devices: int = 1) -> TransferEngine:
-        if self._nic_kind is None:
-            self._nic_kind = nic
-        elif self._nic_kind != nic:
-            # Paper restriction: all peers use the same number of NICs per GPU.
-            raise ValueError("all engines in a fabric must use the same NIC kind")
-        return TransferEngine(self, node, nic, num_devices)
+    def add_engine(self, node: str, nic: str = "cx7", num_devices: int = 1,
+                   host: Optional[str] = None,
+                   nvlink: bool = True) -> TransferEngine:
+        """Add one engine (node name, NIC preset, GPU count) to the fabric.
+
+        ``host`` is the physical machine identity used for NVLink pair
+        resolution; it defaults to ``node``, so distinct engines stay on
+        distinct hosts unless told otherwise.  ``nvlink=False`` pins even
+        same-host pairs to the NIC.  The pre-PR one-NIC-kind-per-fabric
+        restriction is gone — mixed-kind pairs ride a derived cross-fabric
+        cost model (:func:`~repro.core.topology.cross_spec`)."""
+        self.nic_kinds.add(nic)
+        return TransferEngine(self, node, nic, num_devices,
+                              host=host, nvlink=nvlink)
+
+    def pair_spec(self, src, dst) -> NicSpec:
+        """The per-pair transport spec the ``(src, dst)`` pair rides —
+        the NVLink preset, a NIC preset, or a derived cross-fabric spec.
+
+        Accepts ``NetAddr``s or bare node-name strings (device 0)."""
+        if isinstance(src, str):
+            src = NetAddr(src, 0)
+        if isinstance(dst, str):
+            dst = NetAddr(dst, 0)
+        src_group = self.group(src)
+        return src_group.domains[0].plan_for(dst).spec
 
     def _register_group(self, addr: NetAddr, group: DomainGroup, engine: TransferEngine) -> None:
         if addr in self._groups:
             raise ValueError(f"duplicate address {addr}")
         self._groups[addr] = (group, engine)
+        self.topology.register(addr, TopoEntry(
+            host=engine.host, nic=engine.nic_name,
+            spec=engine.nic_spec, nvlink=engine.nvlink))
 
     def _lookup(self, addr: NetAddr) -> Tuple[DomainGroup, TransferEngine]:
         return self._groups[addr]
 
     def group(self, addr: NetAddr) -> DomainGroup:
+        """The :class:`DomainGroup` registered at ``addr``."""
         return self._groups[addr][0]
 
     def _add_peer_group(self, addrs: List[NetAddr]) -> int:
@@ -527,11 +596,14 @@ class Fabric:
 
     # -- execution helpers -------------------------------------------------------
     def run(self) -> float:
+        """Drain the event loop; returns the final virtual time (us)."""
         return self.loop.run_until_idle()
 
     def run_until(self, pred: Callable[[], bool]) -> float:
+        """Run events until ``pred()`` holds; returns the virtual time."""
         return self.loop.run_until(pred)
 
     @property
     def now(self) -> float:
+        """Current virtual time (us)."""
         return self.loop.now

@@ -19,6 +19,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 
 class ImmCounter:
+    """Per-immediate completion counters with threshold callbacks (§3.3)."""
+
     def __init__(self) -> None:
         self.counts: Dict[int, int] = {}
         # imm -> list of (threshold, callback, fired?)
@@ -26,6 +28,7 @@ class ImmCounter:
         self.events: List[Tuple[float, int]] = []  # (time, imm) audit trail
 
     def expect(self, imm: int, count: int, cb: Callable[[], None]) -> None:
+        """Fire ``cb`` once, when ``imm``'s counter reaches ``count``."""
         if count <= 0:
             cb()
             return
@@ -34,14 +37,17 @@ class ImmCounter:
         self._maybe_fire(imm)
 
     def increment(self, imm: int, now: float, by: int = 1) -> None:
+        """Count a landed WRITEIMM (transport-side; logs to the audit trail)."""
         self.counts[imm] = self.counts.get(imm, 0) + by
         self.events.append((now, imm))
         self._maybe_fire(imm)
 
     def value(self, imm: int) -> int:
+        """Current count for ``imm`` (GDRCopy-style direct inspection)."""
         return self.counts.get(imm, 0)
 
     def reset(self, imm: int) -> None:
+        """Drop ``imm``'s counter and watchers (reuse across protocol rounds)."""
         self.counts.pop(imm, None)
         self._watchers.pop(imm, None)
 

@@ -44,11 +44,13 @@ class EventLoop:
         self._running = False
 
     def schedule(self, delay_us: float, fn: Callable[[], None]) -> None:
+        """Run ``fn`` ``delay_us`` virtual microseconds from now (FIFO at ties)."""
         if delay_us < 0:
             raise ValueError(f"negative delay {delay_us}")
         heapq.heappush(self._queue, (self.now + delay_us, next(self._counter), fn))
 
     def schedule_at(self, t_us: float, fn: Callable[[], None]) -> None:
+        """Run ``fn`` at absolute virtual time ``t_us`` (clamped to now)."""
         self.schedule(max(0.0, t_us - self.now), fn)
 
     def run_until_idle(self, max_events: int = 10_000_000) -> float:
@@ -79,6 +81,7 @@ class EventLoop:
 
     @property
     def pending(self) -> int:
+        """Number of not-yet-run events in the queue."""
         return len(self._queue)
 
 
@@ -97,6 +100,7 @@ class NicSpec:
     srd_jitter_us: float = 0.0  # delivery jitter for unordered transports
 
     def service_us(self, nbytes: int) -> float:
+        """NIC service time for one op: fixed cost + wire time (Table 2)."""
         return self.fixed_us + nbytes * 8e-3 / (self.bw_gbps * self.eff)
 
 

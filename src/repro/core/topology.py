@@ -1,0 +1,168 @@
+"""Topology model: per-pair transport selection for heterogeneous fabrics.
+
+Through PR 5 the fabric enforced ONE NIC kind per :class:`~repro.core.Fabric`
+(``add_engine`` raised on a mismatch) and the NVLink fast path only triggered
+between devices of a single engine — so every same-node byte between two
+*engines* rode the simulated NIC, and a CX7 cluster could never talk to an
+EFA cluster at all.  This module converts that global invariant into a
+**per-pair decision**:
+
+* every registered endpoint (a ``DomainGroup`` address) carries a
+  :class:`TopoEntry` — its physical **host** identity, its NIC preset, and
+  whether NVLink reaches its host-local peers;
+* each ``(src, dst)`` address pair resolves — once, lazily, at first channel
+  use — to a :class:`ChannelPlan` naming the transport preset that pair
+  rides: NVLink for same-host pairs, the sender's NIC for same-kind pairs,
+  or a derived cross-fabric preset (:func:`cross_spec`) for mixed-NIC pairs
+  (paper §6 moves intra-node MoE payloads over NVLink; Holmes,
+  arXiv 2312.03549, trains across CX7 and EFA clusters in one job).
+
+Resolution rules, in order (documented with worked numbers in
+``docs/TOPOLOGY.md``):
+
+1. **Unknown endpoints** (directly constructed ``DomainGroup``s outside a
+   fabric): legacy node-string rule — same ``NetAddr.node`` and different
+   device means NVLink, anything else rides the sender's NIC.  This keeps
+   standalone unit fixtures byte-identical.
+2. **Same host, different address, both NVLink-capable** → the ``NVLINK``
+   preset on a dedicated per-pair queue (ordered, no SRD jitter, the NIC
+   stays free for cross-node traffic).
+3. **Same NIC spec on both ends** → the sender's NIC queue, exactly the
+   pre-PR path (seeds, jitter streams and event order are bit-identical —
+   pinned by ``tests/test_topology.py`` goldens).
+4. **Different NIC specs** → :func:`cross_spec` derives a per-pair cost
+   model (bottleneck bandwidth, summed wire latency, the weaker ordering
+   contract) served by a dedicated per-pair queue.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from .netsim import NVLINK, NicSpec
+
+
+@dataclass(frozen=True)
+class TopoEntry:
+    """Static topology facts about one registered endpoint address.
+
+    ``host`` is the physical machine identity — distinct engines (one per
+    rank is the common pattern) that share a host reach each other over
+    NVLink when both sides set ``nvlink``.  ``nic`` is the engine's NIC
+    preset name; ``spec`` its per-NIC :class:`~repro.core.netsim.NicSpec`.
+    """
+
+    host: str
+    nic: str
+    spec: NicSpec
+    nvlink: bool = True
+
+
+@dataclass(frozen=True)
+class ChannelPlan:
+    """The resolved transport for one ``(src, dst)`` address pair.
+
+    ``kind`` is ``"nvlink"`` | ``"nic"`` | ``"cross"``.  ``spec`` governs
+    the channel's wire behaviour (bandwidth, MTU chunking, ordering,
+    jitter).  ``dedicated`` says the pair gets its own queue instead of
+    sharing the sender NIC's serialised pipeline — true for the off-NIC
+    transports (NVLink, cross-fabric), false for the plain NIC path.
+    """
+
+    kind: str
+    spec: NicSpec
+    dedicated: bool
+
+
+_CROSS_CACHE: Dict[Tuple[str, str], NicSpec] = {}
+
+
+def cross_spec(a: NicSpec, b: NicSpec) -> NicSpec:
+    """Derive the per-pair cost model for a mixed-NIC (cross-fabric) pair.
+
+    A CX7 endpoint talking to an EFA endpoint crosses two fabrics joined at
+    a gateway (the Holmes inter-zone shape), so the pair behaves like the
+    *weaker composition* of both NICs — symmetric in its arguments:
+
+    * ``bw_gbps`` / ``eff``: the bottleneck link (min of both sides);
+    * ``base_latency_us``: both wire hops are paid (sum);
+    * ``rtt_us``: the completion ack crosses both fabrics too (sum);
+    * ``fixed_us``: the slower per-op engine dominates (max);
+    * ``mtu_bytes``: the path MTU is the smaller of the two (min);
+    * ``ordered``: only if BOTH sides guarantee ordering — one SRD hop
+      makes the whole pair unordered (events cannot collapse);
+    * ``srd_jitter_us``: the jitteriest hop dominates (max).
+
+    Results are cached per unordered name pair, so every channel of one
+    pair kind shares a single spec instance.
+    """
+    key = (a.name, b.name) if a.name <= b.name else (b.name, a.name)
+    spec = _CROSS_CACHE.get(key)
+    if spec is None:
+        spec = NicSpec(
+            name=f"x:{key[0]}+{key[1]}",
+            bw_gbps=min(a.bw_gbps, b.bw_gbps),
+            base_latency_us=a.base_latency_us + b.base_latency_us,
+            rtt_us=a.rtt_us + b.rtt_us,
+            fixed_us=max(a.fixed_us, b.fixed_us),
+            eff=min(a.eff, b.eff),
+            mtu_bytes=min(a.mtu_bytes, b.mtu_bytes),
+            ordered=a.ordered and b.ordered,
+            srd_jitter_us=max(a.srd_jitter_us, b.srd_jitter_us),
+        )
+        _CROSS_CACHE[key] = spec
+    return spec
+
+
+class Topology:
+    """Address book + pair resolver for one fabric.
+
+    The :class:`~repro.core.Fabric` registers a :class:`TopoEntry` per
+    ``DomainGroup`` address at engine construction; every ``Domain``
+    consults :meth:`plan` when it first opens a channel to a peer.  Plans
+    are cached per ``(src, dst)`` pair — the pair-keyed channel table the
+    per-pair refactor is named for.
+    """
+
+    def __init__(self) -> None:
+        self._entries: Dict[object, TopoEntry] = {}
+        self._plans: Dict[Tuple[object, object], ChannelPlan] = {}
+
+    def register(self, addr, entry: TopoEntry) -> None:
+        """Record topology facts for ``addr`` (one entry per address)."""
+        self._entries[addr] = entry
+
+    def entry(self, addr) -> Optional[TopoEntry]:
+        """The :class:`TopoEntry` for ``addr``, or None if unregistered."""
+        return self._entries.get(addr)
+
+    def plan(self, src, src_spec: NicSpec, dst) -> ChannelPlan:
+        """Resolve the transport preset for the ``(src, dst)`` pair.
+
+        ``src_spec`` is the posting Domain's own NIC spec (used verbatim on
+        the same-kind path so the pre-PR behaviour is bit-identical).  See
+        the module docstring for the rule order.
+        """
+        key = (src, dst)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._resolve(src, src_spec, dst)
+            self._plans[key] = plan
+        return plan
+
+    def _resolve(self, src, src_spec: NicSpec, dst) -> ChannelPlan:
+        se = self._entries.get(src)
+        de = self._entries.get(dst)
+        if se is None or de is None:
+            # Legacy node-string rule for endpoints outside any fabric
+            # topology (standalone DomainGroups in unit fixtures).
+            if dst.node == src.node and dst.dev != src.dev:
+                return ChannelPlan("nvlink", NVLINK, dedicated=True)
+            return ChannelPlan("nic", src_spec, dedicated=False)
+        if src != dst and se.host == de.host and se.nvlink and de.nvlink:
+            return ChannelPlan("nvlink", NVLINK, dedicated=True)
+        if de.spec.name == src_spec.name:
+            return ChannelPlan("nic", src_spec, dedicated=False)
+        return ChannelPlan("cross", cross_spec(src_spec, de.spec),
+                           dedicated=True)

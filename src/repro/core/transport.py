@@ -65,6 +65,8 @@ class Channel:
     MAX_CHUNKS = 64  # coarse chunking: bounds event count for GB-scale writes
 
     def post(self, op: WireOp) -> None:
+        """Submit one WireOp: MTU-chunk, queue on the NIC, deliver with the
+        transport's ordering contract (RC collapse vs per-chunk SRD jitter)."""
         if self.ordered:
             return self._post_ordered(op)
         nbytes = op.nbytes

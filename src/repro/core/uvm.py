@@ -20,6 +20,8 @@ from .netsim import EventLoop, PCIE_POLL_US
 
 
 class UvmWatcher:
+    """Polls a device-incremented word and reports (old, new) jumps (§3.3)."""
+
     def __init__(self, loop: EventLoop, cb: Callable[[int, int], None],
                  poll_us: float = PCIE_POLL_US):
         self.loop = loop
@@ -35,6 +37,7 @@ class UvmWatcher:
         self._schedule_poll()
 
     def inc(self) -> None:
+        """Device-side ``scalar_inc_``: bump the watched word by one."""
         self.store(self.value + 1)
 
     def _schedule_poll(self) -> None:

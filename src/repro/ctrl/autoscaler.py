@@ -35,6 +35,8 @@ ROLE = "prefill"
 
 @dataclass
 class ScalingPolicy:
+    """Thresholds governing when the autoscaler adds or drains prefillers."""
+
     queue_high: int = 3            # depth that triggers scale-up
     ttft_high_us: float = float("inf")   # TTFT EMA SLO (optional signal)
     idle_ticks_down: int = 3       # consecutive idle ticks before scale-down
@@ -44,6 +46,9 @@ class ScalingPolicy:
 
 
 class Autoscaler:
+    """Periodic scaling loop: watches queue depth / idleness through the
+    control plane's views and spawns or drains prefillers per policy."""
+
     def __init__(self, ctrl: ControlPlane, scheduler, spawn: Callable[[int], object],
                  *, policy: Optional[ScalingPolicy] = None,
                  tick_us: float = 150.0, max_ticks: int = 200,
@@ -100,6 +105,7 @@ class Autoscaler:
 
     # -- tick loop -----------------------------------------------------------
     def stop(self) -> None:
+        """Stop scheduling further ticks (in-flight ones become no-ops)."""
         self._running = False
 
     def _schedule_tick(self) -> None:

@@ -25,6 +25,9 @@ DEFAULT_RENEW_US = 500.0
 
 
 class ControlClient:
+    """Peer-side control-plane endpoint: JOIN/renew/LEAVE plus inbound
+    drain and view-update dispatch for one engine."""
+
     def __init__(self, engine: TransferEngine, fabric: Fabric,
                  ctrl_addr: NetAddr, peer_id: str, role: str, *,
                  renew_us: float = DEFAULT_RENEW_US, max_renewals: int = 256,
@@ -55,14 +58,27 @@ class ControlClient:
     def join(self, *, nic: str, kv_desc: Optional[MrDesc],
              geom: Dict[str, Any], n_pages: int,
              lease_us: float = 0.0,
-             schema: Optional[Dict[str, Any]] = None) -> None:
+             schema: Optional[Dict[str, Any]] = None,
+             host: Optional[str] = None,
+             nvlink: Optional[bool] = None) -> None:
+        """Send JOIN; registers this peer with the control plane.
+
+        ``host``/``nvlink`` (the node-identity fields of the heterogeneous-
+        fabric refactor) default to the owning engine's values, so peers
+        advertise their NVLink domain without every call site changing."""
+        if host is None:
+            host = getattr(self.engine, "host", None)
+        if nvlink is None:
+            nvlink = bool(getattr(self.engine, "nvlink", False))
         self.engine.submit_send(self.ctrl_addr, m.encode(m.Join(
             peer_id=self.peer_id, role=self.role,
             addr=self.engine.address(0), nic=nic, kv_desc=kv_desc,
-            geom=geom, n_pages=n_pages, lease_us=lease_us, schema=schema)))
+            geom=geom, n_pages=n_pages, lease_us=lease_us, schema=schema,
+            host=host, nvlink=nvlink)))
         self._schedule_renew()
 
     def leave(self) -> None:
+        """Send LEAVE (clean departure); stops future renewals."""
         if self.left:
             return
         self.left = True

@@ -103,6 +103,7 @@ def encode(msg: Any) -> bytes:
 
 
 def decode(payload: bytes) -> Any:
+    """Parse a wire payload back into its registered message dataclass."""
     tag, _, body = bytes(payload).partition(b"\0")
     cls = _REGISTRY.get(tag.decode("ascii", "replace"))
     if cls is None:
@@ -121,6 +122,9 @@ class Join:
     Publishes everything a remote needs to target this peer: wire address,
     the KV pool's ``MrDesc``, pool geometry, and the NIC kind (Holmes-style
     per-peer capability so mixed CX7/EFA pools can share one registry).
+    ``host`` + ``nvlink`` extend that with node identity — two peers
+    advertising the same host with ``nvlink`` reach each other over NVLink,
+    so schedulers can prefer intra-node pairings (paper §6).
     """
 
     peer_id: str
@@ -134,6 +138,10 @@ class Join:
     # KvSchema wire form (kvlayout.KvSchema.to_wire()) — the Scheduler
     # refuses to pair peers whose schemas differ, at routing time
     schema: Optional[Dict[str, Any]] = None
+    # physical-host identity + NVLink reach (heterogeneous fabrics):
+    # defaulted so pre-PR joiners stay wire-compatible
+    host: Optional[str] = None
+    nvlink: bool = False
 
 
 @wire("JACK")

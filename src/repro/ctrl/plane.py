@@ -36,6 +36,9 @@ DEFAULT_SWEEP_US = 250.0
 
 
 class ControlPlane:
+    """The ctrl node: owns the PeerRegistry, answers JOIN/renew/LEAVE,
+    sweeps expired leases, and broadcasts epoch-stamped view updates."""
+
     def __init__(self, fabric: Fabric, *, node: str = "ctrl",
                  nic: str = "efa", lease_us: float = DEFAULT_LEASE_US,
                  sweep_us: float = DEFAULT_SWEEP_US, max_sweeps: int = 256):
@@ -56,9 +59,11 @@ class ControlPlane:
 
     # -- identity -----------------------------------------------------------
     def address(self) -> NetAddr:
+        """Wire address peers SEND control messages to."""
         return self.engine.address(0)
 
     def view(self) -> MembershipView:
+        """Current epoch-stamped membership snapshot."""
         return self.registry.view()
 
     # -- subscriptions -------------------------------------------------------
@@ -88,7 +93,7 @@ class ControlPlane:
                 peer_id=msg.peer_id, role=msg.role, addr=msg.addr,
                 nic=msg.nic, kv_desc=msg.kv_desc, geom=msg.geom,
                 n_pages=msg.n_pages, lease_us=lease, now=self.fabric.now,
-                schema=msg.schema)
+                schema=msg.schema, host=msg.host, nvlink=msg.nvlink)
             self.engine.submit_send(
                 msg.addr,
                 m.encode(m.JoinAck(msg.peer_id, self.registry.epoch, lease)))
@@ -115,6 +120,7 @@ class ControlPlane:
 
     # -- lease sweep ---------------------------------------------------------
     def stop(self) -> None:
+        """Stop scheduling further lease sweeps."""
         self._running = False
 
     def _schedule_sweep(self) -> None:

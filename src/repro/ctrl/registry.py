@@ -35,6 +35,8 @@ class PeerRecord:
     geom: Dict[str, Any]
     n_pages: int
     schema: Optional[Dict[str, Any]] = None   # KvSchema wire form
+    host: Optional[str] = None          # physical machine (NVLink domain)
+    nvlink: bool = False                # host-local peers reachable via NVLink
     status: str = LIVE
     lease_expires_us: float = 0.0
     joined_us: float = 0.0
@@ -57,6 +59,8 @@ class PeerView:
     n_pages: int
     inflight: int
     schema: Optional[Mapping[str, Any]] = None   # KvSchema wire form
+    host: Optional[str] = None          # physical machine (NVLink domain)
+    nvlink: bool = False                # host-local peers reachable via NVLink
 
 
 @dataclass(frozen=True)
@@ -72,40 +76,48 @@ class MembershipView:
     peers: Tuple[PeerView, ...] = ()
 
     def routable(self, role: str) -> Tuple[PeerView, ...]:
+        """LIVE peers of ``role`` — the only valid routing targets."""
         return tuple(p for p in self.peers
                      if p.role == role and p.status == LIVE)
 
     def by_role(self, role: str) -> Tuple[PeerView, ...]:
+        """All view peers of ``role`` (including DRAINING)."""
         return tuple(p for p in self.peers if p.role == role)
 
     def peer(self, peer_id: str) -> Optional[PeerView]:
+        """The view slice for ``peer_id``, or None if absent."""
         for p in self.peers:
             if p.peer_id == peer_id:
                 return p
         return None
 
     def ids(self) -> Tuple[str, ...]:
+        """Peer ids in view order."""
         return tuple(p.peer_id for p in self.peers)
 
     # -- wire form (carried inside a VIEW-UPDATE message) -------------------
     def to_wire(self) -> List[Dict[str, Any]]:
+        """JSON-safe per-peer dicts for a VIEW-UPDATE payload."""
         return [{
             "peer_id": p.peer_id, "role": p.role,
             "addr": enc_value(p.addr), "nic": p.nic, "status": p.status,
             "kv_desc": enc_value(p.kv_desc), "geom": enc_value(dict(p.geom)),
             "n_pages": p.n_pages, "inflight": p.inflight,
             "schema": enc_value(dict(p.schema) if p.schema else None),
+            "host": p.host, "nvlink": p.nvlink,
         } for p in self.peers]
 
     @staticmethod
     def from_wire(epoch: int, peers: List[Dict[str, Any]]) -> "MembershipView":
+        """Rebuild a view from its wire form (tolerates pre-PR payloads)."""
         return MembershipView(epoch, tuple(
             PeerView(peer_id=e["peer_id"], role=e["role"],
                      addr=dec_value(e["addr"]), nic=e["nic"],
                      status=e["status"], kv_desc=dec_value(e["kv_desc"]),
                      geom=dec_value(e["geom"]), n_pages=int(e["n_pages"]),
                      inflight=int(e["inflight"]),
-                     schema=dec_value(e.get("schema")))
+                     schema=dec_value(e.get("schema")),
+                     host=e.get("host"), nvlink=bool(e.get("nvlink", False)))
             for e in peers))
 
 
@@ -120,6 +132,7 @@ class PeerRegistry:
 
     @property
     def epoch(self) -> int:
+        """Current (strictly monotonic) membership epoch."""
         return self._epoch
 
     def _bump(self, event: str) -> int:
@@ -131,11 +144,13 @@ class PeerRegistry:
     def join(self, *, peer_id: str, role: str, addr: NetAddr, nic: str,
              kv_desc: Optional[MrDesc], geom: Dict[str, Any], n_pages: int,
              lease_us: float, now: float,
-             schema: Optional[Dict[str, Any]] = None) -> int:
+             schema: Optional[Dict[str, Any]] = None,
+             host: Optional[str] = None, nvlink: bool = False) -> int:
         """Admit (or re-admit) a peer; returns the new epoch."""
         self._peers[peer_id] = PeerRecord(
             peer_id=peer_id, role=role, addr=addr, nic=nic, kv_desc=kv_desc,
-            geom=dict(geom), n_pages=n_pages, schema=schema, status=LIVE,
+            geom=dict(geom), n_pages=n_pages, schema=schema,
+            host=host, nvlink=nvlink, status=LIVE,
             lease_expires_us=now + lease_us, joined_us=now,
             free_pages=n_pages)
         return self._bump(f"join:{peer_id}")
@@ -180,11 +195,14 @@ class PeerRegistry:
 
     # -- introspection -------------------------------------------------------
     def record(self, peer_id: str) -> Optional[PeerRecord]:
+        """The mutable internal record for ``peer_id`` (tests/ctrl only)."""
         return self._peers.get(peer_id)
 
     def view(self) -> MembershipView:
+        """Immutable epoch-stamped snapshot of LIVE + DRAINING peers."""
         return MembershipView(self._epoch, tuple(
             PeerView(peer_id=r.peer_id, role=r.role, addr=r.addr, nic=r.nic,
                      status=r.status, kv_desc=r.kv_desc, geom=dict(r.geom),
-                     n_pages=r.n_pages, inflight=r.inflight, schema=r.schema)
+                     n_pages=r.n_pages, inflight=r.inflight, schema=r.schema,
+                     host=r.host, nvlink=r.nvlink)
             for r in self._peers.values()))

@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -11,11 +11,23 @@ from .dispatch import MoEConfig, MoEEndpoint
 
 
 def make_endpoints(fabric: Fabric, cfg: MoEConfig, *, nic: str = "cx7",
-                   gpus_per_node: int = 8) -> List[MoEEndpoint]:
+                   gpus_per_node: int = 8, nvlink: bool = False,
+                   nics: Optional[List[str]] = None) -> List[MoEEndpoint]:
+    """One engine per EP rank, grouped ``gpus_per_node`` ranks to a node.
+
+    ``nvlink=True`` registers ranks of one node under a shared physical
+    host, so same-node dispatch/combine payloads ride the NVLink fast path
+    (paper §6) while cross-node traffic keeps the NIC.  ``nics`` optionally
+    gives a per-rank NIC preset list (Holmes-style mixed clusters); it
+    overrides ``nic``.  The default (``nvlink=False``, uniform ``nic``) is
+    bit-identical to the pre-heterogeneous-fabric behaviour."""
     eps = []
     for r in range(cfg.n_ranks):
         node = f"node{r // gpus_per_node}"
-        eng = fabric.add_engine(f"{node}-r{r}", nic=nic)
+        rank_nic = nics[r] if nics is not None else nic
+        eng = fabric.add_engine(f"{node}-r{r}", nic=rank_nic,
+                                host=node if nvlink else None,
+                                nvlink=nvlink)
         eps.append(MoEEndpoint(fabric, cfg, r, eng))
     # endpoints exchange ONLY serializable ports (rank + MrDescs): all
     # placement offsets must be derived from the routes on the wire

@@ -43,6 +43,7 @@ import numpy as np
 from ..core import Fabric, MrDesc, MrHandle, ScatterDst, TransferEngine
 from ..core.engine import NIC_PRESETS
 from ..core.netsim import POST_US
+from ..core.topology import cross_spec
 from .planner import ParamMeta, Route
 
 # Pipeline stage rates (paper Table 5 calibration)
@@ -58,8 +59,9 @@ AUTOTUNE_STAGES = 2        # H2D + prepare: pipeline-fill stages ahead of the NI
 def autotune_chunk_bytes(nic: str, bytes_per_rank: int, *,
                          watermark_bytes: int = 2 << 30,
                          stage_scale: float = 1.0,
-                         stages: int = AUTOTUNE_STAGES) -> int:
-    """Per-NIC chunk size from the preset's post/enqueue cost model.
+                         stages: int = AUTOTUNE_STAGES,
+                         dst_nic: Optional[str] = None) -> int:
+    """Per-pair chunk size from the transport's post/enqueue cost model.
 
     Total pipelined time over ``B = bytes_per_rank`` at chunk size ``c`` is
     roughly ``B*w + (B/c)*fix + stages*c*w``: the wire term, the per-chunk
@@ -74,10 +76,19 @@ def autotune_chunk_bytes(nic: str, bytes_per_rank: int, *,
     the Table-5 bench shows both.  The result is clamped to
     [``MIN_CHUNK_BYTES``, watermark/(stage_scale * 2)] so at least two
     chunks fit under the staging watermark, and rounded to 256 KiB.
+
+    ``dst_nic``: the inference side's NIC kind when it differs from the
+    training side's (heterogeneous fabrics).  The wire terms then come
+    from the derived cross-fabric pair spec (:func:`~repro.core.cross_spec`
+    — bottleneck bandwidth, the slower engine's fixed cost), while posting
+    cost stays the sender's (WRs are posted on the training NIC).
     """
     spec, n_nics = NIC_PRESETS[nic]
-    fix_us = POST_US.get(spec.name, 0.1) + spec.fixed_us
-    wire_us_per_byte = 8e-3 / (spec.bw_gbps * spec.eff * n_nics)
+    wire = spec
+    if dst_nic is not None and dst_nic != nic:
+        wire = cross_spec(spec, NIC_PRESETS[dst_nic][0])
+    fix_us = POST_US.get(spec.name, 0.1) + wire.fixed_us
+    wire_us_per_byte = 8e-3 / (wire.bw_gbps * wire.eff * n_nics)
     c = (max(1, bytes_per_rank) * fix_us / (stages * wire_us_per_byte)) ** 0.5
     cap = max(MIN_CHUNK_BYTES, int(watermark_bytes / max(stage_scale, 1e-9) / 2))
     c = min(max(int(c), MIN_CHUNK_BYTES), cap)
@@ -86,10 +97,12 @@ def autotune_chunk_bytes(nic: str, bytes_per_rank: int, *,
 
 def resolve_chunk_bytes(chunk_bytes, routes: Sequence[Route], nic: str, *,
                         watermark_bytes: int = 2 << 30,
-                        stage_scale: float = 1.0):
-    """``chunk_bytes="auto"`` => derive from the NIC cost model and the
+                        stage_scale: float = 1.0,
+                        dst_nic: Optional[str] = None):
+    """``chunk_bytes="auto"`` => derive from the pair cost model and the
     busiest rank's wire bytes; int/None pass through unchanged.  The
-    single aggregation point for every "auto" consumer (engine + benches)."""
+    single aggregation point for every "auto" consumer (engine + benches).
+    ``dst_nic`` forwards the inference side's NIC kind for mixed clusters."""
     if chunk_bytes != "auto":
         return chunk_bytes
     per_rank: Dict[int, int] = {}
@@ -97,7 +110,7 @@ def resolve_chunk_bytes(chunk_bytes, routes: Sequence[Route], nic: str, *,
         per_rank[r.train_rank] = per_rank.get(r.train_rank, 0) + r.nbytes
     return autotune_chunk_bytes(nic, max(per_rank.values(), default=1),
                                 watermark_bytes=watermark_bytes,
-                                stage_scale=stage_scale)
+                                stage_scale=stage_scale, dst_nic=dst_nic)
 
 # Immediate-value block for weight updates: data and commit immediates are
 # distinct per update_id so back-to-back updates never alias counters.
@@ -124,7 +137,13 @@ class Cluster:
 
 
 def make_cluster(n_train: int, n_infer: int, shard_bytes: int,
-                 infer_bytes: int, nic: str = "cx7", seed: int = 0) -> Cluster:
+                 infer_bytes: int, nic: str = "cx7", seed: int = 0,
+                 infer_nic: Optional[str] = None) -> Cluster:
+    """Build a train + infer fabric with registered weight buffers.
+
+    ``infer_nic`` gives the inference cluster a different NIC kind than the
+    training cluster (the Holmes cross-zone shape) — train->infer WRITEs
+    then ride the derived cross-fabric pair spec.  Default: same kind."""
     fab = Fabric(seed=seed)
     te, ie, tb, ib, th, idesc = [], [], [], [], [], []
     for i in range(n_train):
@@ -134,7 +153,7 @@ def make_cluster(n_train: int, n_infer: int, shard_bytes: int,
         h, _ = e.reg_mr(buf)
         te.append(e); tb.append(buf); th.append(h)
     for i in range(n_infer):
-        e = fab.add_engine(f"infer{i}", nic=nic)
+        e = fab.add_engine(f"infer{i}", nic=infer_nic or nic)
         buf = np.zeros(infer_bytes, np.uint8)
         _, d = e.reg_mr(buf)
         ie.append(e); ib.append(buf); idesc.append(d)
@@ -433,9 +452,12 @@ def launch_p2p_update(cluster: Cluster, routes: List[Route], *,
     """
     fab = cluster.fabric
     nic = cluster.train_engines[0].nic_name
+    dst_nic = cluster.infer_engines[0].nic_name if cluster.infer_engines \
+        else None
     chunk_bytes = resolve_chunk_bytes(chunk_bytes, routes, nic,
                                       watermark_bytes=watermark_bytes,
-                                      stage_scale=stage_scale)
+                                      stage_scale=stage_scale,
+                                      dst_nic=dst_nic)
     chunks_by_rank = plan_chunks(routes, chunk_bytes=chunk_bytes,
                                  watermark_bytes=watermark_bytes,
                                  stage_scale=stage_scale)

@@ -127,11 +127,13 @@ class Prefiller:
                  layer_compute_us: float = 50.0,
                  ctrl: Optional[ControlPlane] = None,
                  peer_id: Optional[str] = None, renew_us: float = 500.0,
-                 max_renewals: int = 256):
+                 max_renewals: int = 256, host: Optional[str] = None):
         _check_supported(cfg)
         self.cfg = cfg
         self.params = params
-        self.engine = fabric.add_engine(node, nic=nic)
+        # host: physical machine identity — a prefiller and decoder placed
+        # on the same host move KV pages over NVLink (per-pair resolution)
+        self.engine = fabric.add_engine(node, nic=nic, host=host)
         self.fabric = fabric
         self.nic = nic
         self.schema = schema_from_config(cfg, page_tokens)
@@ -324,12 +326,13 @@ class Decoder:
                  nic: str = "efa", page_tokens: int = 16, n_pages: int = 512,
                  max_tail: int = 16, ctrl: Optional[ControlPlane] = None,
                  peer_id: Optional[str] = None, renew_us: float = 500.0,
-                 max_renewals: int = 256):
+                 max_renewals: int = 256, host: Optional[str] = None):
         _check_supported(cfg)
         self.cfg = cfg
         self.params = params
         self.fabric = fabric
-        self.engine = fabric.add_engine(node, nic=nic)
+        # host: physical machine identity (NVLink domain) — see Prefiller
+        self.engine = fabric.add_engine(node, nic=nic, host=host)
         self.schema = schema_from_config(cfg, page_tokens)
         self.pool = KvPool(self.engine, self.schema, n_pages)
         self._plans: Dict[int, TransferPlan] = {}

@@ -1,0 +1,310 @@
+"""Per-pair channel selection (heterogeneous fabrics).
+
+Three layers of coverage:
+* resolution rules — same-host pairs ride NVLink, same-kind pairs the
+  sender's NIC, mixed-kind pairs the derived cross-fabric spec;
+* golden regression pins — single-kind fabrics must stay BIT-identical to
+  the pre-refactor timings (values captured at the pre-PR HEAD);
+* subsystem integration — moekit NVLink fast path stays numerically exact
+  vs the oracle and gets faster; rlweights mixed clusters deliver bytes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CX7, EFA_200, NVLINK, Fabric, NetAddr, NicSpec,
+                        TopoEntry, Topology, cross_spec)
+
+
+# ---------------------------------------------------------------------------
+# resolution rules
+# ---------------------------------------------------------------------------
+
+def test_same_host_pair_rides_nvlink():
+    fab = Fabric(seed=0)
+    fab.add_engine("rank0", nic="cx7", host="hostA")
+    fab.add_engine("rank1", nic="cx7", host="hostA")
+    spec = fab.pair_spec(NetAddr("rank0", 0), NetAddr("rank1", 0))
+    assert spec is NVLINK
+    assert spec.ordered and spec.srd_jitter_us == 0.0
+
+
+def test_distinct_hosts_stay_on_nic():
+    fab = Fabric(seed=0)
+    fab.add_engine("a", nic="cx7")
+    fab.add_engine("b", nic="cx7")
+    assert fab.pair_spec(NetAddr("a", 0), NetAddr("b", 0)) is CX7
+
+
+def test_nvlink_false_pins_same_host_pair_to_nic():
+    fab = Fabric(seed=0)
+    fab.add_engine("r0", nic="cx7", host="h", nvlink=False)
+    fab.add_engine("r1", nic="cx7", host="h", nvlink=False)
+    assert fab.pair_spec(NetAddr("r0", 0), NetAddr("r1", 0)) is CX7
+
+
+def test_mixed_kind_fabric_allowed_and_uses_cross_model():
+    fab = Fabric(seed=0)
+    fab.add_engine("a", nic="cx7")
+    fab.add_engine("b", nic="efa")   # pre-PR: ValueError
+    spec = fab.pair_spec(NetAddr("a", 0), NetAddr("b", 0))
+    assert spec.name == "x:cx7+efa200"
+    # weaker composition of both fabrics
+    assert spec.bw_gbps == min(CX7.bw_gbps, EFA_200.bw_gbps)
+    assert spec.base_latency_us == CX7.base_latency_us + EFA_200.base_latency_us
+    assert spec.rtt_us == CX7.rtt_us + EFA_200.rtt_us
+    assert spec.mtu_bytes == min(CX7.mtu_bytes, EFA_200.mtu_bytes)
+    assert not spec.ordered                 # one SRD hop => unordered
+    assert spec.srd_jitter_us == EFA_200.srd_jitter_us
+
+
+def test_cross_spec_symmetric_and_cached():
+    assert cross_spec(CX7, EFA_200) is cross_spec(EFA_200, CX7)
+
+
+def test_intra_engine_devices_keep_nvlink():
+    # the pre-existing multi-device NVLink path must survive the refactor
+    fab = Fabric(seed=0)
+    fab.add_engine("n", nic="efa", num_devices=2)
+    assert fab.pair_spec(NetAddr("n", 0), NetAddr("n", 1)) is NVLINK
+
+
+def test_standalone_topology_legacy_rule():
+    # unregistered endpoints fall back to the node-string rule
+    topo = Topology()
+    plan = topo.plan(NetAddr("x", 0), CX7, NetAddr("x", 1))
+    assert plan.kind == "nvlink"
+    plan = topo.plan(NetAddr("x", 0), CX7, NetAddr("y", 0))
+    assert plan.kind == "nic" and plan.spec is CX7
+
+
+def test_plan_cached_per_pair():
+    topo = Topology()
+    topo.register(NetAddr("a", 0), TopoEntry(host="ha", nic="cx7", spec=CX7))
+    topo.register(NetAddr("b", 0), TopoEntry(host="hb", nic="efa",
+                                             spec=EFA_200))
+    p1 = topo.plan(NetAddr("a", 0), CX7, NetAddr("b", 0))
+    p2 = topo.plan(NetAddr("a", 0), CX7, NetAddr("b", 0))
+    assert p1 is p2 and p1.kind == "cross" and p1.dedicated
+
+
+# ---------------------------------------------------------------------------
+# cross-fabric transfers actually work (bytes + timing direction)
+# ---------------------------------------------------------------------------
+
+def _p2p(nic_a, nic_b, seed=0):
+    fab = Fabric(seed=seed)
+    a = fab.add_engine("a", nic=nic_a)
+    b = fab.add_engine("b", nic=nic_b)
+    data = (np.arange(1 << 20) % 199).astype(np.uint8)
+    dst_buf = np.zeros(1 << 20, np.uint8)
+    h, _ = a.reg_mr(data.copy())
+    _, d = b.reg_mr(dst_buf)
+    imm_at = {}
+    b.expect_imm_count(5, 1, lambda: imm_at.setdefault("t", fab.now))
+    a.submit_single_write(1 << 20, 5, (h, 0), (d, 0))
+    end = fab.run()
+    assert bytes(dst_buf) == bytes(data)
+    return imm_at["t"], end
+
+
+def test_cross_fabric_write_delivers_and_is_slower_than_either_side():
+    cross_imm, _ = _p2p("cx7", "efa")
+    cx7_imm, _ = _p2p("cx7", "cx7")
+    # both wire hops are paid and the bottleneck bandwidth rules: the
+    # cross pair can't beat the all-CX7 fabric
+    assert cross_imm > cx7_imm
+
+
+def test_nvlink_pair_beats_nic_pair():
+    fab = Fabric(seed=0)
+    a = fab.add_engine("a", nic="cx7", host="h")
+    b = fab.add_engine("b", nic="cx7", host="h")
+    data = (np.arange(1 << 20) % 199).astype(np.uint8)
+    dst_buf = np.zeros(1 << 20, np.uint8)
+    h, _ = a.reg_mr(data.copy())
+    _, d = b.reg_mr(dst_buf)
+    imm_at = {}
+    b.expect_imm_count(5, 1, lambda: imm_at.setdefault("t", fab.now))
+    a.submit_single_write(1 << 20, 5, (h, 0), (d, 0))
+    fab.run()
+    assert bytes(dst_buf) == bytes(data)
+    nic_imm, _ = _p2p("cx7", "cx7")
+    assert imm_at["t"] < nic_imm
+
+
+# ---------------------------------------------------------------------------
+# golden regression pins: single-kind fabrics are bit-identical
+# (values captured at the pre-refactor HEAD, PYTHONHASHSEED-independent)
+# ---------------------------------------------------------------------------
+
+GOLD_P2P = {
+    "cx7": (25.685284210526316, 33.68528421052632),
+    "efa": (39.70032301645298, 54.37952),
+    "efa4": (40.950834229927594, 55.33152000000001),
+}
+
+
+@pytest.mark.parametrize("nic", sorted(GOLD_P2P))
+def test_single_kind_p2p_bit_identical(nic):
+    imm_at, end = _p2p(nic, nic)
+    gold_imm, gold_end = GOLD_P2P[nic]
+    assert imm_at == gold_imm
+    assert end == gold_end
+
+
+GOLD_MOE = {
+    "cx7": ([42.72241052631579, 42.857410526315796, 42.99780000000001,
+             43.127410526315806],
+            [11.568084210526337, 11.57212631578949, 11.565389473684228,
+             11.569431578947388],
+            62.696842105263194),
+    "efa": ([72.77844476355834, 74.21273378260064, 74.47684110768868,
+             74.57662774228031],
+            [27.700840497471106, 27.12065384188149, 26.817621671143158,
+             27.04955435094483],
+            116.45454774228031),
+}
+
+
+def _moe_inputs(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    toks, eidss, gatess = [], [], []
+    for _ in range(cfg.n_ranks):
+        toks.append(rng.standard_normal((16, 16)).astype(np.float32))
+        eids = np.stack([rng.choice(8, 2, replace=False) for _ in range(16)])
+        gates = np.zeros((16, 8), np.float32)
+        for i in range(16):
+            gates[i, eids[i]] = 0.5
+        eidss.append(eids)
+        gatess.append(gates)
+    return toks, eidss, gatess
+
+
+def _run_moe(nic, nvlink=False, nics=None):
+    from repro.moekit import MoEConfig, make_endpoints, run_moe_layer
+    cfg = MoEConfig(n_ranks=4, n_experts=8, top_k=2, max_tokens=16,
+                    token_bytes=64, t_priv=2)
+    fab = Fabric(seed=1)
+    eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=2,
+                         nvlink=nvlink, nics=nics)
+    toks, eidss, gatess = _moe_inputs(cfg)
+    res, stats = run_moe_layer(fab, eps, toks, eidss, gatess,
+                               lambda e, x: x * (e + 1))
+    return res, stats, fab.now, (toks, eidss, gatess)
+
+
+@pytest.mark.parametrize("nic", sorted(GOLD_MOE))
+def test_single_kind_moe_bit_identical(nic):
+    _res, stats, end, _ = _run_moe(nic)
+    gold_d, gold_c, gold_end = GOLD_MOE[nic]
+    assert stats["dispatch_us"] == gold_d
+    assert stats["combine_us"] == gold_c
+    assert end == gold_end
+
+
+# ---------------------------------------------------------------------------
+# subsystem integration
+# ---------------------------------------------------------------------------
+
+def test_moekit_nvlink_fast_path_exact_and_faster():
+    from repro.moekit import oracle
+    res, _stats, _end, (toks, eidss, gatess) = _run_moe("cx7", nvlink=True)
+    ref = oracle(toks, eidss, gatess, lambda e, x: x * (e + 1), 8)
+    for r in range(4):
+        np.testing.assert_allclose(res[r], ref[r], rtol=1e-5, atol=1e-5)
+    # bigger payloads: NVLink offload must strictly beat all-NIC
+    from repro.moekit import MoEConfig, make_endpoints, run_moe_layer
+
+    def big(nvl):
+        cfg = MoEConfig(n_ranks=4, n_experts=8, top_k=2, max_tokens=32,
+                        token_bytes=4096, t_priv=2)
+        fab = Fabric(seed=1)
+        eps = make_endpoints(fab, cfg, nic="cx7", gpus_per_node=4,
+                             nvlink=nvl)
+        rng = np.random.default_rng(0)
+        toks = [rng.integers(0, 255, (32, 4096), dtype=np.uint8)
+                for _ in range(4)]
+        eidss = [np.stack([rng.choice(8, 2, replace=False)
+                           for _ in range(32)]) for _ in range(4)]
+        gatess = []
+        for r in range(4):
+            g = np.zeros((32, 8), np.float32)
+            for i in range(32):
+                g[i, eidss[r][i]] = 0.5
+            gatess.append(g)
+        run_moe_layer(fab, eps, toks, eidss, gatess, lambda e, x: x,
+                      dtype=np.uint8)
+        return fab.now
+
+    assert big(True) < big(False)
+
+
+def test_moekit_mixed_cluster_correct():
+    from repro.moekit import oracle
+    res, _stats, _end, (toks, eidss, gatess) = _run_moe(
+        "cx7", nvlink=True, nics=["cx7", "cx7", "efa", "efa"])
+    ref = oracle(toks, eidss, gatess, lambda e, x: x * (e + 1), 8)
+    for r in range(4):
+        np.testing.assert_allclose(res[r], ref[r], rtol=1e-5, atol=1e-5)
+
+
+def test_rlweights_mixed_cluster_delivers_bytes():
+    from repro.rlweights import ParamMeta, compute_routing
+    from repro.rlweights import transfer as t
+    params = [ParamMeta(f"p{i}", (256, 256), 2) for i in range(2)]
+    routes, _ = compute_routing(params, n_train=2, n_infer=2)
+    shard = max(r.src_off + r.nbytes for r in routes)
+    infer_bytes = max(r.dst_off + r.nbytes for r in routes)
+    cluster = t.make_cluster(2, 2, shard, infer_bytes,
+                             nic="cx7", infer_nic="efa")
+    assert cluster.infer_engines[0].nic_name == "efa"
+    stats = t.p2p_transfer(cluster, routes, chunk_bytes="auto")
+    assert stats["commits"]
+    for r in routes:
+        src = cluster.train_bufs[r.train_rank][r.src_off:r.src_off + r.nbytes]
+        dst = cluster.infer_bufs[r.infer_rank][r.dst_off:r.dst_off + r.nbytes]
+        assert bytes(src) == bytes(dst)
+
+
+def test_autotune_uses_pair_cost_model():
+    from repro.rlweights.transfer import autotune_chunk_bytes
+    same = autotune_chunk_bytes("cx7", 1 << 30)
+    mixed = autotune_chunk_bytes("cx7", 1 << 30, dst_nic="efa")
+    # the cross pair is slower per byte and pays EFA's higher fixed cost:
+    # the sweet spot moves; both stay 256 KiB-aligned
+    assert mixed != same
+    assert mixed % (256 << 10) == 0 and same % (256 << 10) == 0
+    assert autotune_chunk_bytes("cx7", 1 << 30, dst_nic="cx7") == same
+
+
+def test_ctrl_join_carries_host_and_nvlink():
+    from repro.ctrl import messages as m
+    msg = m.Join(peer_id="p", role="prefill", addr=NetAddr("n", 0),
+                 nic="cx7", kv_desc=None, geom={}, n_pages=4,
+                 lease_us=100.0, host="hostA", nvlink=True)
+    decoded = m.decode(m.encode(msg))
+    assert decoded.host == "hostA" and decoded.nvlink is True
+    # pre-PR wire payloads (no host/nvlink keys) still decode
+    legacy = m.encode(m.Join(peer_id="p", role="prefill",
+                             addr=NetAddr("n", 0), nic="cx7", kv_desc=None,
+                             geom={}, n_pages=4, lease_us=100.0))
+    import json
+    tag, _, body = legacy.partition(b"\0")
+    raw = json.loads(body)
+    raw.pop("host"), raw.pop("nvlink")
+    stripped = tag + b"\0" + json.dumps(raw).encode()
+    old = m.decode(stripped)
+    assert old.host is None and old.nvlink is False
+
+
+def test_registry_view_roundtrips_host_nvlink():
+    from repro.ctrl.registry import MembershipView, PeerRegistry
+    reg = PeerRegistry()
+    reg.join(peer_id="p1", role="decode", addr=NetAddr("d", 0), nic="efa",
+             kv_desc=None, geom={}, n_pages=8, lease_us=100.0, now=0.0,
+             host="hostB", nvlink=True)
+    view = reg.view()
+    assert view.peers[0].host == "hostB" and view.peers[0].nvlink
+    rt = MembershipView.from_wire(view.epoch, view.to_wire())
+    assert rt.peers[0].host == "hostB" and rt.peers[0].nvlink

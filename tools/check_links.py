@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Validate relative markdown links (and heading anchors) in repo docs.
+
+Scans a fixed set of markdown files for inline links ``[text](target)``
+and checks that every *relative* target resolves:
+
+* ``path`` — the file or directory exists relative to the linking file;
+* ``path#anchor`` — the file exists AND contains a heading whose GitHub
+  slug equals ``anchor``;
+* ``#anchor`` — the linking file itself contains that heading.
+
+External links (``http://``, ``https://``, ``mailto:``) are ignored —
+this is a repo-consistency check, not a web crawler.  Exit 0 when every
+link resolves, 1 otherwise (one line per broken link).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Files whose internal links must resolve.  docs/*.md is globbed so new
+# documents are covered without editing this list.
+CHECKED = ["README.md", "ISSUE.md", "CHANGES.md", "ROADMAP.md", "PAPER.md"]
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces to dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    """All heading anchors a markdown file exposes."""
+    body = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    seen: dict = {}
+    out = set()
+    for mm in HEADING_RE.finditer(body):
+        slug = slugify(mm.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check_file(path: Path) -> list:
+    """Return broken-link descriptions for one markdown file."""
+    body = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    errors = []
+    for mm in LINK_RE.finditer(body):
+        target = mm.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, anchor = target.partition("#")
+        dest = path if not base else (path.parent / base).resolve()
+        if base and not dest.exists():
+            errors.append(f"{path.relative_to(REPO)}: broken link -> {target}")
+            continue
+        if anchor:
+            if dest.is_dir() or dest.suffix.lower() != ".md":
+                errors.append(
+                    f"{path.relative_to(REPO)}: anchor on non-markdown -> {target}")
+            elif anchor not in anchors_of(dest):
+                errors.append(
+                    f"{path.relative_to(REPO)}: missing anchor -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = [REPO / name for name in CHECKED if (REPO / name).exists()]
+    files += sorted((REPO / "docs").glob("*.md"))
+    errors = []
+    for path in files:
+        errors.extend(check_file(path))
+    if errors:
+        print("\n".join(errors))
+        print(f"{len(errors)} broken link(s)")
+        return 1
+    print(f"all links ok across {len(files)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
