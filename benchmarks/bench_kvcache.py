@@ -15,9 +15,17 @@ layout overhead vs the uniform path is visible per PR in the CI CSVs.
 
 from __future__ import annotations
 
+import json
+import os
+
 import numpy as np
 
 from repro.core import Fabric, Pages, UvmWatcher
+
+from .obs_hooks import TRACE, finish_trace, maybe_tracer
+
+OUT_DIR = os.environ.get(
+    "BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
 
 # paper Table 3: seq_len -> (per-layer compute ms, paper transfer ms, pages)
 PAPER_T3 = {4096: (2.267, 0.661, 256), 8192: (4.578, 0.952, 512),
@@ -26,9 +34,11 @@ PAPER_T3 = {4096: (2.267, 0.661, 256), 8192: (4.578, 0.952, 512),
 PAGE_BYTES = 32 << 10
 
 
-def bench_layer_transfer(n_pages: int, nic: str = "efa") -> float:
+def bench_layer_transfer(n_pages: int, nic: str = "efa", trace_path=None,
+                         metrics_out=None) -> float:
     """One layer's paged KV write: ms until all pages delivered."""
     fab = Fabric(seed=0)
+    tracer = maybe_tracer(fab) if trace_path else None
     a = fab.add_engine("prefill", nic=nic)
     b = fab.add_engine("decode", nic=nic)
     src = np.zeros(n_pages * PAGE_BYTES, np.uint8)
@@ -41,6 +51,8 @@ def bench_layer_transfer(n_pages: int, nic: str = "efa") -> float:
     a.submit_paged_writes(PAGE_BYTES, 1, (hs, Pages(idx, PAGE_BYTES)),
                           (dd, Pages(idx, PAGE_BYTES)))
     fab.run()
+    if tracer is not None and metrics_out is not None:
+        metrics_out["metrics"] = finish_trace(tracer, OUT_DIR, trace_path)
     return done[0] * 1e-3   # ms
 
 
@@ -109,14 +121,22 @@ def bench_schema_transfer(arch: str, seq_len: int = 256,
 
 
 def run(report) -> None:
+    rows = {}
+    tr_out = {}
     for seq, (compute_ms, paper_ms, pages) in PAPER_T3.items():
-        ms = bench_layer_transfer(pages)
+        # 8k-seq (512-page) layer is the canonical traced row
+        tp = "trace_kvcache.json" if TRACE and seq == 8192 else None
+        ms = bench_layer_transfer(pages, trace_path=tp, metrics_out=tr_out)
         hidden = ms < compute_ms
+        rows[f"kv_layer_{seq >> 10}k"] = {
+            "transfer_ms": ms, "paper_ms": paper_ms,
+            "compute_ms": compute_ms, "hidden": hidden}
         report(f"kv_layer_{seq >> 10}k", ms * 1e3,
                f"us/layer transfer (paper {paper_ms}ms, compute {compute_ms}ms,"
                f" hidden={hidden})")
         assert hidden, f"transfer not hidden by compute at seq {seq}"
     u = bench_uvm_latency()
+    rows["uvm_callback"] = {k: float(v) for k, v in u.items()}
     report("uvm_callback", u["p50"],
            f"us p50 (avg {u['avg']:.1f}, p99 {u['p99']:.1f}; paper Rust "
            f"p50 6.2 p99 12.6)")
@@ -126,7 +146,27 @@ def run(report) -> None:
         r = bench_schema_transfer(arch)
         if base is None:
             base = r["us"]
+        rows[f"kvlayout_{arch}"] = {
+            "us": r["us"], "writes": r["writes"], "bytes": r["bytes"],
+            "enqueues": r["enqueues"], "components": r["components"],
+            "vs_uniform": r["us"] / base}
         report(f"kvlayout_{arch}", r["us"],
                f"us full-state transfer ({r['components']} comps, "
                f"{r['writes']} WRs / {r['enqueues']} enqueues, "
                f"{r['bytes'] >> 10} KiB, {r['us'] / base:.2f}x uniform)")
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    doc = {
+        "bench": "kvcache",
+        "config": {"page_bytes": PAGE_BYTES,
+                   "seq_lens": sorted(PAPER_T3),
+                   "uvm_samples": 2000,
+                   "schema_archs": ["stablelm-3b", "gemma3-1b",
+                                    "mamba2-780m"]},
+        "rows": rows,
+    }
+    if tr_out.get("metrics") is not None:
+        doc["metrics"] = tr_out["metrics"]
+    with open(os.path.join(OUT_DIR, "BENCH_kvcache.json"), "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -28,6 +28,8 @@ import numpy as np
 from repro.core import Fabric, ScatterDst
 from repro.moekit import MoEConfig, make_endpoints
 
+from .obs_hooks import TRACE, finish_trace, maybe_tracer
+
 TOKEN_BYTES = 7168 + 56 * 4       # fp8 payload + fp32 scales
 TOP_K = 8
 E_TOTAL = 256                      # DeepSeek-V3 routed experts (EP<=64 -> >=4/rank)
@@ -59,10 +61,11 @@ def _inputs(cfg: MoEConfig, seed: int = 0):
 def bench_dispatch_combine(ep: int, batch: int, nic: str,
                            t_priv: int = 32, rounds: int = 3,
                            nvlink: bool = False,
-                           nics=None) -> Dict[str, float]:
+                           nics=None, trace_path=None) -> Dict[str, float]:
     cfg = MoEConfig(n_ranks=ep, n_experts=max(E_TOTAL, ep), top_k=TOP_K,
                     max_tokens=batch, token_bytes=TOKEN_BYTES, t_priv=t_priv)
     fab = Fabric(seed=1)
+    tracer = maybe_tracer(fab) if trace_path else None
     eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=8,
                          nvlink=nvlink, nics=nics)
     disp, comb = [], []
@@ -93,11 +96,14 @@ def bench_dispatch_combine(ep: int, batch: int, nic: str,
         disp.append(np.median([e.stats["dispatch_us"] for e in eps]))
         comb.append(np.median([e.stats["combine_us"] for e in eps]))
         disp_wr_peer = max(disp_wr_peer, disp_wrs["max"])
-    return {"dispatch_us": float(np.median(disp)),
-            "combine_us": float(np.median(comb)),
-            "dispatch_wr_per_peer": float(disp_wr_peer),
-            "enqueues": int(sum(e.engine.batch_stats.batches for e in eps)),
-            "wrs": int(sum(e.engine.batch_stats.wrs for e in eps))}
+    out = {"dispatch_us": float(np.median(disp)),
+           "combine_us": float(np.median(comb)),
+           "dispatch_wr_per_peer": float(disp_wr_peer),
+           "enqueues": int(sum(e.engine.batch_stats.batches for e in eps)),
+           "wrs": int(sum(e.engine.batch_stats.wrs for e in eps))}
+    if tracer is not None:
+        out["trace_metrics"] = finish_trace(tracer, OUT_DIR, trace_path)
+    return out
 
 
 def bench_deepep_style(ep: int, batch: int, nic: str = "cx7") -> Dict[str, float]:
@@ -139,6 +145,9 @@ def bench_deepep_style(ep: int, batch: int, nic: str = "cx7") -> Dict[str, float
 
 def run(report) -> None:
     summary: Dict[str, Dict] = {}
+    trace_metrics = None
+    # EP32 cx7 decode is the canonical traced row (EP16 in smoke sweeps)
+    trace_ep = 32 if 32 in EP_SWEEP else EP_SWEEP[-1]
 
     def keep(name: str, row: Dict, value_key: str = "dispatch_us") -> None:
         summary[name] = {k: v for k, v in row.items()
@@ -146,7 +155,12 @@ def run(report) -> None:
 
     for nic in ("cx7", "efa"):
         for ep in EP_SWEEP:
-            r = bench_dispatch_combine(ep, 128, nic, rounds=DECODE_ROUNDS)
+            tp = ("trace_moe.json"
+                  if TRACE and nic == "cx7" and ep == trace_ep else None)
+            r = bench_dispatch_combine(ep, 128, nic, rounds=DECODE_ROUNDS,
+                                       trace_path=tp)
+            if tp and r.get("trace_metrics"):
+                trace_metrics = r["trace_metrics"]
             keep(f"moe_decode_ep{ep}_{nic}", r)
             note = ""
             if ep == 64:
@@ -208,6 +222,8 @@ def run(report) -> None:
         "paper_us_ep64": PAPER_EP64,
         "rows": summary,
     }
+    if trace_metrics is not None:
+        doc["metrics"] = trace_metrics
     with open(os.path.join(OUT_DIR, "BENCH_moe.json"), "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")

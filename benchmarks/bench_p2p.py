@@ -8,9 +8,17 @@ shows the calibration error of the fabric model.
 
 from __future__ import annotations
 
+import json
+import os
+
 import numpy as np
 
 from repro.core import Fabric, Pages
+
+from .obs_hooks import TRACE, finish_trace, maybe_tracer
+
+OUT_DIR = os.environ.get(
+    "BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
 
 # paper Table 2 (Gbps, op/s)
 PAPER_SINGLE = {"efa": {65536: 16, 262144: 54, 1048576: 145, 33554432: 336},
@@ -43,9 +51,11 @@ def bench_single(nic: str, size: int, iters: int = 8) -> float:
     return size * iters * 8e-3 / t          # Gbps (us domain)
 
 
-def bench_paged(nic: str, page: int, n_pages: int = 4096):
+def bench_paged(nic: str, page: int, n_pages: int = 4096, trace_path=None,
+                metrics_out=None):
     """Pipelined paged-write throughput (Gbps, op/s)."""
     fab = Fabric(seed=0)
+    tracer = maybe_tracer(fab) if trace_path else None
     a = fab.add_engine("a", nic=nic)
     b = fab.add_engine("b", nic=nic)
     src = np.zeros(max(n_pages * page, 1), np.uint8)
@@ -56,17 +66,46 @@ def bench_paged(nic: str, page: int, n_pages: int = 4096):
     t0 = fab.now
     a.submit_paged_writes(page, 1, (hs, Pages(idx, page)), (dd, Pages(idx, page)))
     t = fab.run() - t0
+    if tracer is not None and metrics_out is not None:
+        metrics_out["metrics"] = finish_trace(tracer, OUT_DIR, trace_path)
     return n_pages * page * 8e-3 / t, n_pages / (t * 1e-6)
 
 
 def run(report) -> None:
+    rows = {}
+    tr_out = {}
     for nic in ("efa", "cx7"):
         for size, paper in PAPER_SINGLE[nic].items():
             gbps = bench_single(nic, size)
+            rows[f"p2p_single_{nic}_{size >> 10}KiB"] = {
+                "gbps": gbps, "paper_gbps": paper,
+                "err_pct": 100 * (gbps - paper) / paper}
             report(f"p2p_single_{nic}_{size >> 10}KiB", gbps,
                    f"Gbps (paper {paper}; err {100 * (gbps - paper) / paper:+.0f}%)")
         for page, (paper_gbps, paper_ops) in PAPER_PAGED[nic].items():
-            gbps, ops = bench_paged(nic, page)
+            # the 8 KiB CX7 paged run is the canonical traced row
+            tp = ("trace_p2p.json"
+                  if TRACE and nic == "cx7" and page == 8192 else None)
+            gbps, ops = bench_paged(nic, page, trace_path=tp,
+                                    metrics_out=tr_out)
+            rows[f"p2p_paged_{nic}_{page >> 10 or 1}KiB"] = {
+                "gbps": gbps, "mops": ops / 1e6, "paper_gbps": paper_gbps,
+                "paper_mops": paper_ops / 1e6,
+                "err_pct": 100 * (gbps - paper_gbps) / paper_gbps}
             report(f"p2p_paged_{nic}_{page >> 10 or 1}KiB", gbps,
                    f"Gbps {ops / 1e6:.2f}Mop/s (paper {paper_gbps} Gbps "
                    f"{paper_ops / 1e6:.2f}M; err {100 * (gbps - paper_gbps) / paper_gbps:+.0f}%)")
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    doc = {
+        "bench": "p2p",
+        "config": {"single_iters": 8, "paged_n_pages": 4096,
+                   "single_sizes": sorted(PAPER_SINGLE["efa"]),
+                   "paged_pages": sorted(PAPER_PAGED["efa"])},
+        "rows": rows,
+    }
+    if tr_out.get("metrics") is not None:
+        doc["metrics"] = tr_out["metrics"]
+    with open(os.path.join(OUT_DIR, "BENCH_p2p.json"), "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")

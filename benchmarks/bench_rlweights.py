@@ -30,6 +30,8 @@ from repro.rlweights.transfer import (arm_commit_gates, commit_imm, data_imm,
                                       plan_chunks, resolve_chunk_bytes,
                                       run_pipelined_update)
 
+from .obs_hooks import TRACE, finish_trace, maybe_tracer
+
 # pipeline stage rates calibrated to Table 5 (Kimi-K2, 256 ranks)
 H2D_GBPS = 43.0        # 8 GB/rank in 184 ms
 PREP_GBPS = 15.5       # full_tensor+fuse+quantise: 8 GB in ~520 ms
@@ -81,7 +83,8 @@ def synthetic_cluster(n_train: int, n_infer: int, nic: str = "efa",
 
 def p2p_synthetic(nic: str = "efa", changed: Optional[List[str]] = None,
                   chunk_bytes: Optional[int] = None,
-                  infer_nic: Optional[str] = None) -> Dict[str, float]:
+                  infer_nic: Optional[str] = None,
+                  trace_path: Optional[str] = None) -> Dict[str, float]:
     """The staged §5.2 pipeline over synthetic writes: chunked staging under
     the watermark, one WrBatch per pipeline window, two-phase commit.  Each
     FSDP source range is H2D'd + prepared ONCE and WRITTEN to every TP
@@ -98,6 +101,8 @@ def p2p_synthetic(nic: str = "efa", changed: Optional[List[str]] = None,
             stage_scale=STAGE_SCALE, dst_nic=infer_nic)
     fab, te, ie, descs = synthetic_cluster(N_TRAIN, N_INFER, nic,
                                            infer_nic=infer_nic)
+    # attach before launch: RankPipeline captures fabric.tracer at build time
+    tracer = maybe_tracer(fab) if trace_path else None
     chunks_by_rank = plan_chunks(routes, chunk_bytes=chunk_bytes,
                                  watermark_bytes=WATERMARK,
                                  stage_scale=STAGE_SCALE)
@@ -136,6 +141,8 @@ def p2p_synthetic(nic: str = "efa", changed: Optional[List[str]] = None,
     out["committed"] = all(len(g.flips) == 1 for g in gates)
     out.update(schedule_stats(routes, N_TRAIN, N_INFER,
                               full_routes=_routes()[0] if changed else None))
+    if tracer is not None:
+        out["trace_metrics"] = finish_trace(tracer, OUT_DIR, trace_path)
     return out
 
 
@@ -218,10 +225,15 @@ def run(report) -> None:
 def _run_inner(report) -> None:
     dirty = [f"w{i}" for i in range(0, N_PARAMS, DIRTY_EVERY)]
     summary: Dict[str, Dict] = {}
+    trace_metrics = None
 
     for nic in ("efa", "cx7"):
         suffix = "" if nic == "efa" else f"_{nic}"
-        p2p = p2p_synthetic(nic)
+        # the canonical traced row: the full EFA p2p update (Table 5 anchor)
+        tp = "trace_rlweights.json" if TRACE and nic == "efa" else None
+        p2p = p2p_synthetic(nic, trace_path=tp)
+        if tp and p2p.get("trace_metrics"):
+            trace_metrics = p2p.pop("trace_metrics")
         summary[f"p2p{suffix or '_efa'}"] = p2p
         report(f"rl_p2p_total{suffix}", p2p["total_ms"] * 1e3,
                f"us = {p2p['total_ms']:.0f}ms total (paper 1233ms on efa), "
@@ -294,6 +306,8 @@ def _run_inner(report) -> None:
             summary["rank0_efa"]["total_ms"] / summary["p2p_efa"]["total_ms"],
         "delta_frac": summary["p2p_delta_efa"].get("delta_frac"),
     }
+    if trace_metrics is not None:
+        doc["metrics"] = trace_metrics
     with open(os.path.join(OUT_DIR, "BENCH_rlweights.json"), "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -23,11 +23,17 @@ Model compute is real (reduced stablelm); all times are virtual us.
 
 from __future__ import annotations
 
+import json
 import os
 
 import numpy as np
 
+from .obs_hooks import finish_trace, maybe_tracer
+
 SMOKE = os.environ.get("BENCH_SCALING_SMOKE", "") not in ("", "0")
+
+OUT_DIR = os.environ.get(
+    "BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
 
 GAP_US = 60.0            # arrival spacing (service time is ~100 us/req)
 LAYER_US = 50.0
@@ -46,6 +52,8 @@ def run_timeline(n_a: int, n_b: int, n_d: int, *, prompt_len: int = 24,
     cfg = get_config("stablelm-3b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     fab = Fabric(seed=seed)
+    # traces the whole elastic timeline (ctrl instants + autoscale decisions)
+    tracer = maybe_tracer(fab)
     ctrl = ControlPlane(fab, nic=nic, lease_us=600.0, sweep_us=200.0,
                         max_sweeps=150)
     prefillers = []
@@ -132,6 +140,7 @@ def run_timeline(n_a: int, n_b: int, n_d: int, *, prompt_len: int = 24,
         "phases": phases, "sched": sched, "scaler": scaler, "ctrl": ctrl,
         "ttft": ttft, "tput": tput, "t_b": t_b, "t_d": t_d,
         "n_prefillers": len(prefillers),
+        "metrics": finish_trace(tracer, OUT_DIR, "trace_scaling.json"),
     }
 
 
@@ -140,26 +149,50 @@ def run(report) -> None:
     r = run_timeline(n_a, n_b, n_d)
     sched, scaler, ttft, tput = r["sched"], r["scaler"], r["ttft"], r["tput"]
     ph = r["phases"]
+    rows = {}
+
+    def emit(name, value, derived="", **extra):
+        rows[name] = {"value": float(value), **extra}
+        report(name, value, derived)
 
     a, b, d = ttft(ph["A"]), ttft(ph["B"]), ttft(ph["D"])
     up_ts = [t for t, kind, _ in scaler.decisions if kind == "up"]
     down_ts = [t for t, kind, _ in scaler.decisions if kind == "down"]
-    report("scale_ttft_p50_overload", float(np.percentile(a, 50)),
-           f"us (1 prefiller, {len(a)} reqs; p95 {np.percentile(a, 95):.0f})")
-    report("scale_ttft_p50_scaled", float(np.percentile(b, 50)),
-           f"us (after scale-up at t={up_ts[0]:.0f}; "
-           f"p95 {np.percentile(b, 95):.0f})")
-    report("scale_ttft_p50_failover", float(np.percentile(d, 50)),
-           f"us (crash at t={r['t_d'] + 100:.0f}, {len(sched.rerouted)} "
-           f"re-routed, all completed)")
-    report("scale_tput_overload", tput(ph["A"], 0.0), "req/ms virtual")
-    report("scale_tput_scaled", tput(ph["B"], r["t_b"]), "req/ms virtual")
-    report("scale_epochs", float(sched.view_epochs[-1]),
-           f"membership epochs seen by scheduler "
-           f"(ups {len(up_ts)}, downs {len(down_ts)}, "
-           f"{r['n_prefillers']} prefillers total)")
-    report("scale_drain_leaked_pages", 0.0,
-           "KV pages leaked through drained scale-down (asserted)")
+    emit("scale_ttft_p50_overload", float(np.percentile(a, 50)),
+         f"us (1 prefiller, {len(a)} reqs; p95 {np.percentile(a, 95):.0f})",
+         p95=float(np.percentile(a, 95)))
+    emit("scale_ttft_p50_scaled", float(np.percentile(b, 50)),
+         f"us (after scale-up at t={up_ts[0]:.0f}; "
+         f"p95 {np.percentile(b, 95):.0f})",
+         p95=float(np.percentile(b, 95)))
+    emit("scale_ttft_p50_failover", float(np.percentile(d, 50)),
+         f"us (crash at t={r['t_d'] + 100:.0f}, {len(sched.rerouted)} "
+         f"re-routed, all completed)",
+         p95=float(np.percentile(d, 95)))
+    emit("scale_tput_overload", tput(ph["A"], 0.0), "req/ms virtual")
+    emit("scale_tput_scaled", tput(ph["B"], r["t_b"]), "req/ms virtual")
+    emit("scale_epochs", float(sched.view_epochs[-1]),
+         f"membership epochs seen by scheduler "
+         f"(ups {len(up_ts)}, downs {len(down_ts)}, "
+         f"{r['n_prefillers']} prefillers total)",
+         ups=len(up_ts), downs=len(down_ts),
+         n_prefillers=r["n_prefillers"])
+    emit("scale_drain_leaked_pages", 0.0,
+         "KV pages leaked through drained scale-down (asserted)")
     # scale-up must beat the overloaded tail; failover must still complete
     assert np.percentile(b, 95) < np.percentile(a, 95), \
         "scale-up did not improve tail TTFT"
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    doc = {
+        "bench": "scaling",
+        "smoke": SMOKE,
+        "config": {"n_a": n_a, "n_b": n_b, "n_d": n_d,
+                   "gap_us": GAP_US, "layer_us": LAYER_US},
+        "rows": rows,
+    }
+    if r["metrics"] is not None:
+        doc["metrics"] = r["metrics"]
+    with open(os.path.join(OUT_DIR, "BENCH_scaling.json"), "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -1,0 +1,39 @@
+"""Shared ``BENCH_TRACE=1`` glue for the benchmark modules.
+
+Each bench picks ONE representative run to trace (tracing every sweep point
+would multiply artifact size for no extra signal).  The tracer is attached
+before any engine is built and — by the obs-package invariant — changes no
+simulated timing: traced rows are bit-identical to untraced ones, which is
+asserted by ``tests/test_obs.py``.
+
+On ``finish_trace`` the bench gets back the flat metrics dict (merged into
+its ``BENCH_*.json`` under ``"metrics"``) and a Perfetto-loadable Chrome
+trace lands in the bench output dir.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+TRACE = os.environ.get("BENCH_TRACE") == "1"
+
+
+def maybe_tracer(fab):
+    """Attach a Tracer to ``fab`` when BENCH_TRACE=1 (else return None)."""
+    if not TRACE:
+        return None
+    from repro.obs import Tracer
+    return Tracer(fab)
+
+
+def finish_trace(tracer, out_dir: str, name: str) -> Optional[dict]:
+    """Export the Chrome trace + return the flat metrics dict (or None)."""
+    if tracer is None:
+        return None
+    from repro.obs import export_chrome_trace
+    tracer.sample_gauges()
+    os.makedirs(out_dir, exist_ok=True)
+    n = export_chrome_trace(tracer, os.path.join(out_dir, name))
+    print(f"# trace: {name} ({n} events)")
+    return tracer.finalize()

@@ -220,7 +220,8 @@ class Domain:
             if peer not in self._nvlink:
                 seed = stable_hash(self._seed, self.addr, peer, "nvl")
                 self._nvlink[peer] = Channel(
-                    self.loop, NicQueue(self.loop, plan.spec), seed)
+                    self.loop, NicQueue(self.loop, plan.spec), seed,
+                    label=f"{self.addr}>{peer} nvlink")
             return self._nvlink[peer]
         if plan.kind == "cross":
             key = (peer, peer_index)
@@ -228,13 +229,18 @@ class Domain:
                 seed = stable_hash(self._seed, self.addr, self.index, peer,
                                    peer_index, "x", plan.spec.name)
                 self._cross[key] = Channel(
-                    self.loop, NicQueue(self.loop, plan.spec), seed)
+                    self.loop, NicQueue(self.loop, plan.spec), seed,
+                    label=f"{self.addr}[{self.index}]>{peer} "
+                          f"x:{plan.spec.name}")
             return self._cross[key]
         key = (peer, peer_index)
         if key not in self._channels:
             # Deterministic per-channel seed (process-stable).
             seed = stable_hash(self._seed, self.addr, self.index, peer, peer_index)
-            self._channels[key] = Channel(self.loop, self.nic, seed)
+            # All peers of one Domain share its NIC queue: the label names
+            # the QUEUE (trace tracks are per queue, not per peer).
+            self._channels[key] = Channel(self.loop, self.nic, seed,
+                                          label=f"{self.addr} nic{self.index}")
         return self._channels[key]
 
 
@@ -259,6 +265,8 @@ class DomainGroup:
         self._post_busy_until = 0.0
         self.regions: Dict[int, MemoryRegion] = {}
         self.posted_writes = 0
+        # observability hook (repro.obs); None => zero-cost guarded check
+        self.tracer = None
 
     # -- memory ---------------------------------------------------------
     def register(self, buf: np.ndarray, device: int) -> Tuple[MrHandle, MrDesc]:
@@ -300,6 +308,8 @@ class DomainGroup:
             self._post_busy_until = max(self.loop.now, self._post_busy_until) + extra_post_us
         delay = self._post_delay()
         ch = d.channel_to(dst_group.addr, d.index)
+        if self.tracer is not None:
+            self.tracer._on_post(op, ch, self, extra_post_us)
         self.loop.schedule(delay, lambda: ch.post(op))
 
     def split_across_nics(self, nbytes: int) -> List[Tuple[int, int, int]]:

@@ -152,22 +152,28 @@ class WriteState:
     payload is fully visible; the sender side notifies the owning
     ``BatchState`` once all stripes have local completions."""
 
-    __slots__ = ("n_parts", "delivered", "sent", "imm", "counter", "batch")
+    __slots__ = ("n_parts", "delivered", "sent", "imm", "counter", "batch",
+                 "fabric")
 
     def __init__(self, n_parts: int, imm: Optional[int],
-                 counter: Optional[ImmCounter], batch: BatchState):
+                 counter: Optional[ImmCounter], batch: BatchState,
+                 fabric: Optional["Fabric"] = None):
         self.n_parts = n_parts
         self.delivered = 0
         self.sent = 0
         self.imm = imm
         self.counter = counter
         self.batch = batch
+        self.fabric = fabric
 
     def on_delivered(self, op, now: float) -> None:
         """Receiver-side stripe landing; fires the immediate on the last."""
         self.delivered += 1
-        if self.delivered == self.n_parts and self.imm is not None:
-            self.counter.increment(self.imm, now)
+        if self.delivered == self.n_parts:
+            if self.fabric is not None:
+                self.fabric.inflight_writes -= 1
+            if self.imm is not None:
+                self.counter.increment(self.imm, now)
 
     def on_sent(self, now: float) -> None:
         """Sender-side stripe completion; notifies the batch on the last."""
@@ -271,15 +277,21 @@ class TransferEngine:
         """
         payload = bytes(msg)
         src = self.groups[device]
-        dst_group, dst_engine = self.fabric._lookup(addr)
+        fab = self.fabric
+        dst_group, dst_engine = fab._lookup(addr)
+        fab.inflight_sends += 1
 
         def on_delivered(op: WireOp, now: float) -> None:
+            fab.inflight_sends -= 1
             dst_engine._deliver_send(addr.dev, payload)
 
         op = WireOp(kind="send", payload=None, dst_region=None, dst_offset=0,
                     imm=None, on_delivered=on_delivered,
                     on_sent=(lambda now: _fire(cb)) if cb is not None else None,
                     nbytes=len(payload))
+        tr = fab.tracer
+        if tr is not None:
+            op.span = tr.begin_wr("send", addr, len(payload), None)
         pending = self._send_batches.get(device)
         if pending is not None and pending[1] == self.loop.now:
             # SEND/RECV uses only the first NIC in the group.
@@ -324,25 +336,36 @@ class TransferEngine:
         — used by cluster-scale benchmarks where materialising terabytes of
         real bytes is pointless; all protocol behaviour is identical."""
         src_group = batch.group
-        dst_group, dst_engine = self.fabric._lookup(dst.owner)
+        fab = self.fabric
+        dst_group, dst_engine = fab._lookup(dst.owner)
         dst_region = dst_group.region(dst.region_id) if synthetic_bytes is None else None
         nbytes = (len(payload) if payload is not None else 0) \
             if synthetic_bytes is None else synthetic_bytes
         parts = src_group.split_across_nics(nbytes) if stripe else [(None, 0, nbytes)]
+        fab.inflight_writes += 1
         state = WriteState(len(parts), imm,
-                           dst_engine.counters[dst.owner.dev], batch_state)
+                           dst_engine.counters[dst.owner.dev], batch_state,
+                           fab)
+        tr = fab.tracer
         for nic_index, off, ln in parts:
             chunk = payload[off:off + ln] if payload is not None else None
             op = WireOp(kind="write", payload=chunk, dst_region=dst_region,
                         dst_offset=dst_offset + off, imm=imm,
                         on_delivered=state.on_delivered, on_sent=state.on_sent,
                         nbytes=ln)
+            if tr is not None:
+                op.span = tr.begin_wr("write", dst.owner, ln, imm)
             idx = nic_index if stripe else (nic_rr if nic_rr is not None else None)
             batch.add(op, dst_group, nic_index=idx, extra_post_us=extra_post_us)
 
     def _enqueue_batch(self, batch: WrBatch) -> None:
         """One application->worker handoff for the whole batch (§3.4)."""
         self.batch_stats.record(batch)
+        tr = self.fabric.tracer
+        if tr is not None:
+            tr.n_batches += 1
+            tr.n_wrs += len(batch)
+            tr.n_bytes += batch.nbytes
         self.loop.schedule(ENQUEUE_US, batch.post)
 
     def submit_single_write(self, length: int, imm: Optional[int],
@@ -529,6 +552,25 @@ class TransferEngine:
         """Total payload bytes this device's NICs have transmitted."""
         return sum(d.nic.bytes_sent for d in self.groups[device].domains)
 
+    # -- leak audit --------------------------------------------------------------
+    def audit(self) -> Dict[str, object]:
+        """Leaked per-engine state at loop-idle: SENDs parked waiting for a
+        RECV that was never posted, SEND batches submitted but not yet
+        flushed, and unfulfilled ImmCounter expectations (imm, have, need).
+        Empty dict = clean.  Aggregated by :meth:`Fabric.audit`."""
+        report: Dict[str, object] = {}
+        for dev, pend in self._pending_sends.items():
+            if pend:
+                report[f"pending_sends[{self.node}/{dev}]"] = len(pend)
+        for dev, (batch, _t) in self._send_batches.items():
+            if len(batch):
+                report[f"unflushed_send_batch[{self.node}/{dev}]"] = len(batch)
+        for dev, counter in self.counters.items():
+            out = counter.outstanding()
+            if out:
+                report[f"unfulfilled_imms[{self.node}/{dev}]"] = out
+        return report
+
 
 class Fabric:
     """A simulated cluster: nodes x GPUs x NICs sharing one event loop.
@@ -547,6 +589,13 @@ class Fabric:
         self._groups: Dict[NetAddr, Tuple[DomainGroup, TransferEngine]] = {}
         self._peer_groups: List[List[NetAddr]] = []
         self.nic_kinds: set = set()
+        # observability (repro.obs): None => every hook is a single guarded
+        # attribute check; attach via Tracer(fabric) / attach_tracer
+        self.tracer = None
+        # always-on leak accounting (plain int bumps, no timing impact)
+        self.inflight_writes = 0
+        self.inflight_sends = 0
+        self._auditables: List[Tuple[str, object]] = []
 
     def add_engine(self, node: str, nic: str = "cx7", num_devices: int = 1,
                    host: Optional[str] = None,
@@ -582,6 +631,66 @@ class Fabric:
         self.topology.register(addr, TopoEntry(
             host=engine.host, nic=engine.nic_name,
             spec=engine.nic_spec, nvlink=engine.nvlink))
+        if self.tracer is not None:
+            self._wire_tracer(addr, group, engine)
+
+    # -- observability (repro.obs) ----------------------------------------------
+    def _wire_tracer(self, addr: NetAddr, group: DomainGroup,
+                     engine: TransferEngine) -> None:
+        group.tracer = self.tracer
+        counter = engine.counters.get(addr.dev)
+        if counter is not None:
+            counter.tracer = self.tracer
+            counter.label = str(addr)
+
+    def attach_tracer(self, tracer) -> None:
+        """Attach a :class:`repro.obs.Tracer` (or None to detach): wires
+        every existing and future DomainGroup and ImmCounter.  Tracing
+        never perturbs simulated time — hooks are pure bookkeeping."""
+        self.tracer = tracer
+        for addr, (group, engine) in self._groups.items():
+            group.tracer = tracer
+            counter = engine.counters.get(addr.dev)
+            if counter is not None:
+                counter.tracer = tracer
+                counter.label = str(addr)
+
+    def register_auditable(self, name: str, obj) -> None:
+        """Register an object exposing ``audit_leaks() -> dict`` (empty =
+        clean) for inclusion in :meth:`audit` — e.g. rlweights pipelines
+        reporting unreleased staging reservations."""
+        self._auditables.append((name, obj))
+
+    def audit(self) -> Dict[str, object]:
+        """Fabric-wide leak report, meaningful at loop-idle: logical
+        WRITEs/SENDs without a final delivery, per-engine leftovers
+        (parked SENDs, unfulfilled ImmCounter expectations) and registered
+        auditables.  ``report["clean"]`` is the single pass/fail bit; see
+        :func:`repro.obs.assert_clean` for the test-teardown wrapper."""
+        engines: Dict[str, object] = {}
+        seen: set = set()
+        for addr, (group, engine) in self._groups.items():
+            if id(engine) in seen:
+                continue
+            seen.add(id(engine))
+            rep = engine.audit()
+            if rep:
+                engines[engine.node] = rep
+        auditables: Dict[str, object] = {}
+        for name, obj in self._auditables:
+            rep = obj.audit_leaks()
+            if rep:
+                auditables[name] = rep
+        report: Dict[str, object] = {
+            "inflight_writes": self.inflight_writes,
+            "inflight_sends": self.inflight_sends,
+            "engines": engines,
+            "auditables": auditables,
+            "pending_events": self.loop.pending,
+        }
+        report["clean"] = not (self.inflight_writes or self.inflight_sends
+                               or engines or auditables)
+        return report
 
     def _lookup(self, addr: NetAddr) -> Tuple[DomainGroup, TransferEngine]:
         return self._groups[addr]

@@ -26,6 +26,9 @@ class ImmCounter:
         # imm -> list of (threshold, callback, fired?)
         self._watchers: Dict[int, List[List]] = {}
         self.events: List[Tuple[float, int]] = []  # (time, imm) audit trail
+        # observability (repro.obs): set by Fabric.attach_tracer
+        self.tracer = None
+        self.label = ""
 
     def expect(self, imm: int, count: int, cb: Callable[[], None]) -> None:
         """Fire ``cb`` once, when ``imm``'s counter reaches ``count``."""
@@ -51,9 +54,21 @@ class ImmCounter:
         self.counts.pop(imm, None)
         self._watchers.pop(imm, None)
 
+    def outstanding(self) -> List[Tuple[int, int, int]]:
+        """Unfired watcher expectations as ``(imm, have, need)`` triples —
+        the leak-audit view: non-empty at loop-idle means a protocol armed
+        an expectation whose WRITEs never all landed."""
+        return [(imm, self.counts.get(imm, 0), w[0])
+                for imm, ws in self._watchers.items()
+                for w in ws if not w[2]]
+
     def _maybe_fire(self, imm: int) -> None:
         have = self.counts.get(imm, 0)
         for w in self._watchers.get(imm, []):
             if not w[2] and have >= w[0]:
                 w[2] = True
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "imm", f"{self.label} imm={imm:#x}",
+                        {"have": have, "need": w[0]})
                 w[1]()

@@ -151,6 +151,11 @@ class NicQueue:
         self.bytes_sent = 0
         self.ops_sent = 0
 
+    def backlog_us(self, now: float) -> float:
+        """Queued-but-unserialised service time at ``now`` (µs) — the
+        queue-occupancy gauge sampled by ``repro.obs``: 0 when idle."""
+        return max(0.0, self.busy_until - now)
+
     def submit(self, nbytes: int, on_wire: Callable[[float], None],
                charge_fixed: bool = True) -> float:
         """Queue ``nbytes`` for transmission.

@@ -43,6 +43,9 @@ class WireOp:
     on_delivered: Callable[["WireOp", float], None]  # receiver-side hook
     on_sent: Optional[Callable[[float], None]] = None  # sender-side CQE hook
     nbytes: int = 0
+    # observability (repro.obs): lifecycle span stamped by the transport
+    # hooks when a tracer is attached; None => hooks are no-ops
+    span: Optional[object] = None
 
 
 class Channel:
@@ -54,19 +57,25 @@ class Channel:
     chunk has been delivered (RDMA spec: payload before immediate).
     """
 
-    def __init__(self, loop: EventLoop, nic: NicQueue, seed: int, ordered: Optional[bool] = None):
+    def __init__(self, loop: EventLoop, nic: NicQueue, seed: int,
+                 ordered: Optional[bool] = None, label: str = ""):
         self.loop = loop
         self.nic = nic
         self.spec = nic.spec
         self.ordered = self.spec.ordered if ordered is None else ordered
         self.rng = np.random.default_rng(seed)
         self._last_delivery = 0.0  # for RC in-order enforcement
+        self.label = label         # queue/track name for trace export
 
     MAX_CHUNKS = 64  # coarse chunking: bounds event count for GB-scale writes
 
     def post(self, op: WireOp) -> None:
         """Submit one WireOp: MTU-chunk, queue on the NIC, deliver with the
         transport's ordering contract (RC collapse vs per-chunk SRD jitter)."""
+        sp = op.span
+        if sp is not None:
+            # queue wait ends when the NIC starts serialising this op
+            sp.t_wire = max(self.loop.now, self.nic.busy_until)
         if self.ordered:
             return self._post_ordered(op)
         nbytes = op.nbytes
@@ -111,6 +120,8 @@ class Channel:
                 remaining[0] -= 1
                 if remaining[0] == 0:
                     # Entire payload visible => CQE/immediate may fire.
+                    if op.span is not None:
+                        op.span.t_deliver = self.loop.now
                     op.on_delivered(op, self.loop.now)
 
             self.loop.schedule_at(arrive, land)
@@ -152,6 +163,8 @@ class Channel:
                 if op.payload is not None and op.dst_region is not None and nbytes:
                     op.dst_region.write_bytes(op.dst_offset,
                                               memoryview(op.payload)[:nbytes])
+                if op.span is not None:
+                    op.span.t_deliver = self.loop.now
                 op.on_delivered(op, self.loop.now)
 
             self.loop.schedule_at(arrive, land)

@@ -90,6 +90,9 @@ class Autoscaler:
             self._next_index += 1
             self._last_action_us = now
             self.decisions.append((now, "up", f"spawn#{idx} depth={depth}"))
+            tr = getattr(getattr(self.ctrl, "fabric", None), "tracer", None)
+            if tr is not None:
+                tr.instant("autoscale", f"up:spawn#{idx}", {"depth": depth})
             self.spawn(idx)
             return "up"
 
@@ -99,6 +102,10 @@ class Autoscaler:
             self._last_action_us = now
             self._idle_ticks = 0
             self.decisions.append((now, "down", f"drain {victim.peer_id}"))
+            tr = getattr(getattr(self.ctrl, "fabric", None), "tracer", None)
+            if tr is not None:
+                tr.instant("autoscale", f"down:{victim.peer_id}",
+                           {"inflight": victim.inflight})
             self.ctrl.drain(victim.peer_id)
             return "down"
         return None

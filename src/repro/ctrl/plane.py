@@ -85,6 +85,7 @@ class ControlPlane:
     # -- message handling ----------------------------------------------------
     def _on_msg(self, payload: bytes) -> None:
         msg = m.decode(payload)
+        tr = self.fabric.tracer
         if isinstance(msg, m.Join):
             # a peer may request a shorter lease; the server's is the cap
             lease = min(msg.lease_us, self.lease_us) if msg.lease_us \
@@ -94,6 +95,9 @@ class ControlPlane:
                 nic=msg.nic, kv_desc=msg.kv_desc, geom=msg.geom,
                 n_pages=msg.n_pages, lease_us=lease, now=self.fabric.now,
                 schema=msg.schema, host=msg.host, nvlink=msg.nvlink)
+            if tr is not None:
+                tr.instant("ctrl", f"join:{msg.peer_id}",
+                           {"role": msg.role, "epoch": self.registry.epoch})
             self.engine.submit_send(
                 msg.addr,
                 m.encode(m.JoinAck(msg.peer_id, self.registry.epoch, lease)))
@@ -104,6 +108,9 @@ class ControlPlane:
                 inflight=msg.inflight, free_pages=msg.free_pages)
         elif isinstance(msg, m.Leave):
             if self.registry.leave(msg.peer_id) is not None:
+                if tr is not None:
+                    tr.instant("ctrl", f"leave:{msg.peer_id}",
+                               {"epoch": self.registry.epoch})
                 self._broadcast()
         else:
             raise ValueError(f"control plane got unexpected {type(msg).__name__}")
@@ -114,6 +121,10 @@ class ControlPlane:
         rec = self.registry.record(peer_id)
         if rec is None or self.registry.start_drain(peer_id) is None:
             return False
+        tr = self.fabric.tracer
+        if tr is not None:
+            tr.instant("ctrl", f"drain:{peer_id}",
+                       {"reason": reason, "epoch": self.registry.epoch})
         self._broadcast()
         self.engine.submit_send(rec.addr, m.encode(m.Drain(peer_id, reason)))
         return True
@@ -131,7 +142,11 @@ class ControlPlane:
         def sweep() -> None:
             died = self.registry.expire(self.fabric.now)
             if died:
+                tr = self.fabric.tracer
                 for rec in died:
+                    if tr is not None:
+                        tr.instant("ctrl", f"lease_expired:{rec.peer_id}",
+                                   {"epoch": self.registry.epoch})
                     for cb in self.on_death:
                         cb(rec)
                 self._broadcast()

@@ -40,6 +40,7 @@ from typing import Callable, Dict, List
 import numpy as np
 
 from ..core import Fabric, MrDesc, PayloadDst, ScatterDst, TransferEngine
+from ..obs import traced_phase
 
 KERNEL_LAUNCH_US = 15.0      # launch -> first transfer (paper §6.2)
 ROUTE_PROC_US = 20.0         # host-side route processing before the second
@@ -208,16 +209,27 @@ class MoEEndpoint:
                     dst=(self.ports[r].d_priv, self.rank * cfg.t_priv * tb)))
             # routes + private tokens ride ONE WrBatch (one proxy handoff);
             # each keeps its own imm so completion accounting is unchanged
-            self.engine.submit_scatters([
-                (self.h_route_send, route_dsts, route_imm, None),
-                (None, priv_dsts, tok_imm, None),
-            ])
+            with traced_phase(self.fabric, "moe.dispatch.p1"):
+                self.engine.submit_scatters([
+                    (self.h_route_send, route_dsts, route_imm, None),
+                    (None, priv_dsts, tok_imm, None),
+                ])
 
+        tr = self.fabric.tracer
+        if tr is not None:
+            tr.compute_span(f"rank{self.rank} gpu", "kernel_launch",
+                            t0, t0 + KERNEL_LAUNCH_US, phase="moe.dispatch")
         self.fabric.loop.schedule(KERNEL_LAUNCH_US, proxy_phase1)
 
         # 4. wait for ALL routes, then ship every receiver its residual
         # tokens as ONE contiguous WRITE into its per-source shared region
         def on_routes() -> None:
+            tr = self.fabric.tracer
+            if tr is not None:
+                now = self.fabric.now
+                tr.compute_span(f"rank{self.rank} proxy", "route_proc",
+                                now, now + ROUTE_PROC_US,
+                                phase="moe.dispatch")
             self.fabric.loop.schedule(ROUTE_PROC_US, lambda: process_routes())
 
         def process_routes() -> None:
@@ -236,9 +248,10 @@ class MoEEndpoint:
                     dst=(self.ports[r].d_shared,
                          self.rank * cfg.src_region_tokens * tb)))
             if shared_dsts:
-                self.engine.submit_scatters(
-                    [(None, shared_dsts, tok_imm,
-                      lambda: ctx.__setitem__("sent_at", self.fabric.now))])
+                with traced_phase(self.fabric, "moe.dispatch.p2"):
+                    self.engine.submit_scatters(
+                        [(None, shared_dsts, tok_imm,
+                          lambda: ctx.__setitem__("sent_at", self.fabric.now))])
             else:
                 ctx["sent_at"] = self.fabric.now
 
@@ -341,8 +354,14 @@ class MoEEndpoint:
                 for s in range(N) if per_src[s] > 0]
 
         def proxy_send() -> None:
-            self.engine.submit_scatters([(None, dsts, comb_imm, None)])
+            with traced_phase(self.fabric, "moe.combine"):
+                self.engine.submit_scatters([(None, dsts, comb_imm, None)])
 
+        tr = self.fabric.tracer
+        if tr is not None:
+            tr.compute_span(f"rank{self.rank} gpu", "combine_launch",
+                            t0, t0 + KERNEL_LAUNCH_US * 0.5,
+                            phase="moe.combine")
         self.fabric.loop.schedule(KERNEL_LAUNCH_US * 0.5, proxy_send)
 
         # source side: expect one write from each rank hosting my tokens

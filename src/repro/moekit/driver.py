@@ -48,6 +48,8 @@ def run_moe_layer(fabric: Fabric, eps: List[MoEEndpoint],
     expert_fn(global_expert_id, slab (n, elems)) -> (n, elems).
     Returns (combined outputs per rank, stats).
     """
+    from ..obs import traced_window
+
     cfg = eps[0].cfg
     N = cfg.n_ranks
     ctxs: List[Dict] = [None] * N
@@ -66,13 +68,16 @@ def run_moe_layer(fabric: Fabric, eps: List[MoEEndpoint],
         ep.combine(ctxs[r], outs,
                    lambda: done.__setitem__("comb", done["comb"] + 1))
 
-    for r, ep in enumerate(eps):
-        tok_bytes = tokens[r].astype(dtype).view(np.uint8).reshape(
-            tokens[r].shape[0], -1)
-        ctxs[r] = ep.dispatch(tok_bytes, eids[r],
-                              lambda r=r: (done.__setitem__("disp", done["disp"] + 1),
-                                           start_combine(r)))
-    fabric.run()
+    with traced_window(fabric, "moe.layer"):
+        for r, ep in enumerate(eps):
+            tok_bytes = tokens[r].astype(dtype).view(np.uint8).reshape(
+                tokens[r].shape[0], -1)
+            ctxs[r] = ep.dispatch(tok_bytes, eids[r],
+                                  lambda r=r: (done.__setitem__("disp", done["disp"] + 1),
+                                               start_combine(r)))
+        fabric.run()
+    if fabric.tracer is not None:
+        fabric.tracer.sample_gauges()
     assert done["disp"] == N and done["comb"] == N, (done, N)
 
     results = [eps[r].combine_result(ctxs[r], gates[r], dtype=dtype)

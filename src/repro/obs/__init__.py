@@ -1,0 +1,21 @@
+"""repro.obs: zero-cost-when-off tracing, metrics and leak auditing.
+
+Attach a :class:`Tracer` to a fabric (``Tracer(fabric)``; existing and
+future engines are wired either way) to record per-WR lifecycle spans, ctrl-plane instants, gauges and
+tagged observation windows, all in virtual time; export with
+:func:`export_chrome_trace` (Perfetto) and :meth:`Tracer.finalize` (flat
+metrics dict for ``BENCH_*.json``).  With no tracer attached every hook in
+the fabric hot path is a single guarded attribute check.
+"""
+
+from .audit import assert_clean, format_audit
+from .export import build_trace_events, export_chrome_trace
+from .metrics import Histogram, MetricRegistry
+from .tracer import Tracer, Window, WrSpan, traced_phase, traced_window
+
+__all__ = [
+    "Tracer", "WrSpan", "Window", "traced_phase", "traced_window",
+    "Histogram", "MetricRegistry",
+    "build_trace_events", "export_chrome_trace",
+    "assert_clean", "format_audit",
+]

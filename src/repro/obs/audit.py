@@ -1,0 +1,46 @@
+"""Leak-audit helpers over ``Fabric.audit()`` (test-teardown wiring).
+
+``Fabric.audit()`` reports, at loop-idle: logical WRITEs/SENDs still in
+flight, per-engine unfulfilled ImmCounter expectations and queued-but-
+undeliverable SENDs, and leaks from registered auditables (e.g. rlweights
+staging reservations that were never released).  These helpers format that
+report and turn it into a hard assertion for test teardown.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+
+def format_audit(report: dict) -> str:
+    """Human-readable rendering of a ``Fabric.audit()`` report."""
+    lines: List[str] = [
+        f"fabric audit: clean={report['clean']} "
+        f"(inflight_writes={report['inflight_writes']}, "
+        f"inflight_sends={report['inflight_sends']}, "
+        f"pending_events={report['pending_events']})"]
+    for node, rep in report.get("engines", {}).items():
+        for key, val in rep.items():
+            lines.append(f"  engine {node}: {key} = {val}")
+    for name, rep in report.get("auditables", {}).items():
+        lines.append(f"  auditable {name}: {rep}")
+    return "\n".join(lines)
+
+
+def assert_clean(fabric, allow_pending_sends: bool = False) -> dict:
+    """Assert the fabric has no leaked in-flight state at loop-idle.
+
+    ``allow_pending_sends=True`` tolerates SENDs parked for RECVs that
+    were never posted (RNR-queued) — some control-plane shutdown paths
+    legitimately leave these.  Returns the audit report on success."""
+    report = fabric.audit()
+    if report["clean"]:
+        return report
+    if allow_pending_sends:
+        dirty = (report["inflight_writes"] or report["inflight_sends"]
+                 or report["auditables"]
+                 or any(k for rep in report["engines"].values() for k in rep
+                        if not k.startswith("pending_sends")))
+        if not dirty:
+            return report
+    raise AssertionError(format_audit(report))

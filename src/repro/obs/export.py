@@ -1,0 +1,113 @@
+"""Chrome trace-event JSON export (Perfetto-loadable).
+
+Track layout (Perfetto groups by process, then thread):
+
+* pid 1 "compute + engines" — one thread per serialised resource (GPU
+  kernel launches, route processing, H2D/prepare engines, layer compute,
+  per-group posting threads), rendered as "X" complete events;
+* one pid per fabric queue (NIC queue / NVLink channel / cross channel) —
+  WR lifecycle spans as async "b"/"e" events keyed by ``op_id``, so
+  overlapping WRs on one queue nest instead of colliding;
+* pid 2 "ctrl" — instant events (JOIN/DRAIN/lease expiry/autoscale/imm);
+* pid 3 "gauges" — counter ("C") tracks for queue backlog, staging
+  watermark and outstanding expectations.
+
+Spans are colored by phase via a stable hash into the trace-viewer
+palette.  Timestamps are virtual microseconds, passed through unscaled
+(the trace-event ``ts`` unit is µs).
+"""
+
+from __future__ import annotations
+
+import json
+import zlib
+from typing import Dict, List
+
+# trace-viewer reserved color names (stable subset)
+_PALETTE = [
+    "thread_state_running", "thread_state_runnable", "thread_state_iowait",
+    "rail_response", "rail_animation", "rail_idle", "rail_load",
+    "cq_build_running", "cq_build_passed", "cq_build_failed",
+    "good", "bad", "terrible", "yellow", "olive", "generic_work",
+]
+
+_PID_COMPUTE = 1
+_PID_CTRL = 2
+_PID_GAUGES = 3
+_PID_QUEUE0 = 100
+
+
+def _cname(phase: str) -> str:
+    """Stable phase -> palette color mapping."""
+    return _PALETTE[zlib.crc32(phase.encode()) % len(_PALETTE)]
+
+
+def build_trace_events(tracer) -> List[dict]:
+    """The tracer's contents as a trace-event list (no file I/O)."""
+    events: List[dict] = []
+    events.append({"ph": "M", "pid": _PID_COMPUTE, "name": "process_name",
+                   "args": {"name": "compute + engines"}})
+    events.append({"ph": "M", "pid": _PID_CTRL, "name": "process_name",
+                   "args": {"name": "ctrl"}})
+    events.append({"ph": "M", "pid": _PID_GAUGES, "name": "process_name",
+                   "args": {"name": "gauges"}})
+
+    # compute / resource spans: one tid per track under pid 1
+    tids: Dict[str, int] = {}
+    for track, name, phase, t0, t1 in tracer.xspans:
+        tid = tids.get(track)
+        if tid is None:
+            tid = tids[track] = len(tids)
+            events.append({"ph": "M", "pid": _PID_COMPUTE, "tid": tid,
+                           "name": "thread_name", "args": {"name": track}})
+        events.append({"ph": "X", "pid": _PID_COMPUTE, "tid": tid,
+                       "name": name, "cat": phase or "compute",
+                       "ts": t0, "dur": max(0.0, t1 - t0),
+                       "cname": _cname(phase or name)})
+
+    # WR lifecycle spans: async b/e per fabric queue track
+    qpids: Dict[str, int] = {}
+    for sp in tracer.spans:
+        track = sp.track or "(unposted)"
+        pid = qpids.get(track)
+        if pid is None:
+            pid = qpids[track] = _PID_QUEUE0 + len(qpids)
+            events.append({"ph": "M", "pid": pid, "name": "process_name",
+                           "args": {"name": f"queue {track}"}})
+        name = f"{sp.kind}:{sp.phase}" if sp.phase else sp.kind
+        args = {"dst": sp.dst, "nbytes": sp.nbytes, "phase": sp.phase,
+                "t_submit": sp.t_submit, "t_enqueue": sp.t_enqueue,
+                "t_post0": sp.t_post0, "t_post": sp.t_post,
+                "t_wire": sp.t_wire, "t_deliver": sp.t_deliver}
+        if sp.imm is not None:
+            args["imm"] = sp.imm
+        events.append({"ph": "b", "pid": pid, "tid": 0, "cat": "wr",
+                       "id": sp.op_id, "name": name, "ts": sp.t_submit,
+                       "cname": _cname(sp.phase or sp.kind), "args": args})
+        if sp.t_deliver is not None:
+            events.append({"ph": "e", "pid": pid, "tid": 0, "cat": "wr",
+                           "id": sp.op_id, "name": name, "ts": sp.t_deliver})
+
+    # instants
+    for t, category, name, args in tracer.instants:
+        ev = {"ph": "i", "pid": _PID_CTRL, "tid": 0, "s": "g",
+              "cat": category, "name": f"{category}:{name}", "ts": t}
+        if args:
+            ev["args"] = args
+        events.append(ev)
+
+    # gauge samples as counter tracks
+    for t, name, value in tracer.samples:
+        events.append({"ph": "C", "pid": _PID_GAUGES, "tid": 0,
+                       "name": name, "ts": t, "args": {"value": value}})
+    return events
+
+
+def export_chrome_trace(tracer, path: str) -> int:
+    """Write the tracer's contents as Chrome trace-event JSON at ``path``
+    (open with https://ui.perfetto.dev).  Returns the event count."""
+    events = build_trace_events(tracer)
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"},
+                  f, separators=(",", ":"))
+    return len(events)

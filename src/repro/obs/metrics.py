@@ -1,0 +1,104 @@
+"""MetricRegistry: counters, gauges and virtual-time histograms.
+
+All values are in the fabric's *virtual* units (microseconds for times,
+bytes for sizes).  The registry is deliberately allocation-light: a
+histogram is a plain append-only sample list with percentiles computed on
+demand, so recording on the simulator hot path costs one ``list.append``.
+Percentiles use linear interpolation between closest ranks (the same
+definition as ``numpy.percentile``'s default), which the unit tests pin.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+
+class Histogram:
+    """An exact-sample histogram with on-demand percentiles (virtual µs)."""
+
+    __slots__ = ("samples",)
+
+    def __init__(self) -> None:
+        self.samples: List[float] = []
+
+    def observe(self, value: float) -> None:
+        """Record one sample."""
+        self.samples.append(float(value))
+
+    @property
+    def count(self) -> int:
+        """Number of recorded samples."""
+        return len(self.samples)
+
+    @property
+    def mean(self) -> float:
+        """Arithmetic mean of the samples (0.0 when empty)."""
+        return sum(self.samples) / len(self.samples) if self.samples else 0.0
+
+    @property
+    def max(self) -> float:
+        """Largest sample (0.0 when empty)."""
+        return max(self.samples) if self.samples else 0.0
+
+    def percentile(self, p: float) -> float:
+        """The ``p``-th percentile (0..100), linear interpolation between
+        closest ranks — numpy's default definition, pinned by unit tests."""
+        xs = sorted(self.samples)
+        if not xs:
+            return 0.0
+        if len(xs) == 1:
+            return xs[0]
+        k = (len(xs) - 1) * (p / 100.0)
+        f = math.floor(k)
+        c = min(f + 1, len(xs) - 1)
+        return xs[f] + (xs[c] - xs[f]) * (k - f)
+
+    def summary(self) -> Dict[str, float]:
+        """count/mean/p50/p95/p99/max as a flat dict (bench JSON rows)."""
+        return {"count": self.count, "mean": self.mean,
+                "p50": self.percentile(50), "p95": self.percentile(95),
+                "p99": self.percentile(99), "max": self.max}
+
+
+class MetricRegistry:
+    """Named counters, gauges (last + peak) and histograms.
+
+    The flat-dict export (:meth:`as_dict`) is what gets merged into every
+    ``BENCH_*.json`` — scalar keys only, dotted names, so the perf-gate's
+    row comparison can treat metrics like any other stats row.
+    """
+
+    def __init__(self) -> None:
+        self.counters: Dict[str, float] = {}
+        self.gauges: Dict[str, Tuple[float, float]] = {}   # name -> (last, peak)
+        self.histograms: Dict[str, Histogram] = {}
+
+    def count(self, name: str, by: float = 1) -> None:
+        """Increment counter ``name`` by ``by``."""
+        self.counters[name] = self.counters.get(name, 0) + by
+
+    def gauge(self, name: str, value: float) -> None:
+        """Set gauge ``name``; its peak (max ever seen) is kept alongside."""
+        _, peak = self.gauges.get(name, (0.0, float("-inf")))
+        self.gauges[name] = (float(value), max(peak, float(value)))
+
+    def observe(self, name: str, value: float) -> None:
+        """Record ``value`` into histogram ``name`` (created on first use)."""
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram()
+        h.observe(value)
+
+    def as_dict(self) -> Dict[str, float]:
+        """Flatten everything to scalars: counters as-is, gauges as
+        ``name``/``name.peak``, histograms as ``name.{count,mean,p50,p95,
+        p99,max}``."""
+        out: Dict[str, float] = dict(self.counters)
+        for name, (last, peak) in self.gauges.items():
+            out[name] = last
+            out[f"{name}.peak"] = peak
+        for name, h in self.histograms.items():
+            for k, v in h.summary().items():
+                out[f"{name}.{k}"] = v
+        return out

@@ -1,0 +1,272 @@
+"""Tracer: per-WR lifecycle spans and fabric-wide events in virtual time.
+
+The tracer observes the fabric WITHOUT perturbing it.  Two hard invariants,
+enforced by the determinism tests:
+
+* with a tracer attached, all simulated times are **bit-identical** to an
+  untraced run — the tracer never schedules events, never draws from any
+  RNG, and never changes iteration order; every hook is synchronous
+  bookkeeping inside an already-executing continuation;
+* with tracing off, each hook compiles down to a single guarded attribute
+  check (``if tracer is not None``) with no allocation.
+
+A :class:`WrSpan` records one work request's lifecycle stamps (all virtual
+µs): ``t_submit`` (templated into a WrBatch) → ``t_enqueue`` (batch posted
+on the worker) → ``t_post0``/``t_post`` (the WR's slot on the serialised
+posting thread) → ``t_wire`` (NIC starts serialising, i.e. queue wait over)
+→ ``t_deliver`` (last chunk fully visible at the destination).  Spans are
+created by the :class:`~repro.core.TransferEngine` at submission and
+stamped downstream by the DomainGroup/Channel hooks; a span missing
+``t_deliver`` after the loop idles is an orphan (see ``Fabric.audit``).
+"""
+
+from __future__ import annotations
+
+import itertools
+from contextlib import contextmanager, nullcontext
+from typing import Any, Dict, List, Optional, Tuple
+
+from .metrics import MetricRegistry
+
+
+class WrSpan:
+    """Lifecycle stamps (virtual µs) for ONE work request on the fabric."""
+
+    __slots__ = ("op_id", "kind", "phase", "dst", "nbytes", "imm", "track",
+                 "t_submit", "t_enqueue", "t_post0", "t_post", "t_wire",
+                 "t_deliver")
+
+    def __init__(self, op_id: int, kind: str, phase: str, dst: str,
+                 nbytes: int, imm: Optional[int], t_submit: float):
+        self.op_id = op_id
+        self.kind = kind
+        self.phase = phase
+        self.dst = dst
+        self.nbytes = nbytes
+        self.imm = imm
+        self.track = ""             # queue label, stamped at post time
+        self.t_submit = t_submit
+        self.t_enqueue: Optional[float] = None
+        self.t_post0: Optional[float] = None
+        self.t_post: Optional[float] = None
+        self.t_wire: Optional[float] = None
+        self.t_deliver: Optional[float] = None
+
+    @property
+    def complete(self) -> bool:
+        """True once the WR's payload fully landed at the destination."""
+        return self.t_deliver is not None
+
+    def as_dict(self) -> Dict[str, Any]:
+        """All fields as a plain dict (trace export / debugging)."""
+        return {k: getattr(self, k) for k in self.__slots__}
+
+
+class Window:
+    """One tagged observation window: virtual-time interval + WR/batch
+    deltas, the vllm-ascend ``ProfileExecuteDuration`` idiom the future
+    online autotuner feeds on."""
+
+    __slots__ = ("tag", "t0", "t1", "wrs", "batches", "nbytes")
+
+    def __init__(self, tag: str, t0: float):
+        self.tag = tag
+        self.t0 = t0
+        self.t1 = t0
+        self.wrs = 0
+        self.batches = 0
+        self.nbytes = 0
+
+    @property
+    def duration_us(self) -> float:
+        """Virtual time covered by the window."""
+        return self.t1 - self.t0
+
+    @property
+    def post_enqueue_ratio(self) -> float:
+        """WRs posted per WrBatch enqueued inside the window — matches
+        ``BatchStats.wrs_per_enqueue`` over the same interval."""
+        return self.wrs / self.batches if self.batches else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        """Window stats as a flat dict."""
+        return {"tag": self.tag, "t0": self.t0, "t1": self.t1,
+                "duration_us": self.duration_us, "wrs": self.wrs,
+                "batches": self.batches, "nbytes": self.nbytes,
+                "post_enqueue_ratio": self.post_enqueue_ratio}
+
+
+class Tracer:
+    """Fabric-wide tracing + metrics sink, attached via ``Tracer(fabric)``.
+
+    Collects: per-WR :class:`WrSpan` lifecycles, known-interval compute/
+    resource spans (``compute_span``), ctrl-plane instants (``instant``),
+    gauge samples (``gauge``/``sample_gauges``), tagged observation windows
+    (``window``) and a :class:`~repro.obs.metrics.MetricRegistry`.
+    Everything is ordinary Python bookkeeping — no event-loop interaction.
+    """
+
+    def __init__(self, fabric) -> None:
+        self.fabric = fabric
+        self.loop = fabric.loop
+        self.metrics = MetricRegistry()
+        self.spans: List[WrSpan] = []
+        # (track, name, phase, t0, t1) known-interval resource/compute spans
+        self.xspans: List[Tuple[str, str, str, float, float]] = []
+        self.instants: List[Tuple[float, str, str, Optional[dict]]] = []
+        self.samples: List[Tuple[float, str, float]] = []   # "C" events
+        self.windows: Dict[str, List[Window]] = {}
+        self._phases: List[str] = []
+        self._ids = itertools.count()
+        # enqueue-side counters (incremented per WrBatch handoff, matching
+        # BatchStats by construction — the window-ratio ground truth)
+        self.n_wrs = 0
+        self.n_batches = 0
+        self.n_bytes = 0
+        fabric.attach_tracer(self)
+
+    # -- span creation (engine-side) --------------------------------------
+    @property
+    def current_phase(self) -> str:
+        """Innermost active ``phase(...)`` tag ('' outside any phase)."""
+        return self._phases[-1] if self._phases else ""
+
+    def begin_wr(self, kind: str, dst, nbytes: int,
+                 imm: Optional[int]) -> WrSpan:
+        """Open a lifecycle span for one WR at submission time."""
+        sp = WrSpan(next(self._ids), kind, self.current_phase, str(dst),
+                    nbytes, imm, self.loop.now)
+        self.spans.append(sp)
+        return sp
+
+    # -- post-time stamping (DomainGroup-side) ----------------------------
+    def _on_post(self, op, ch, group, extra_post_us: float) -> None:
+        """Stamp a WR's worker-posting slot and queue track (called by
+        ``DomainGroup.post_write`` right after the posting delay is
+        charged; pure bookkeeping)."""
+        sp = op.span
+        if sp is None:
+            return
+        if sp.t_enqueue is None:
+            sp.t_enqueue = self.loop.now
+        sp.t_post = group._post_busy_until
+        sp.t_post0 = sp.t_post - group.post_us - extra_post_us
+        sp.track = ch.label
+
+    # -- phases and windows ------------------------------------------------
+    @contextmanager
+    def phase(self, name: str):
+        """Tag every WR submitted inside the block with ``name``."""
+        self._phases.append(name)
+        try:
+            yield
+        finally:
+            self._phases.pop()
+
+    @contextmanager
+    def window(self, tag: str):
+        """Tagged observation window: yields a :class:`Window` whose
+        virtual-time interval and WR/batch/byte deltas are filled at exit
+        (``with tracer.window("prepare") as w: ...``)."""
+        w = Window(tag, self.loop.now)
+        wrs0, b0, n0 = self.n_wrs, self.n_batches, self.n_bytes
+        try:
+            yield w
+        finally:
+            w.t1 = self.loop.now
+            w.wrs = self.n_wrs - wrs0
+            w.batches = self.n_batches - b0
+            w.nbytes = self.n_bytes - n0
+            self.windows.setdefault(tag, []).append(w)
+            m = self.metrics
+            m.observe(f"window.{tag}.us", w.duration_us)
+            if w.batches:
+                m.observe(f"window.{tag}.wrs_per_enqueue",
+                          w.post_enqueue_ratio)
+
+    # -- instants, gauges, compute spans -----------------------------------
+    def instant(self, category: str, name: str,
+                args: Optional[dict] = None) -> None:
+        """Record a point event (ctrl-plane JOIN/DRAIN/expiry, imm fire...)."""
+        self.instants.append((self.loop.now, category, name, args))
+        self.metrics.count(f"instant.{category}")
+
+    def gauge(self, name: str, value: float) -> None:
+        """Record a gauge sample (exported as a Perfetto counter track)."""
+        self.metrics.gauge(name, value)
+        self.samples.append((self.loop.now, name, float(value)))
+
+    def compute_span(self, track: str, name: str, t0: float, t1: float,
+                     phase: str = "") -> None:
+        """Record a known-interval span on a serialised resource track
+        (kernel launch, route processing, H2D/prepare, layer compute)."""
+        self.xspans.append((track, name, phase, t0, t1))
+        self.metrics.observe(f"compute.{name}.us", t1 - t0)
+
+    def sample_gauges(self) -> None:
+        """Sample fabric-wide gauges NOW: per-NIC-queue backlog (µs of
+        queued service time), staging watermarks via registered auditables,
+        and outstanding ImmCounter expectations.  Call at natural protocol
+        boundaries (round ends, window flushes) — never from hot hooks."""
+        fab = self.fabric
+        now = self.loop.now
+        backlog_max = 0.0
+        per_queue: Dict[str, float] = {}
+        seen: set = set()
+        outstanding = 0
+        for addr, (group, eng) in fab._groups.items():
+            for d in group.domains:
+                b = d.nic.backlog_us(now)
+                per_queue[f"{addr} nic{d.index}"] = b
+                backlog_max = max(backlog_max, b)
+            if id(eng) not in seen:
+                seen.add(id(eng))
+                for c in eng.counters.values():
+                    outstanding += len(c.outstanding())
+        self.gauge("queue.backlog_max_us", backlog_max)
+        if len(per_queue) <= 64:      # per-queue tracks only at small scale
+            for k, v in per_queue.items():
+                self.gauge(f"queue.{k}.backlog_us", v)
+        self.gauge("imm.outstanding", outstanding)
+
+    # -- aggregation --------------------------------------------------------
+    def finalize(self) -> Dict[str, float]:
+        """Fold every completed span into the registry's ``wr.*``
+        histograms and return the flat metrics dict (idempotent — derived
+        entries are recomputed from scratch on each call)."""
+        m = self.metrics
+        for k in [k for k in m.histograms if k.startswith("wr.")]:
+            del m.histograms[k]
+        complete = 0
+        for sp in self.spans:
+            if sp.t_deliver is None:
+                continue
+            complete += 1
+            m.observe("wr.total_us", sp.t_deliver - sp.t_submit)
+            if sp.t_enqueue is not None:
+                m.observe("wr.enqueue_us", sp.t_enqueue - sp.t_submit)
+                if sp.t_wire is not None:
+                    m.observe("wr.post_us", sp.t_wire - sp.t_enqueue)
+            if sp.t_wire is not None:
+                m.observe("wr.wire_us", sp.t_deliver - sp.t_wire)
+        m.counters["wr.spans"] = len(self.spans)
+        m.counters["wr.complete"] = complete
+        m.counters["wr.orphans"] = len(self.spans) - complete
+        m.counters["enqueue.batches"] = self.n_batches
+        m.counters["enqueue.wrs"] = self.n_wrs
+        m.counters["enqueue.nbytes"] = self.n_bytes
+        return m.as_dict()
+
+
+def traced_phase(fabric, name: str):
+    """``tracer.phase(name)`` when ``fabric`` has a tracer, else a no-op
+    context manager — the single-attribute-check guard for call sites."""
+    tr = fabric.tracer
+    return tr.phase(name) if tr is not None else nullcontext()
+
+
+def traced_window(fabric, tag: str):
+    """``tracer.window(tag)`` when ``fabric`` has a tracer, else a no-op
+    context manager (yields None)."""
+    tr = fabric.tracer
+    return tr.window(tag) if tr is not None else nullcontext()

@@ -188,6 +188,12 @@ class CommitGate:
             if state["data"] and state["commit"]:
                 self.version += 1
                 self.flips.append((self.engine.fabric.now, update_id))
+                tr = self.engine.fabric.tracer
+                if tr is not None:
+                    tr.instant("rlweights",
+                               f"commit_flip:{self.engine.node}",
+                               {"update_id": update_id,
+                                "version": self.version})
                 if on_flip is not None:
                     on_flip(update_id)
 
@@ -285,8 +291,11 @@ class RankPipeline:
                  watermark_bytes: int, window_us: float,
                  submit_window: Callable[[List[StageChunk]], None],
                  h2d: bool = True, h2d_gbps: float = H2D_GBPS,
-                 prep_gbps: float = PREP_GBPS):
+                 prep_gbps: float = PREP_GBPS, label: str = ""):
         self.loop = fabric.loop
+        # observability: captured at construction (attach the Tracer first)
+        self.tracer = fabric.tracer
+        self.label = label
         self.queue = list(chunks)[::-1]        # pop() from the tail = FIFO
         self.watermark = watermark_bytes
         self.window_us = window_us
@@ -323,6 +332,18 @@ class RankPipeline:
             self.h2d_busy = max(self.loop.now, self.h2d_busy) + h2d_us
             t_ready = max(self.prep_busy, self.h2d_busy) + prep_us
             self.prep_busy = t_ready
+            tr = self.tracer
+            if tr is not None:
+                # the serialised engines' slots are known at admission —
+                # record them as resource spans (no event-loop interaction)
+                if h2d_us:
+                    tr.compute_span(f"{self.label} h2d", "h2d",
+                                    self.h2d_busy - h2d_us, self.h2d_busy,
+                                    phase="rlweights.stage")
+                tr.compute_span(f"{self.label} prep", "prepare",
+                                t_ready - prep_us, t_ready,
+                                phase="rlweights.stage")
+                tr.gauge("rlweights.staged_bytes", self.staged)
             self.loop.schedule_at(t_ready, lambda c=c: self._prepared(c))
 
     def _prepared(self, c: StageChunk) -> None:
@@ -341,7 +362,22 @@ class RankPipeline:
     def chunk_sent(self, c: StageChunk) -> None:
         """Sender-side completion of every WRITE of ``c``: staging freed."""
         self.staged -= c.stage_bytes
+        if self.tracer is not None:
+            self.tracer.gauge("rlweights.staged_bytes", self.staged)
         self._admit()
+
+    def audit_leaks(self) -> Dict[str, int]:
+        """Unreleased staging state at loop-idle (empty dict = clean):
+        reserved-but-unreleased staging bytes, never-admitted chunks, and
+        prepared chunks whose window never flushed."""
+        rep: Dict[str, int] = {}
+        if self.staged:
+            rep["staged_bytes"] = self.staged
+        if self.queue:
+            rep["queued_chunks"] = len(self.queue)
+        if self._ready:
+            rep["unflushed_window_chunks"] = len(self._ready)
+        return rep
 
     @property
     def h2d_total_us(self) -> float:
@@ -388,10 +424,11 @@ def launch_pipelined_update(
         pipe = RankPipeline(
             fabric, chunks, watermark_bytes=watermark_bytes,
             window_us=window_us, h2d=h2d, h2d_gbps=h2d_gbps,
-            prep_gbps=prep_gbps,
+            prep_gbps=prep_gbps, label=f"rank{rank}",
             submit_window=lambda w: None)      # bound just below
         pipe.submit_window = make_submit(rank, pipe)
         pipe.chunk_done_cb = lambda c, pipe=pipe: chunk_done(pipe, c)
+        fabric.register_auditable(f"rlweights.rank{rank}", pipe)
         pipes[rank] = pipe
 
     for pipe in pipes.values():

@@ -51,6 +51,7 @@ from ..ctrl import messages as m
 from ..kvlayout import (DECODE_MARGIN, KvSchema, TransferPlan, fill_cache,
                         schema_from_config, stage_cache)
 from ..models import decode_step, init_cache, prefill
+from ..obs import traced_phase
 from .kvpool import KvPool
 
 
@@ -234,6 +235,11 @@ class Prefiller:
         self._busy_until = start + cfg.n_layers * self.layer_compute_us
         delay0 = start - t_start
         self.stats[f"req{req.request_id}_queued_us"] = delay0
+        tr = self.fabric.tracer
+        if tr is not None:
+            tr.compute_span(f"{self.engine.node} gpu",
+                            f"prefill:req{req.request_id}",
+                            start, self._busy_until, phase="serving.prefill")
 
         # REAL prefill compute (all layers at once — jax scan); both ends
         # derive cache geometry from plan.max_len so ring slot assignment
@@ -265,10 +271,11 @@ class Prefiller:
             if (not self.alive or req.request_id in self._cancelled
                     or hi <= lo):
                 return
-            n = plan.submit_span(
-                self.engine, self.pool.handle, local_pages,
-                req.kv_desc, req.pages, req.imm, lo, hi,
-                on_sent=lambda n: cnt.__setitem__("done", cnt["done"] + n))
+            with traced_phase(self.fabric, "serving.kv_span"):
+                n = plan.submit_span(
+                    self.engine, self.pool.handle, local_pages,
+                    req.kv_desc, req.pages, req.imm, lo, hi,
+                    on_sent=lambda n: cnt.__setitem__("done", cnt["done"] + n))
             if n:
                 self.span_log.append((req.request_id, lo, hi, n))
 
@@ -282,10 +289,11 @@ class Prefiller:
         def send_tail() -> None:
             if not self.alive or req.request_id in self._cancelled:
                 return
-            self.engine.submit_single_write(
-                tail.size, req.imm + plan.n_imms, (tail_handle, 0),
-                (req.tail_desc, req.tail_idx * tail.size),
-                on_done=lambda: cnt.__setitem__("done", cnt["done"] + 1))
+            with traced_phase(self.fabric, "serving.tail"):
+                self.engine.submit_single_write(
+                    tail.size, req.imm + plan.n_imms, (tail_handle, 0),
+                    (req.tail_desc, req.tail_idx * tail.size),
+                    on_done=lambda: cnt.__setitem__("done", cnt["done"] + 1))
 
         self.fabric.loop.schedule(
             delay0 + cfg.n_layers * self.layer_compute_us + 1.0, send_tail)
@@ -446,6 +454,10 @@ class Decoder:
             "attempt": attempt, "reply_to": reply_to, "seq_len": S,
         }
 
+        tr = self.fabric.tracer
+        if tr is not None:
+            tr.instant("serving", f"submit:req{request_id}",
+                       {"seq_len": S, "attempt": attempt})
         req = DispatchReq(input_ids=np.asarray(input_ids),
                           decoder_addr=self.address(),
                           imm=imm, kv_desc=self.pool.desc, pages=pages,
@@ -468,6 +480,9 @@ class Decoder:
                 "pages": pages, "tail_idx": tail_idx, "seq_len": S,
                 "plan": plan,
             }
+            if tr is not None:
+                tr.instant("serving", f"kv_ready:req{request_id}",
+                           {"ttft_us": self.fabric.now - t0})
             self._decode(request_id, n_decode)
 
         for off, count in expectations:

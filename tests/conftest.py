@@ -16,6 +16,32 @@ def pytest_configure(config):
         "subset (run all with -m \"\")")
 
 
+@pytest.fixture
+def audited_fabrics(monkeypatch):
+    """Track every Fabric built during the test and, at teardown, assert
+    each one that ran to quiescence is leak-free: no un-delivered WRs, no
+    unfulfilled ImmCounter expectations, no unreleased staging
+    reservations (``repro.obs.assert_clean``).  Fabrics left with pending
+    events were stopped mid-flight on purpose (bounded ``run_until`` /
+    crash scenarios) and are skipped.  Fabric test modules opt in with a
+    one-line autouse wrapper."""
+    from repro.core import Fabric
+    from repro.obs import assert_clean
+
+    built = []
+    orig = Fabric.__init__
+
+    def wrapped(self, *a, **kw):
+        orig(self, *a, **kw)
+        built.append(self)
+
+    monkeypatch.setattr(Fabric, "__init__", wrapped)
+    yield built
+    for fab in built:
+        if fab.loop.pending == 0:
+            assert_clean(fab, allow_pending_sends=True)
+
+
 @pytest.fixture(scope="session", autouse=True)
 def _fabric_determinism_canary():
     """Two fabrics built in-process from the same seed must agree on the

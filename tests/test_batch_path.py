@@ -6,6 +6,12 @@ import pytest
 
 from repro.core import Fabric, Flag, Pages, ScatterDst
 
+@pytest.fixture(autouse=True)
+def _audit_fabrics(audited_fabrics):
+    """Leak-free teardown: every quiescent fabric must pass the obs audit."""
+    yield
+
+
 
 def _pair(nic: str, seed: int = 0):
     fab = Fabric(seed=seed)

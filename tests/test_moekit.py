@@ -21,6 +21,12 @@ from repro.moekit import (MoEConfig, MoEEndpoint, PeerPorts, make_endpoints,
 SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
 
 
+@pytest.fixture(autouse=True)
+def _audit_fabrics(audited_fabrics):
+    """Leak-free teardown: every quiescent fabric must pass the obs audit."""
+    yield
+
+
 def _mk_inputs(cfg: MoEConfig, rng, skew: str = "uniform"):
     """tokens/eids/gates per rank; ``skew`` shapes the expert distribution."""
     N, E, R, T = cfg.n_ranks, cfg.n_experts, cfg.top_k, cfg.max_tokens

@@ -13,6 +13,12 @@ from repro.rlweights import (CommitGate, ParamMeta, autotune_chunk_bytes,
                              verify_contents)
 
 
+@pytest.fixture(autouse=True)
+def _audit_fabrics(audited_fabrics):
+    """Leak-free teardown: every quiescent fabric must pass the obs audit."""
+    yield
+
+
 def _plan(n_params=6, n_train=4, n_infer=4, tp=2, quant=0.5, changed=None):
     params = [ParamMeta(f"w{i}", (512, 64 + 32 * i), 2)
               for i in range(n_params)]

@@ -5,6 +5,12 @@ import pytest
 
 from repro.core import CX7, EFA_200, Fabric, Pages
 
+@pytest.fixture(autouse=True)
+def _audit_fabrics(audited_fabrics):
+    """Leak-free teardown: every quiescent fabric must pass the obs audit."""
+    yield
+
+
 
 def _pair(nic: str, seed: int = 0):
     fab = Fabric(seed=seed)

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Perf gate: compare fresh ``BENCH_*.json`` runs against checked-in baselines.
+
+The simulator is deterministic (virtual time, seeded RNG), so a bench row
+only moves when the code's *behaviour* moves — which makes a tight
+tolerance meaningful.  The CI ``perf-gate`` job runs the full-scale
+benches into a scratch dir and calls::
+
+    python tools/bench_check.py --baseline benchmarks/out --new /tmp/out \
+        BENCH_moe.json BENCH_rlweights.json
+
+For every numeric value under ``rows`` the relative delta
+``|new - old| / max(|old|, eps)`` must stay within ``--tolerance``
+(booleans must match exactly).  A per-row delta table is printed either
+way; violations, rows missing from the fresh run, and smoke/full scale
+mismatches exit 1.  New rows or keys (a bench learned a new measurement)
+are reported but never fail — baselines get refreshed by committing the
+fresh file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Tuple
+
+EPS = 1e-9
+DEFAULT_FILES = ["BENCH_moe.json", "BENCH_rlweights.json"]
+
+
+def flat_rows(doc: dict) -> dict:
+    """``rows`` flattened to {"row.key": value} over numeric/bool leaves."""
+    out = {}
+    for row, kv in doc.get("rows", {}).items():
+        if not isinstance(kv, dict):
+            continue
+        for k, v in kv.items():
+            if isinstance(v, (int, float, bool)):
+                out[f"{row}.{k}"] = v
+    return out
+
+
+def compare_file(base_path: str, new_path: str, tol: float
+                 ) -> Tuple[List[str], List[str]]:
+    """Returns (violations, info_lines) for one bench JSON pair."""
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    name = os.path.basename(base_path)
+    bad: List[str] = []
+    info: List[str] = []
+
+    if base.get("smoke") != new.get("smoke"):
+        bad.append(f"{name}: smoke={new.get('smoke')} run compared against "
+                   f"smoke={base.get('smoke')} baseline — scales differ")
+        return bad, info
+
+    b, n = flat_rows(base), flat_rows(new)
+    width = max((len(k) for k in b | n), default=3)
+    info.append(f"\n{name} (tolerance {100 * tol:.0f}%):")
+    info.append(f"  {'row.key':<{width}} {'baseline':>14} {'new':>14} "
+                f"{'delta':>9}")
+    for k in sorted(b | n):
+        if k not in n:
+            bad.append(f"{name}: {k} missing from the fresh run")
+            info.append(f"  {k:<{width}} {b[k]!s:>14} {'MISSING':>14}")
+            continue
+        if k not in b:
+            info.append(f"  {k:<{width}} {'(new)':>14} {n[k]!s:>14}")
+            continue
+        bv, nv = b[k], n[k]
+        if isinstance(bv, bool) or isinstance(nv, bool):
+            mark = "" if bv == nv else "  VIOLATION"
+            if mark:
+                bad.append(f"{name}: {k} flipped {bv} -> {nv}")
+            info.append(f"  {k:<{width}} {bv!s:>14} {nv!s:>14} {'':>9}{mark}")
+            continue
+        delta = (nv - bv) / max(abs(bv), EPS)
+        mark = "" if abs(delta) <= tol else "  VIOLATION"
+        if mark:
+            bad.append(f"{name}: {k} moved {100 * delta:+.1f}% "
+                       f"({bv:.6g} -> {nv:.6g}, tol {100 * tol:.0f}%)")
+        info.append(f"  {k:<{width}} {bv:>14.6g} {nv:>14.6g} "
+                    f"{100 * delta:>+8.1f}%{mark}")
+    return bad, info
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", default=DEFAULT_FILES,
+                    help=f"bench JSON filenames (default {DEFAULT_FILES})")
+    ap.add_argument("--baseline", default="benchmarks/out",
+                    help="dir with the checked-in baseline JSONs")
+    ap.add_argument("--new", dest="new_dir", required=True,
+                    help="dir with the freshly produced JSONs")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="max relative delta per numeric value")
+    args = ap.parse_args(argv)
+
+    violations: List[str] = []
+    for fname in args.files or DEFAULT_FILES:
+        base_path = os.path.join(args.baseline, fname)
+        new_path = os.path.join(args.new_dir, fname)
+        for p, which in ((base_path, "baseline"), (new_path, "fresh")):
+            if not os.path.exists(p):
+                violations.append(f"{fname}: {which} file {p} missing")
+                p = None
+                break
+        if p is None:
+            continue
+        bad, info = compare_file(base_path, new_path, args.tolerance)
+        print("\n".join(info))
+        violations += bad
+
+    if violations:
+        print(f"\nFAIL: {len(violations)} violation(s)", file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print("\nOK: all rows within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

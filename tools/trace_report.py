@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""Stall attribution + phase coverage from an obs Chrome trace.
+
+Reads a trace exported by :func:`repro.obs.export_chrome_trace` and
+answers the question the raw Perfetto view makes you eyeball: *where did
+the virtual time go?*
+
+Per destination, every complete WR lifecycle span is split into its three
+serial segments (the stamps ride in the async ``b`` event's ``args``, so
+this script needs nothing but the trace file):
+
+* ``enqueue`` — ``t_enqueue - t_submit``: time from logical submission to
+  the WrBatch hitting the posting thread (batch windowing, proxy delay);
+* ``post``    — ``t_wire - t_enqueue``: waiting for the serialised
+  per-group posting thread plus the NIC queue (doorbell cost, queue
+  backlog);
+* ``wire``    — ``t_deliver - t_wire``: serialisation + flight + (SRD)
+  jitter until the last chunk lands.
+
+A destination is then labelled post-limited / wire-limited /
+enqueue-limited by its dominant segment.  The report also aggregates per
+phase (the ``tracer.phase(...)`` tag active at submit time) and checks
+**coverage**: the union of all WR spans and compute/engine spans must
+explain at least ``--min-coverage`` (default 0.95) of the end-to-end
+virtual time, else exit 1 — untraced gaps mean the instrumentation lost
+track of something.
+
+Usage::
+
+    python tools/trace_report.py benchmarks/out/trace_moe.json
+    python tools/trace_report.py trace.json --min-coverage 0.9 --top 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+
+def load_events(path: str) -> List[dict]:
+    """Read a Chrome trace file (object-with-traceEvents or bare array)."""
+    with open(path) as f:
+        doc = json.load(f)
+    return doc["traceEvents"] if isinstance(doc, dict) else doc
+
+
+def wr_segments(events: List[dict]) -> List[dict]:
+    """Complete WR spans: [{dst, phase, nbytes, enqueue, post, wire}, ...]."""
+    out = []
+    for ev in events:
+        if ev.get("ph") != "b" or ev.get("cat") != "wr":
+            continue
+        a = ev.get("args", {})
+        stamps = (a.get("t_submit"), a.get("t_enqueue"), a.get("t_wire"),
+                  a.get("t_deliver"))
+        if any(s is None for s in stamps):
+            continue        # orphan / never-posted span: excluded, reported
+        t_submit, t_enqueue, t_wire, t_deliver = stamps
+        out.append({
+            "dst": a.get("dst", "?"), "phase": a.get("phase") or "(none)",
+            "nbytes": a.get("nbytes", 0),
+            "t0": t_submit, "t1": t_deliver,
+            "enqueue": max(0.0, t_enqueue - t_submit),
+            "post": max(0.0, t_wire - t_enqueue),
+            "wire": max(0.0, t_deliver - t_wire),
+        })
+    return out
+
+
+def interval_union(ivs: List[Tuple[float, float]]) -> float:
+    """Total length of the union of [t0, t1] intervals."""
+    total = 0.0
+    end = float("-inf")
+    for t0, t1 in sorted(ivs):
+        if t1 <= end:
+            continue
+        total += t1 - max(t0, end)
+        end = t1
+    return total
+
+
+def coverage(events: List[dict], segs: List[dict]) -> Tuple[float, float, float]:
+    """(covered_us, span_us, fraction): how much of [first, last] virtual
+    time is inside at least one WR span or compute/engine span."""
+    ivs = [(s["t0"], s["t1"]) for s in segs]
+    ts = [s["t0"] for s in segs] + [s["t1"] for s in segs]
+    for ev in events:
+        if ev.get("ph") == "X":
+            t0, t1 = ev["ts"], ev["ts"] + ev.get("dur", 0.0)
+            ivs.append((t0, t1))
+            ts += [t0, t1]
+        elif ev.get("ph") in ("i", "C"):
+            ts.append(ev["ts"])
+    if not ivs or not ts:
+        return 0.0, 0.0, 0.0
+    span = max(ts) - min(ts)
+    covered = interval_union(ivs)
+    return covered, span, (covered / span if span > 0 else 1.0)
+
+
+def attribute(segs: List[dict], key: str) -> Dict[str, dict]:
+    """Aggregate segment sums grouped by ``key`` ('dst' or 'phase')."""
+    by: Dict[str, dict] = {}
+    for s in segs:
+        d = by.setdefault(s[key], {"n": 0, "nbytes": 0, "enqueue": 0.0,
+                                   "post": 0.0, "wire": 0.0})
+        d["n"] += 1
+        d["nbytes"] += s["nbytes"]
+        for part in ("enqueue", "post", "wire"):
+            d[part] += s[part]
+    for d in by.values():
+        total = d["enqueue"] + d["post"] + d["wire"]
+        d["total"] = total
+        d["limited_by"] = max(("enqueue", "post", "wire"),
+                              key=lambda p: d[p]) if total else "-"
+    return by
+
+
+def render(by: Dict[str, dict], label: str, top: int) -> None:
+    """Print one attribution table, largest total first."""
+    rows = sorted(by.items(), key=lambda kv: -kv[1]["total"])[:top]
+    if not rows:
+        return
+    w = max(len(label), max(len(k) for k, _ in rows))
+    print(f"\n{label:<{w}}  {'wrs':>6} {'MiB':>8} {'enq%':>6} {'post%':>6} "
+          f"{'wire%':>6} {'total us':>10}  limited by")
+    for k, d in rows:
+        t = d["total"] or 1.0
+        print(f"{k:<{w}}  {d['n']:>6} {d['nbytes'] / (1 << 20):>8.1f} "
+              f"{100 * d['enqueue'] / t:>5.1f}% {100 * d['post'] / t:>5.1f}% "
+              f"{100 * d['wire'] / t:>5.1f}% {d['total']:>10.1f}  "
+              f"{d['limited_by']}-limited")
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace JSON from export_chrome_trace")
+    ap.add_argument("--min-coverage", type=float, default=0.95,
+                    help="fail if less of the timeline is attributed")
+    ap.add_argument("--top", type=int, default=16,
+                    help="rows per table (largest first)")
+    args = ap.parse_args(argv)
+
+    events = load_events(args.trace)
+    segs = wr_segments(events)
+    n_b = sum(1 for ev in events
+              if ev.get("ph") == "b" and ev.get("cat") == "wr")
+    print(f"{args.trace}: {len(events)} events, {n_b} WR spans "
+          f"({n_b - len(segs)} incomplete)")
+
+    render(attribute(segs, "dst"), "destination", args.top)
+    render(attribute(segs, "phase"), "phase", args.top)
+
+    covered, span, frac = coverage(events, segs)
+    print(f"\ncoverage: {covered:.1f} of {span:.1f} virtual us attributed "
+          f"to named spans ({100 * frac:.1f}%, floor "
+          f"{100 * args.min_coverage:.0f}%)")
+    if frac < args.min_coverage:
+        print("FAIL: timeline has untraced gaps", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
