@@ -22,7 +22,8 @@ import numpy as np
 
 from repro.core import Fabric, Pages, UvmWatcher
 
-from .obs_hooks import TRACE, finish_trace, maybe_tracer
+from .obs_hooks import (TRACE, assert_no_flags, attach_health,
+                        finish_trace, maybe_tracer)
 
 OUT_DIR = os.environ.get(
     "BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
@@ -39,6 +40,7 @@ def bench_layer_transfer(n_pages: int, nic: str = "efa", trace_path=None,
     """One layer's paged KV write: ms until all pages delivered."""
     fab = Fabric(seed=0)
     tracer = maybe_tracer(fab) if trace_path else None
+    monitor = attach_health(fab)
     a = fab.add_engine("prefill", nic=nic)
     b = fab.add_engine("decode", nic=nic)
     src = np.zeros(n_pages * PAGE_BYTES, np.uint8)
@@ -51,6 +53,7 @@ def bench_layer_transfer(n_pages: int, nic: str = "efa", trace_path=None,
     a.submit_paged_writes(PAGE_BYTES, 1, (hs, Pages(idx, PAGE_BYTES)),
                           (dd, Pages(idx, PAGE_BYTES)))
     fab.run()
+    assert_no_flags(monitor, f"bench_layer_transfer({n_pages}, {nic})")
     if tracer is not None and metrics_out is not None:
         metrics_out["metrics"] = finish_trace(tracer, OUT_DIR, trace_path)
     return done[0] * 1e-3   # ms
@@ -97,6 +100,7 @@ def bench_schema_transfer(arch: str, seq_len: int = 256,
     plan = TransferPlan(schema, seq_len)
 
     fab = Fabric(seed=0)
+    monitor = attach_health(fab)
     a = fab.add_engine("prefill", nic=nic)
     b = fab.add_engine("decode", nic=nic)
     pool_a = KvPool(a, schema, plan.n_slots)
@@ -112,6 +116,7 @@ def bench_schema_transfer(arch: str, seq_len: int = 256,
         plan.submit_span(a, pool_a.handle, src, pool_b.desc, dst, 100,
                          l, l + 1)
     fab.run()
+    assert_no_flags(monitor, f"bench_schema_transfer({arch})")
     return {
         "us": max(done), "writes": plan.total_writes,
         "bytes": schema.total_bytes(seq_len),

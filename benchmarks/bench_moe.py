@@ -28,7 +28,8 @@ import numpy as np
 from repro.core import Fabric, ScatterDst
 from repro.moekit import MoEConfig, make_endpoints
 
-from .obs_hooks import TRACE, finish_trace, maybe_tracer
+from .obs_hooks import (TRACE, assert_no_flags, attach_health,
+                        finish_trace, maybe_tracer)
 
 TOKEN_BYTES = 7168 + 56 * 4       # fp8 payload + fp32 scales
 TOP_K = 8
@@ -66,6 +67,7 @@ def bench_dispatch_combine(ep: int, batch: int, nic: str,
                     max_tokens=batch, token_bytes=TOKEN_BYTES, t_priv=t_priv)
     fab = Fabric(seed=1)
     tracer = maybe_tracer(fab) if trace_path else None
+    monitor = attach_health(fab)
     eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=8,
                          nvlink=nvlink, nics=nics)
     disp, comb = [], []
@@ -96,6 +98,7 @@ def bench_dispatch_combine(ep: int, batch: int, nic: str,
         disp.append(np.median([e.stats["dispatch_us"] for e in eps]))
         comb.append(np.median([e.stats["combine_us"] for e in eps]))
         disp_wr_peer = max(disp_wr_peer, disp_wrs["max"])
+    assert_no_flags(monitor, f"bench_dispatch_combine(ep={ep}, {nic})")
     out = {"dispatch_us": float(np.median(disp)),
            "combine_us": float(np.median(comb)),
            "dispatch_wr_per_peer": float(disp_wr_peer),
@@ -112,6 +115,7 @@ def bench_deepep_style(ep: int, batch: int, nic: str = "cx7") -> Dict[str, float
     cfg = MoEConfig(n_ranks=ep, n_experts=max(E_TOTAL, ep), top_k=TOP_K,
                     max_tokens=batch, token_bytes=TOKEN_BYTES)
     fab = Fabric(seed=2)
+    monitor = attach_health(fab)
     eps = make_endpoints(fab, cfg, nic=nic, gpus_per_node=8)
     tokens, eids = _inputs(cfg)
     done = []
@@ -140,6 +144,7 @@ def bench_deepep_style(ep: int, batch: int, nic: str = "cx7") -> Dict[str, float
         eps[r].engine.expect_imm_count(0x99, incoming,
                                        lambda: done.append(fab.now))
     t = fab.run()
+    assert_no_flags(monitor, f"bench_deepep_style(ep={ep}, {nic})")
     return {"dispatch_us": (np.median(done) - t0) if done else t}
 
 

@@ -15,7 +15,8 @@ import numpy as np
 
 from repro.core import Fabric, Pages
 
-from .obs_hooks import TRACE, finish_trace, maybe_tracer
+from .obs_hooks import (TRACE, assert_no_flags, attach_health,
+                        finish_trace, maybe_tracer)
 
 OUT_DIR = os.environ.get(
     "BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
@@ -32,6 +33,7 @@ PAPER_PAGED = {"efa": {1024: (17, 2.11e6), 8192: (138, 2.10e6),
 def bench_single(nic: str, size: int, iters: int = 8) -> float:
     """Serial single-write throughput (Gbps)."""
     fab = Fabric(seed=0)
+    monitor = attach_health(fab)
     a = fab.add_engine("a", nic=nic)
     b = fab.add_engine("b", nic=nic)
     src = np.zeros(size, np.uint8)
@@ -48,6 +50,7 @@ def bench_single(nic: str, size: int, iters: int = 8) -> float:
 
     issue()
     t = fab.run() - t0
+    assert_no_flags(monitor, f"bench_single({nic}, {size})")
     return size * iters * 8e-3 / t          # Gbps (us domain)
 
 
@@ -56,6 +59,7 @@ def bench_paged(nic: str, page: int, n_pages: int = 4096, trace_path=None,
     """Pipelined paged-write throughput (Gbps, op/s)."""
     fab = Fabric(seed=0)
     tracer = maybe_tracer(fab) if trace_path else None
+    monitor = attach_health(fab)
     a = fab.add_engine("a", nic=nic)
     b = fab.add_engine("b", nic=nic)
     src = np.zeros(max(n_pages * page, 1), np.uint8)
@@ -66,6 +70,7 @@ def bench_paged(nic: str, page: int, n_pages: int = 4096, trace_path=None,
     t0 = fab.now
     a.submit_paged_writes(page, 1, (hs, Pages(idx, page)), (dd, Pages(idx, page)))
     t = fab.run() - t0
+    assert_no_flags(monitor, f"bench_paged({nic}, {page})")
     if tracer is not None and metrics_out is not None:
         metrics_out["metrics"] = finish_trace(tracer, OUT_DIR, trace_path)
     return n_pages * page * 8e-3 / t, n_pages / (t * 1e-6)

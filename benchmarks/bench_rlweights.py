@@ -26,11 +26,14 @@ import numpy as np
 
 from repro.core import Fabric
 from repro.rlweights.planner import ParamMeta, compute_routing, schedule_stats
-from repro.rlweights.transfer import (arm_commit_gates, commit_imm, data_imm,
-                                      plan_chunks, resolve_chunk_bytes,
+from repro.rlweights.transfer import (MIN_CHUNK_BYTES, CommitGate,
+                                      OnlineChunkTuner, arm_commit_gates,
+                                      commit_imm, data_imm, plan_chunks,
+                                      resolve_chunk_bytes,
                                       run_pipelined_update)
 
-from .obs_hooks import TRACE, finish_trace, maybe_tracer
+from .obs_hooks import (TRACE, assert_no_flags, attach_health, finish_trace,
+                        maybe_tracer)
 
 # pipeline stage rates calibrated to Table 5 (Kimi-K2, 256 ranks)
 H2D_GBPS = 43.0        # 8 GB/rank in 184 ms
@@ -47,9 +50,14 @@ else:
     N_TRAIN, N_INFER, N_PARAMS = 256, 128, 61
     TOTAL_PARAMS = 1.04e12      # Kimi-K2
 
-WATERMARK = 2 << 30    # staging memory bound per training rank
+# staging memory bound per training rank; the smoke cluster stages ~1 GiB
+# per rank, so smoke shrinks the bound too — with headroom for every chunk
+# the staging queue would stay empty and the online-calibration rows (which
+# merge the *queued* tail) would have nothing to act on
+WATERMARK = (2 << 30) if not SMOKE else (256 << 20)
 CHUNK = 32 << 20       # legacy static chunk knob (kept as the compare row)
 DIRTY_EVERY = 4        # delta mode: every 4th layer dirty (async fine-tune)
+DEGRADE_BW = 0.25      # congested rows: train->infer bandwidth scale
 
 OUT_DIR = os.environ.get(
     "BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
@@ -82,20 +90,29 @@ def synthetic_cluster(n_train: int, n_infer: int, nic: str = "efa",
 
 
 def p2p_synthetic(nic: str = "efa", changed: Optional[List[str]] = None,
-                  chunk_bytes: Optional[int] = None,
+                  chunk_bytes=None,
                   infer_nic: Optional[str] = None,
-                  trace_path: Optional[str] = None) -> Dict[str, float]:
+                  trace_path: Optional[str] = None,
+                  degrade_bw: Optional[float] = None) -> Dict[str, float]:
     """The staged §5.2 pipeline over synthetic writes: chunked staging under
     the watermark, one WrBatch per pipeline window, two-phase commit.  Each
     FSDP source range is H2D'd + prepared ONCE and WRITTEN to every TP
     replica (16x wire amplification — exactly why the paper needs
     full-cluster bisection).  ``chunk_bytes`` defaults to the per-pair
-    autotuned sweet spot (post/enqueue cost model, ROADMAP item).
+    autotuned sweet spot (post/enqueue cost model, ROADMAP item); pass
+    ``"online"`` to start at that value and let the
+    :class:`OnlineChunkTuner` re-derive it mid-update from the always-on
+    HealthMonitor's measured post/wire costs (online rows defer gate
+    arming to commit time, since merges change the data-WRITE counts).
     ``infer_nic`` puts the inference cluster on a different NIC kind — the
     Holmes cross-zone shape; writes then ride the derived cross-fabric
-    pair spec and the autotune uses its cost model."""
+    pair spec and the autotune uses its cost model.  ``degrade_bw``
+    injects congestion: every train->infer channel's bandwidth is scaled
+    by it before the update starts (the scenario the online tuner is
+    for)."""
     routes, _sizes = _routes(changed)
-    if chunk_bytes is None:
+    online = chunk_bytes == "online"
+    if chunk_bytes is None or online:
         chunk_bytes = resolve_chunk_bytes(
             "auto", routes, nic, watermark_bytes=WATERMARK,
             stage_scale=STAGE_SCALE, dst_nic=infer_nic)
@@ -103,11 +120,22 @@ def p2p_synthetic(nic: str = "efa", changed: Optional[List[str]] = None,
                                            infer_nic=infer_nic)
     # attach before launch: RankPipeline captures fabric.tracer at build time
     tracer = maybe_tracer(fab) if trace_path else None
+    monitor = attach_health(fab)
+    if degrade_bw is not None:
+        for i in range(N_TRAIN):
+            for j in range(N_INFER):
+                fab.degrade_pair(f"t{i}", f"i{j}", bw_scale=degrade_bw)
     chunks_by_rank = plan_chunks(routes, chunk_bytes=chunk_bytes,
                                  watermark_bytes=WATERMARK,
                                  stage_scale=STAGE_SCALE)
 
-    gates = arm_commit_gates(ie, chunks_by_rank, 0)
+    if online:
+        # deferred arming: the tuner may merge queued chunks mid-update, so
+        # per-gate data-WRITE counts are only final at commit time
+        gates = [CommitGate(eng) for eng in ie]
+        n_data_live = [0] * len(ie)
+    else:
+        gates = arm_commit_gates(ie, chunks_by_rank, 0)
 
     def make_submit(rank, pipe):
         eng = te[rank]
@@ -123,22 +151,49 @@ def p2p_synthetic(nic: str = "efa", changed: Optional[List[str]] = None,
                         pipe.chunk_done_cb(c)
 
                 for ir, _doff in c.targets:
+                    if online:
+                        n_data_live[ir] += 1
                     entries.append((c.nbytes, data_imm(0), descs[ir], done))
             eng.submit_synthetic_batch(entries)
 
         return submit
 
+    def commit_fn():
+        if online:
+            for ir, g in enumerate(gates):
+                g.arm(0, n_data_live[ir])
+        te[0].submit_barrier(descs, commit_imm(0))
+
+    tuners: Dict[int, OnlineChunkTuner] = {}
+    tuner_factory = None
+    if online:
+        cap = max(MIN_CHUNK_BYTES, int(WATERMARK / STAGE_SCALE / 2))
+
+        def tuner_factory(rank, pipe):
+            t = OnlineChunkTuner(fab, te[rank].address(0), chunk_bytes,
+                                 cap=cap)
+            tuners[rank] = t
+            return t
+
     stats = run_pipelined_update(
-        fab, chunks_by_rank, make_submit=make_submit,
-        commit_fn=lambda: te[0].submit_barrier(descs, commit_imm(0)),
+        fab, chunks_by_rank, make_submit=make_submit, commit_fn=commit_fn,
         watermark_bytes=WATERMARK, window_us=2.0, h2d=True,
-        h2d_gbps=H2D_GBPS, prep_gbps=PREP_GBPS)
+        h2d_gbps=H2D_GBPS, prep_gbps=PREP_GBPS, tuner_factory=tuner_factory)
     out = {k: v for k, v in stats.items()}
     out["total_ms"] = stats["total_us"] * 1e-3
     out["h2d_ms"] = stats["h2d_us"] * 1e-3
     out["prep_ms"] = stats["prep_us"] * 1e-3
     out["chunk_bytes"] = chunk_bytes
+    if online:
+        out["chunk_bytes_final"] = max(
+            (t.target for t in tuners.values()), default=chunk_bytes)
     out["committed"] = all(len(g.flips) == 1 for g in gates)
+    for g in gates:
+        g.audit_commits(0)
+    out["commit_anomalies"] = sum(len(g.anomalies) for g in gates)
+    out["health_flags"] = len(monitor.flags)
+    if degrade_bw is None:
+        assert_no_flags(monitor, f"p2p_synthetic({nic})")
     out.update(schedule_stats(routes, N_TRAIN, N_INFER,
                               full_routes=_routes()[0] if changed else None))
     if tracer is not None:
@@ -180,9 +235,9 @@ def rank0_synthetic(nic: str = "efa") -> Dict[str, float]:
     path (protocol parity for the Table-5 comparison): broadcast WRITEs
     carry the data immediate, one commit barrier follows, and every
     inference rank's CommitGate must flip exactly once."""
-    from repro.rlweights.transfer import CommitGate
     routes, _ = _routes()
     fab, te, ie, descs = synthetic_cluster(N_TRAIN, N_INFER, nic)
+    monitor = attach_health(fab)
     buf = np.zeros(1, np.uint8)
     _, d0 = te[0].reg_mr(buf)
     shard = int(TOTAL_PARAMS * 2 / N_TRAIN)
@@ -208,6 +263,7 @@ def rank0_synthetic(nic: str = "efa") -> Dict[str, float]:
         te[0].submit_synthetic_write(out_bytes // (2 * INFER_TP),
                                      data_imm(0), descs[r], on_done=sent)
     t = fab.run()
+    assert_no_flags(monitor, f"rank0_synthetic({nic})")
     return {"gather_ms": t_gather * 1e-3, "total_ms": t * 1e-3,
             "committed": all(len(g.flips) == 1 for g in gates)}
 
@@ -253,6 +309,45 @@ def _run_inner(report) -> None:
                f"{CHUNK / (1 << 20):.0f}MiB static ({static['total_ms']:.0f}ms); "
                f"sweet spots differ per NIC (EFA per-WR cost ~7x CX7)")
 
+        if nic == "efa":
+            # closed-loop calibration rows (ISSUE 8): online must track the
+            # static autotune on a clean fabric (hysteresis holds, schedule
+            # stays ~byte-identical) and beat it once every train->infer
+            # channel is degraded to 25% bandwidth — the measured per-WR
+            # post cost then explodes past the spec and the tuner merges
+            # the queued tail into bigger chunks mid-update.
+            online = p2p_synthetic(nic, chunk_bytes="online")
+            online["matches_auto"] = (
+                abs(online["total_ms"] - p2p["total_ms"])
+                <= 0.02 * p2p["total_ms"])
+            summary["p2p_online_efa"] = online
+            report("rl_online_clean", online["total_ms"] * 1e3,
+                   f"us = {online['total_ms']:.0f}ms online-calibrated vs "
+                   f"{p2p['total_ms']:.0f}ms static auto (clean fabric, "
+                   f"{online['n_retunes']} retunes / "
+                   f"{online['n_merges']} merges, "
+                   f"matches_auto={online['matches_auto']})")
+
+            cong_auto = p2p_synthetic(nic, degrade_bw=DEGRADE_BW)
+            summary["p2p_auto_congested_efa"] = cong_auto
+            cong_online = p2p_synthetic(nic, chunk_bytes="online",
+                                        degrade_bw=DEGRADE_BW)
+            cong_online["beats_auto_congested"] = (
+                cong_online["total_ms"] < cong_auto["total_ms"])
+            summary["p2p_online_congested_efa"] = cong_online
+            report("rl_online_congested", cong_online["total_ms"] * 1e3,
+                   f"us = {cong_online['total_ms']:.0f}ms online vs "
+                   f"{cong_auto['total_ms']:.0f}ms static auto at "
+                   f"{DEGRADE_BW:.2f}x bandwidth; "
+                   f"{cong_online['n_retunes']} retunes merged "
+                   f"{cong_online['n_merges']} chunks "
+                   f"({cong_online['writes']} vs {cong_auto['writes']} "
+                   f"writes, final chunk "
+                   f"{cong_online['chunk_bytes_final'] / (1 << 20):.0f}MiB "
+                   f"from {cong_online['chunk_bytes'] / (1 << 20):.0f}MiB), "
+                   f"beats_auto={cong_online['beats_auto_congested']}, "
+                   f"{cong_online['health_flags']} channels flagged")
+
         delta = p2p_synthetic(nic, changed=dirty)
         summary[f"p2p_delta{suffix or '_efa'}"] = delta
         report(f"rl_p2p_delta{suffix}", delta["total_ms"] * 1e3,
@@ -297,7 +392,8 @@ def _run_inner(report) -> None:
                    "watermark_bytes": WATERMARK,
                    "static_chunk_bytes": CHUNK,
                    "chunk_bytes": "auto (per-NIC cost model)",
-                   "dirty_every": DIRTY_EVERY},
+                   "dirty_every": DIRTY_EVERY,
+                   "degrade_bw_congested": DEGRADE_BW},
         "paper_ms": {"p2p": 1233, "rank0_low": 10_000, "rank0_high": 100_000},
         "rows": {k: {kk: vv for kk, vv in v.items()
                      if isinstance(vv, (int, float, bool))}

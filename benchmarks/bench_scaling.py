@@ -28,7 +28,7 @@ import os
 
 import numpy as np
 
-from .obs_hooks import finish_trace, maybe_tracer
+from .obs_hooks import assert_no_flags, attach_health, finish_trace, maybe_tracer
 
 SMOKE = os.environ.get("BENCH_SCALING_SMOKE", "") not in ("", "0")
 
@@ -37,6 +37,10 @@ OUT_DIR = os.environ.get(
 
 GAP_US = 60.0            # arrival spacing (service time is ~100 us/req)
 LAYER_US = 50.0
+# TTFT SLO for the tracker: between the scaled p95 (~164 us) and the
+# overloaded p95 (~332 us), so the overload/failover phases breach and the
+# scaled phase recovers — the closed loop the SloTracker rows demonstrate
+TTFT_SLO_US = 250.0
 
 
 def run_timeline(n_a: int, n_b: int, n_d: int, *, prompt_len: int = 24,
@@ -47,13 +51,14 @@ def run_timeline(n_a: int, n_b: int, n_d: int, *, prompt_len: int = 24,
     from repro.core import Fabric
     from repro.ctrl import Autoscaler, ControlPlane, ScalingPolicy
     from repro.models import init_params
-    from repro.serving import Decoder, Prefiller, Scheduler
+    from repro.serving import Decoder, Prefiller, Scheduler, SloTracker
 
     cfg = get_config("stablelm-3b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     fab = Fabric(seed=seed)
     # traces the whole elastic timeline (ctrl instants + autoscale decisions)
     tracer = maybe_tracer(fab)
+    monitor = attach_health(fab)
     ctrl = ControlPlane(fab, nic=nic, lease_us=600.0, sweep_us=200.0,
                         max_sweeps=150)
     prefillers = []
@@ -66,7 +71,8 @@ def run_timeline(n_a: int, n_b: int, n_d: int, *, prompt_len: int = 24,
     spawn(0)
     decoders = [Decoder(fab, f"d{i}", cfg, params, nic=nic, ctrl=ctrl,
                         renew_us=200.0, max_renewals=150) for i in range(2)]
-    sched = Scheduler(fab, ctrl)
+    slo = SloTracker(fab, ttft_slo_us=TTFT_SLO_US)
+    sched = Scheduler(fab, ctrl, slo=slo)
     scaler = Autoscaler(
         ctrl, sched, spawn,
         policy=ScalingPolicy(queue_high=3, idle_ticks_down=3,
@@ -136,9 +142,13 @@ def run_timeline(n_a: int, n_b: int, n_d: int, *, prompt_len: int = 24,
         done = max(sched.completed[r]["done_us"] for r in rids)
         return len(rids) / max(done - t0, 1e-9) * 1e3   # req per virtual ms
 
+    # ctrl-plane traffic on a clean fabric must never trip the deviation
+    # detector (the always-on monitor rides along the whole elastic timeline)
+    assert_no_flags(monitor, "bench_scaling")
+
     return {
         "phases": phases, "sched": sched, "scaler": scaler, "ctrl": ctrl,
-        "ttft": ttft, "tput": tput, "t_b": t_b, "t_d": t_d,
+        "slo": slo, "ttft": ttft, "tput": tput, "t_b": t_b, "t_d": t_d,
         "n_prefillers": len(prefillers),
         "metrics": finish_trace(tracer, OUT_DIR, "trace_scaling.json"),
     }
@@ -179,6 +189,23 @@ def run(report) -> None:
          n_prefillers=r["n_prefillers"])
     emit("scale_drain_leaked_pages", 0.0,
          "KV pages leaked through drained scale-down (asserted)")
+    # SLO tracker rows: sliding-window percentiles as the autoscaler saw
+    # them, plus how often the configured p95 SLO was crossed (overload
+    # and failover phases breach; the scaled phase recovers)
+    slo = r["slo"]
+    s = slo.summary()
+    emit("scale_slo_ttft_p95", s["ttft_p95_us"],
+         f"us sliding-window p95 over the last {slo.window} TTFTs "
+         f"(p50 {s['ttft_p50_us']:.0f}, p99 {s['ttft_p99_us']:.0f}, "
+         f"{s['breaches']} breach(es) of the {TTFT_SLO_US:.0f}us SLO)",
+         p50=s["ttft_p50_us"], p99=s["ttft_p99_us"],
+         breaches=s["breaches"], slo_us=TTFT_SLO_US)
+    emit("scale_slo_queue_p95", s["queue_p95"],
+         f"queue-depth sliding-window p95 (p99 {s['queue_p99']:.0f}) — "
+         f"the percentile signal the autoscaler scales on",
+         p99=s["queue_p99"])
+    assert s["breaches"] >= 1, \
+        "overload/failover phases never breached the TTFT SLO"
     # scale-up must beat the overloaded tail; failover must still complete
     assert np.percentile(b, 95) < np.percentile(a, 95), \
         "scale-up did not improve tail TTFT"
@@ -188,7 +215,8 @@ def run(report) -> None:
         "bench": "scaling",
         "smoke": SMOKE,
         "config": {"n_a": n_a, "n_b": n_b, "n_d": n_d,
-                   "gap_us": GAP_US, "layer_us": LAYER_US},
+                   "gap_us": GAP_US, "layer_us": LAYER_US,
+                   "ttft_slo_us": TTFT_SLO_US},
         "rows": rows,
     }
     if r["metrics"] is not None:

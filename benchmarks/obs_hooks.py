@@ -9,6 +9,13 @@ asserted by ``tests/test_obs.py``.
 On ``finish_trace`` the bench gets back the flat metrics dict (merged into
 its ``BENCH_*.json`` under ``"metrics"``) and a Perfetto-loadable Chrome
 trace lands in the bench output dir.
+
+``attach_health`` wires the **always-on** monitoring pair (HealthMonitor +
+FlightRecorder) into a bench fabric — the same invariant applies (timing
+bit-identical, pinned by ``tests/test_health.py``), so the golden rows do
+not move.  Clean rows then assert ``assert_no_flags``: the deviation
+detector's clean-fabric false-positive rate is zero by construction, and
+the bench-smoke CI job proves it on every run.
 """
 
 from __future__ import annotations
@@ -25,6 +32,30 @@ def maybe_tracer(fab):
         return None
     from repro.obs import Tracer
     return Tracer(fab)
+
+
+def attach_health(fab):
+    """Attach the always-on HealthMonitor + FlightRecorder to ``fab``.
+
+    Returns the monitor.  Dumps (only written on failure paths) land in
+    ``$FLIGHT_DUMP_DIR`` or ``./flight-dumps`` — CI uploads that dir as an
+    artifact when a bench job fails.
+    """
+    from repro.obs import FlightRecorder, HealthMonitor
+    mon = HealthMonitor(fab)
+    FlightRecorder(fab)
+    return mon
+
+
+def assert_no_flags(monitor, name: str) -> None:
+    """Zero-health-flags gate for clean (un-degraded) bench rows."""
+    if monitor is None or not monitor.flags:
+        return
+    lines = "; ".join(f"{f['src']}>{f['dst']} ratio={f['ratio']:.2f}"
+                      for f in monitor.flags)
+    raise AssertionError(
+        f"{name}: health monitor flagged {len(monitor.flags)} channel(s) "
+        f"on a clean fabric — {lines}")
 
 
 def finish_trace(tracer, out_dir: str, name: str) -> Optional[dict]:

@@ -265,8 +265,9 @@ class DomainGroup:
         self._post_busy_until = 0.0
         self.regions: Dict[int, MemoryRegion] = {}
         self.posted_writes = 0
-        # observability hook (repro.obs); None => zero-cost guarded check
+        # observability hooks (repro.obs); None => zero-cost guarded check
         self.tracer = None
+        self.health = None
 
     # -- memory ---------------------------------------------------------
     def register(self, buf: np.ndarray, device: int) -> Tuple[MrHandle, MrDesc]:
@@ -310,6 +311,8 @@ class DomainGroup:
         ch = d.channel_to(dst_group.addr, d.index)
         if self.tracer is not None:
             self.tracer._on_post(op, ch, self, extra_post_us)
+        if self.health is not None:
+            self.health._on_post(op, ch, self, extra_post_us)
         self.loop.schedule(delay, lambda: ch.post(op))
 
     def split_across_nics(self, nbytes: int) -> List[Tuple[int, int, int]]:

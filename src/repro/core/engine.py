@@ -32,7 +32,7 @@ from .domain import (DomainGroup, MemoryRegion, MrDesc, MrHandle, NetAddr,
                      Pages, PayloadDst, ScatterDst, WrBatch)
 from .imm_counter import ImmCounter
 from .netsim import (ENQUEUE_US, EventLoop, NicSpec, CX7, EFA_100, EFA_200,
-                     stable_hash)
+                     degrade, stable_hash)
 from .topology import ChannelPlan, TopoEntry, Topology, cross_spec
 from .transport import WireOp
 from .uvm import UvmWatcher
@@ -168,10 +168,13 @@ class WriteState:
 
     def on_delivered(self, op, now: float) -> None:
         """Receiver-side stripe landing; fires the immediate on the last."""
+        fab = self.fabric
+        if fab is not None and fab.health is not None and op.span is not None:
+            fab.health.on_deliver(op.span)
         self.delivered += 1
         if self.delivered == self.n_parts:
-            if self.fabric is not None:
-                self.fabric.inflight_writes -= 1
+            if fab is not None:
+                fab.inflight_writes -= 1
             if self.imm is not None:
                 self.counter.increment(self.imm, now)
 
@@ -283,6 +286,8 @@ class TransferEngine:
 
         def on_delivered(op: WireOp, now: float) -> None:
             fab.inflight_sends -= 1
+            if fab.health is not None and op.span is not None:
+                fab.health.on_deliver(op.span)
             dst_engine._deliver_send(addr.dev, payload)
 
         op = WireOp(kind="send", payload=None, dst_region=None, dst_offset=0,
@@ -290,8 +295,13 @@ class TransferEngine:
                     on_sent=(lambda now: _fire(cb)) if cb is not None else None,
                     nbytes=len(payload))
         tr = fab.tracer
+        mon = fab.health
         if tr is not None:
-            op.span = tr.begin_wr("send", addr, len(payload), None)
+            op.span = tr.begin_wr("send", addr, len(payload), None,
+                                  src=str(src.addr))
+        elif mon is not None:
+            op.span = mon.begin_wr("send", addr, len(payload), None,
+                                   src=str(src.addr))
         pending = self._send_batches.get(device)
         if pending is not None and pending[1] == self.loop.now:
             # SEND/RECV uses only the first NIC in the group.
@@ -347,6 +357,9 @@ class TransferEngine:
                            dst_engine.counters[dst.owner.dev], batch_state,
                            fab)
         tr = fab.tracer
+        mon = fab.health
+        obs_src = (str(src_group.addr)
+                   if tr is not None or mon is not None else "")
         for nic_index, off, ln in parts:
             chunk = payload[off:off + ln] if payload is not None else None
             op = WireOp(kind="write", payload=chunk, dst_region=dst_region,
@@ -354,7 +367,10 @@ class TransferEngine:
                         on_delivered=state.on_delivered, on_sent=state.on_sent,
                         nbytes=ln)
             if tr is not None:
-                op.span = tr.begin_wr("write", dst.owner, ln, imm)
+                op.span = tr.begin_wr("write", dst.owner, ln, imm, src=obs_src)
+            elif mon is not None:
+                op.span = mon.begin_wr("write", dst.owner, ln, imm,
+                                       src=obs_src)
             idx = nic_index if stripe else (nic_rr if nic_rr is not None else None)
             batch.add(op, dst_group, nic_index=idx, extra_post_us=extra_post_us)
 
@@ -366,6 +382,9 @@ class TransferEngine:
             tr.n_batches += 1
             tr.n_wrs += len(batch)
             tr.n_bytes += batch.nbytes
+        mon = self.fabric.health
+        if mon is not None:
+            mon.on_enqueue(str(batch.group.addr), len(batch), batch.nbytes)
         self.loop.schedule(ENQUEUE_US, batch.post)
 
     def submit_single_write(self, length: int, imm: Optional[int],
@@ -590,8 +609,12 @@ class Fabric:
         self._peer_groups: List[List[NetAddr]] = []
         self.nic_kinds: set = set()
         # observability (repro.obs): None => every hook is a single guarded
-        # attribute check; attach via Tracer(fabric) / attach_tracer
+        # attribute check; attach via Tracer(fabric) / attach_tracer,
+        # HealthMonitor(fabric) / attach_health, FlightRecorder(fabric) /
+        # attach_recorder
         self.tracer = None
+        self.health = None
+        self.recorder = None
         # always-on leak accounting (plain int bumps, no timing impact)
         self.inflight_writes = 0
         self.inflight_sends = 0
@@ -612,17 +635,45 @@ class Fabric:
         return TransferEngine(self, node, nic, num_devices,
                               host=host, nvlink=nvlink)
 
+    @staticmethod
+    def _addr(a) -> NetAddr:
+        """Coerce a NetAddr, a bare node name, or a ``str(NetAddr)``
+        rendering (``node/gpuN`` — what observability spans carry)."""
+        if not isinstance(a, str):
+            return a
+        node, sep, dev = a.rpartition("/gpu")
+        if sep and dev.isdigit():
+            return NetAddr(node, int(dev))
+        return NetAddr(a, 0)
+
     def pair_spec(self, src, dst) -> NicSpec:
         """The per-pair transport spec the ``(src, dst)`` pair rides —
         the NVLink preset, a NIC preset, or a derived cross-fabric spec.
 
-        Accepts ``NetAddr``s or bare node-name strings (device 0)."""
-        if isinstance(src, str):
-            src = NetAddr(src, 0)
-        if isinstance(dst, str):
-            dst = NetAddr(dst, 0)
+        Accepts ``NetAddr``s, bare node-name strings (device 0), or
+        ``node/gpuN`` strings (the span address rendering)."""
+        src = self._addr(src)
+        dst = self._addr(dst)
         src_group = self.group(src)
         return src_group.domains[0].plan_for(dst).spec
+
+    def degrade_pair(self, src, dst, *, bw_scale: float = 1.0,
+                     extra_jitter_us: float = 0.0) -> int:
+        """Fault injection: degrade every channel carrying (src, dst)
+        traffic (see :func:`repro.core.netsim.degrade`).  Channels are
+        created on demand — their CRC-derived seeds are order-independent,
+        so pre-creating them here never perturbs a clean run's RNG streams.
+        Returns the number of channels degraded."""
+        src_addr = self._addr(src)
+        dst_addr = self._addr(dst)
+        src_group = self.group(src_addr)
+        n = 0
+        for d in src_group.domains:
+            # post_write always selects channel_to(dst, d.index)
+            degrade(d.channel_to(dst_addr, d.index),
+                    bw_scale=bw_scale, extra_jitter_us=extra_jitter_us)
+            n += 1
+        return n
 
     def _register_group(self, addr: NetAddr, group: DomainGroup, engine: TransferEngine) -> None:
         if addr in self._groups:
@@ -633,6 +684,8 @@ class Fabric:
             spec=engine.nic_spec, nvlink=engine.nvlink))
         if self.tracer is not None:
             self._wire_tracer(addr, group, engine)
+        if self.health is not None:
+            group.health = self.health
 
     # -- observability (repro.obs) ----------------------------------------------
     def _wire_tracer(self, addr: NetAddr, group: DomainGroup,
@@ -654,6 +707,21 @@ class Fabric:
             if counter is not None:
                 counter.tracer = tracer
                 counter.label = str(addr)
+
+    def attach_health(self, monitor) -> None:
+        """Attach a :class:`repro.obs.HealthMonitor` (or None to detach):
+        wires every existing and future DomainGroup's posting hook.  Like
+        the tracer, the monitor never perturbs simulated time — an
+        always-on-monitored run is bit-identical to an unmonitored one."""
+        self.health = monitor
+        for group, _engine in self._groups.values():
+            group.health = monitor
+
+    def attach_recorder(self, recorder) -> None:
+        """Attach a :class:`repro.obs.FlightRecorder` (or None to detach).
+        The recorder is fed by the health monitor's delivery stream and by
+        ctrl-plane instants; it dumps its ring on failure paths only."""
+        self.recorder = recorder
 
     def register_auditable(self, name: str, obj) -> None:
         """Register an object exposing ``audit_leaks() -> dict`` (empty =

@@ -150,6 +150,9 @@ class NicQueue:
         self.busy_until = 0.0
         self.bytes_sent = 0
         self.ops_sent = 0
+        # fault injection: <1.0 slows every op on this NIC (whole-NIC
+        # degradation); per-channel degradation rides the submit() svc_scale
+        self.bw_scale = 1.0
 
     def backlog_us(self, now: float) -> float:
         """Queued-but-unserialised service time at ``now`` (µs) — the
@@ -157,17 +160,23 @@ class NicQueue:
         return max(0.0, self.busy_until - now)
 
     def submit(self, nbytes: int, on_wire: Callable[[float], None],
-               charge_fixed: bool = True) -> float:
+               charge_fixed: bool = True, svc_scale: float = 1.0) -> float:
         """Queue ``nbytes`` for transmission.
 
         ``on_wire(t_delivered)`` is invoked (scheduled) for the time the last
         byte arrives at the remote NIC.  Returns the local send-completion
         time (used for sender-side CQEs).  ``charge_fixed=False`` skips the
         per-op fixed cost (continuation chunks of one WRITE: the NIC charges
-        per work request, not per wire packet).
+        per work request, not per wire packet).  ``svc_scale`` multiplies the
+        per-byte serialisation cost (fault injection: a degraded channel
+        passes >1.0); the per-op fixed cost is never scaled.
         """
         start = max(self.loop.now, self.busy_until)
         svc = nbytes * 8e-3 / (self.spec.bw_gbps * self.spec.eff)
+        scale = svc_scale / self.bw_scale
+        if scale != 1.0:
+            # guarded so the clean path computes the bit-identical float
+            svc *= scale
         if charge_fixed:
             svc += self.spec.fixed_us
         done_tx = start + svc
@@ -177,3 +186,24 @@ class NicQueue:
         arrive = done_tx + self.spec.base_latency_us
         on_wire(arrive)
         return done_tx
+
+
+def degrade(channel, bw_scale: float = 1.0, extra_jitter_us: float = 0.0) -> None:
+    """Fault injection: degrade one transport channel in place.
+
+    ``bw_scale`` < 1.0 scales the channel's effective bandwidth down (its
+    per-byte serialisation cost is multiplied by ``1/bw_scale``; the per-op
+    fixed cost and other channels sharing the same NIC queue are untouched,
+    so injected faults stay attributable to one (src, dst) pair).
+    ``extra_jitter_us`` adds deterministic pseudo-random delivery jitter on
+    top of the transport's own (RC channels, normally jitter-free, start
+    drawing from their seeded RNG only once this is non-zero — a clean
+    fabric's RNG stream is bit-identical to one that never imported this).
+
+    Duck-typed on :class:`repro.core.transport.Channel` to avoid an import
+    cycle; ``Fabric.degrade_pair`` applies it to every channel of a pair.
+    """
+    if bw_scale <= 0.0:
+        raise ValueError(f"bw_scale must be > 0, got {bw_scale}")
+    channel.svc_scale = 1.0 / bw_scale
+    channel.extra_jitter_us = float(extra_jitter_us)

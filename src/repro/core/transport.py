@@ -66,6 +66,11 @@ class Channel:
         self.rng = np.random.default_rng(seed)
         self._last_delivery = 0.0  # for RC in-order enforcement
         self.label = label         # queue/track name for trace export
+        # fault injection (repro.core.netsim.degrade): per-channel service
+        # scaling and added delivery jitter; defaults are bit-identical to
+        # the un-injectable channel
+        self.svc_scale = 1.0
+        self.extra_jitter_us = 0.0
 
     MAX_CHUNKS = 64  # coarse chunking: bounds event count for GB-scale writes
 
@@ -103,12 +108,13 @@ class Channel:
                 # identical RNG stream for every sub-571KB EFA write).
                 lo_ = idx * per
                 npkt = max(1, (min(nbytes, lo_ + per) - lo_ + mtu - 1) // mtu)
+                jit = self.spec.srd_jitter_us + self.extra_jitter_us
                 if npkt == 1:
-                    arrive = arrive + float(self.rng.uniform(0.0, self.spec.srd_jitter_us))
+                    arrive = arrive + float(self.rng.uniform(0.0, jit))
                 else:
                     # max of npkt iid U(0, j) via inverse CDF — one draw,
                     # same distribution, O(1) for millions of packets
-                    arrive = arrive + self.spec.srd_jitter_us * float(
+                    arrive = arrive + jit * float(
                         self.rng.random()) ** (1.0 / npkt)
 
             def land() -> None:
@@ -135,7 +141,8 @@ class Channel:
             # Per-op fixed cost is charged once (first chunk only).
             tx_done = self.nic.submit(max(sz, 1),
                                       lambda arrive, i=i: deliver_chunk(i, arrive),
-                                      charge_fixed=(i == 0))
+                                      charge_fixed=(i == 0),
+                                      svc_scale=self.svc_scale)
             last_tx = max(last_tx, tx_done)
 
         if op.on_sent is not None:
@@ -156,6 +163,9 @@ class Channel:
         nbytes = op.nbytes
 
         def deliver(arrive: float) -> None:
+            if self.extra_jitter_us > 0.0:
+                # fault injection only: a clean RC channel draws no RNG
+                arrive = arrive + float(self.rng.uniform(0.0, self.extra_jitter_us))
             arrive = max(arrive, self._last_delivery)
             self._last_delivery = arrive
 
@@ -169,7 +179,8 @@ class Channel:
 
             self.loop.schedule_at(arrive, land)
 
-        tx_done = self.nic.submit(max(nbytes, 1), deliver)
+        tx_done = self.nic.submit(max(nbytes, 1), deliver,
+                                  svc_scale=self.svc_scale)
         if op.on_sent is not None:
             self.loop.schedule_at(tx_done + self.spec.rtt_us,
                                   lambda: op.on_sent(self.loop.now))

@@ -38,7 +38,10 @@ class ScalingPolicy:
     """Thresholds governing when the autoscaler adds or drains prefillers."""
 
     queue_high: int = 3            # depth that triggers scale-up
-    ttft_high_us: float = float("inf")   # TTFT EMA SLO (optional signal)
+    ttft_high_us: float = float("inf")   # TTFT SLO (optional signal)
+    # percentile used when the scheduler carries an SloTracker; with no
+    # tracker the signal stays the legacy single EMA
+    ttft_percentile: float = 95.0
     idle_ticks_down: int = 3       # consecutive idle ticks before scale-down
     min_prefillers: int = 1
     max_prefillers: int = 8
@@ -77,14 +80,21 @@ class Autoscaler:
         live = view.routable(ROLE)
         draining = [p for p in view.by_role(ROLE) if p.status == "draining"]
         depth = self.scheduler.queue_depth()
-        ema = self.scheduler.ttft_ema
+        # latency signal: sliding-window percentile when the scheduler has
+        # an SloTracker (PR 8), the legacy single EMA otherwise
+        slo = getattr(self.scheduler, "slo", None)
+        if slo is not None and len(slo.ttfts):
+            ttft_sig: Optional[float] = slo.ttft_percentile(
+                pol.ttft_percentile)
+        else:
+            ttft_sig = self.scheduler.ttft_ema
 
         self._idle_ticks = self._idle_ticks + 1 if depth == 0 else 0
         if now - self._last_action_us < pol.cooldown_us:
             return None
 
         overloaded = depth >= pol.queue_high or (
-            ema is not None and ema > pol.ttft_high_us)
+            ttft_sig is not None and ttft_sig > pol.ttft_high_us)
         if overloaded and len(live) + len(draining) < pol.max_prefillers:
             idx = self._next_index
             self._next_index += 1

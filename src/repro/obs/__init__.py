@@ -10,12 +10,15 @@ the fabric hot path is a single guarded attribute check.
 
 from .audit import assert_clean, format_audit
 from .export import build_trace_events, export_chrome_trace
-from .metrics import Histogram, MetricRegistry
+from .health import HealthMonitor, PairHealth
+from .metrics import Histogram, MetricRegistry, rank_percentile
+from .recorder import FlightRecorder
 from .tracer import Tracer, Window, WrSpan, traced_phase, traced_window
 
 __all__ = [
     "Tracer", "WrSpan", "Window", "traced_phase", "traced_window",
-    "Histogram", "MetricRegistry",
+    "Histogram", "MetricRegistry", "rank_percentile",
+    "HealthMonitor", "PairHealth", "FlightRecorder",
     "build_trace_events", "export_chrome_trace",
     "assert_clean", "format_audit",
 ]

@@ -43,4 +43,9 @@ def assert_clean(fabric, allow_pending_sends: bool = False) -> dict:
                         if not k.startswith("pending_sends")))
         if not dirty:
             return report
+    rec = getattr(fabric, "recorder", None)
+    if rec is not None:
+        # post-mortem forensics: persist the flight ring before failing
+        rec.note("audit", "failure", {"report": format_audit(report)})
+        rec.dump("audit-failure")
     raise AssertionError(format_audit(report))

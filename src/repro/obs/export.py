@@ -75,7 +75,8 @@ def build_trace_events(tracer) -> List[dict]:
             events.append({"ph": "M", "pid": pid, "name": "process_name",
                            "args": {"name": f"queue {track}"}})
         name = f"{sp.kind}:{sp.phase}" if sp.phase else sp.kind
-        args = {"dst": sp.dst, "nbytes": sp.nbytes, "phase": sp.phase,
+        args = {"src": sp.src, "dst": sp.dst, "nbytes": sp.nbytes,
+                "phase": sp.phase,
                 "t_submit": sp.t_submit, "t_enqueue": sp.t_enqueue,
                 "t_post0": sp.t_post0, "t_post": sp.t_post,
                 "t_wire": sp.t_wire, "t_deliver": sp.t_deliver}
@@ -105,9 +106,18 @@ def build_trace_events(tracer) -> List[dict]:
 
 def export_chrome_trace(tracer, path: str) -> int:
     """Write the tracer's contents as Chrome trace-event JSON at ``path``
-    (open with https://ui.perfetto.dev).  Returns the event count."""
+    (open with https://ui.perfetto.dev).  Returns the event count.
+
+    When the traced fabric also carries a streaming
+    :class:`~repro.obs.health.HealthMonitor`, its per-pair summary is
+    embedded under a top-level ``"health"`` key (ignored by Perfetto) so
+    ``tools/trace_report.py --live-parity`` can check the live counters
+    against the post-hoc span attribution from one artifact."""
     events = build_trace_events(tracer)
+    doc = {"traceEvents": events, "displayTimeUnit": "ms"}
+    mon = getattr(tracer.fabric, "health", None)
+    if mon is not None:
+        doc["health"] = mon.summary()
     with open(path, "w") as f:
-        json.dump({"traceEvents": events, "displayTimeUnit": "ms"},
-                  f, separators=(",", ":"))
+        json.dump(doc, f, separators=(",", ":"))
     return len(events)

@@ -1,0 +1,296 @@
+"""Streaming fabric health monitor: always-on, O(1), closed-loop-ready.
+
+The PR-7 :class:`~repro.obs.tracer.Tracer` is a *post-hoc* recorder: it
+retains every :class:`~repro.obs.tracer.WrSpan` and attributes stalls after
+the run.  Production fabrics need the opposite trade — **always-on** live
+signals with bounded memory.  :class:`HealthMonitor` consumes the exact
+same hook points (span creation at submit, ``_on_post`` at the worker
+posting slot, the delivery continuation) but keeps only O(channels)
+incremental state: per-(src, dst) rolling-window stats — delivery latency,
+NIC queue backlog, live enqueue/post/wire stall attribution — plus a
+**deviation detector** that compares each window's observed wire time
+against the ``Fabric.pair_spec`` cost-model prediction and flags channels
+whose ratio stays above threshold for consecutive windows (degraded NIC,
+injected congestion, cross-fabric misconfiguration).
+
+Two hard invariants, shared with the tracer and pinned by the determinism
+tests:
+
+* the monitor never schedules events, never draws RNG, and never perturbs
+  iteration order — an always-on-monitored run is **bit-identical** to an
+  unmonitored one;
+* every hook on the fabric hot path stays a single guarded attribute
+  check (``if fab.health is not None``) when no monitor is attached.
+
+Deviation model: for a WR of ``n`` bytes on pair (src, dst) with spec
+``s = fabric.pair_spec(src, dst)``, the wire segment (``t_deliver -
+t_wire`` — NIC queue wait excluded, so attribution stays per-pair even on
+shared NIC queues) is bounded on a clean fabric by::
+
+    expected = s.service_us(n) + s.base_latency_us + s.srd_jitter_us
+
+A window's deviation ratio is ``sum(observed) / sum(expected)``; clean
+channels sit at or below 1.0 by construction, so the default threshold
+(1.5x for 2 consecutive windows) never false-positives on the golden
+benches — a property the bench-smoke CI job asserts on every run.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from .tracer import WrSpan
+
+
+class PairHealth:
+    """Incremental health state for one (src, dst) channel pair.
+
+    Cumulative segment sums (``enqueue_us``/``post_us``/``wire_us``/
+    ``total_us``) mirror the post-hoc trace attribution exactly — the
+    ``--live-parity`` report checks them against recomputed span sums.
+    Window state is O(1): sums reset every ``window_wrs`` deliveries.
+    """
+
+    __slots__ = ("src", "dst", "n", "nbytes", "enqueue_us", "post_us",
+                 "wire_us", "total_us", "expected_wire_us", "backlog_max_us",
+                 "w_n", "w_obs_us", "w_exp_us", "windows", "bad_windows",
+                 "flagged", "last_ratio")
+
+    def __init__(self, src: str, dst: str):
+        self.src = src
+        self.dst = dst
+        # cumulative (whole run)
+        self.n = 0
+        self.nbytes = 0
+        self.enqueue_us = 0.0
+        self.post_us = 0.0
+        self.wire_us = 0.0
+        self.total_us = 0.0
+        self.expected_wire_us = 0.0
+        self.backlog_max_us = 0.0
+        # current rolling window
+        self.w_n = 0
+        self.w_obs_us = 0.0
+        self.w_exp_us = 0.0
+        # detector state
+        self.windows = 0           # closed windows so far
+        self.bad_windows = 0       # consecutive over-threshold windows
+        self.flagged = False
+        self.last_ratio = 0.0      # deviation ratio of the last closed window
+
+    def as_dict(self) -> Dict[str, float]:
+        """Flat summary row for this pair (bench JSON / trace embedding)."""
+        return {"src": self.src, "dst": self.dst, "n": self.n,
+                "nbytes": self.nbytes, "enqueue_us": self.enqueue_us,
+                "post_us": self.post_us, "wire_us": self.wire_us,
+                "total_us": self.total_us,
+                "expected_wire_us": self.expected_wire_us,
+                "backlog_max_us": self.backlog_max_us,
+                "windows": self.windows, "last_ratio": self.last_ratio,
+                "flagged": self.flagged}
+
+
+class HealthMonitor:
+    """Always-on streaming health monitor, attached via ``HealthMonitor(fabric)``.
+
+    Existing and future engines are wired either way (mirroring the tracer's
+    attach contract).  The monitor is pure synchronous bookkeeping inside
+    already-executing continuations: per-WR it does a handful of float adds
+    on the pair's :class:`PairHealth` record.  Detection knobs:
+
+    * ``window_wrs`` — deliveries per detector window (per pair);
+    * ``deviation_ratio`` — observed/expected wire-time ratio above which a
+      window counts as bad;
+    * ``k_windows`` — consecutive bad windows before the pair is flagged.
+
+    A flag fires once per pair (re-arm via :meth:`reset_flags`): it appends
+    to :attr:`flags`, emits a ``health`` ctrl-plane instant when a tracer is
+    attached, and notes + dumps the flight recorder when one is attached.
+    """
+
+    def __init__(self, fabric, *, window_wrs: int = 64,
+                 deviation_ratio: float = 1.5, k_windows: int = 2):
+        self.fabric = fabric
+        self.loop = fabric.loop
+        self.window_wrs = int(window_wrs)
+        self.deviation_ratio = float(deviation_ratio)
+        self.k_windows = int(k_windows)
+        self.pairs: Dict[Tuple[str, str], PairHealth] = {}
+        self.flags: List[dict] = []
+        # enqueue-side counters (bumped per WrBatch handoff, same ground
+        # truth as BatchStats / Tracer.n_*), keyed by submitting engine
+        self.n_wrs = 0
+        self.n_batches = 0
+        self.n_bytes = 0
+        self.by_src: Dict[str, List[float]] = {}   # src -> [wrs, batches, bytes]
+        self._spec_cache: Dict[Tuple[str, str], object] = {}
+        fabric.attach_health(self)
+
+    # -- hot-path hooks ----------------------------------------------------
+    def begin_wr(self, kind: str, dst, nbytes: int, imm: Optional[int],
+                 src: str = "") -> WrSpan:
+        """Open an **unretained** lifecycle span for one WR.
+
+        Used by the engine when a monitor is attached but no tracer is —
+        the span travels on the WireOp, gets stamped by the usual hooks,
+        and is consumed (not kept) by :meth:`on_deliver`."""
+        return WrSpan(0, kind, "", str(dst), nbytes, imm, self.loop.now,
+                      src=src)
+
+    def on_enqueue(self, src: str, wrs: int, nbytes: int) -> None:
+        """One WrBatch handed to the worker: bump the enqueue counters."""
+        self.n_batches += 1
+        self.n_wrs += wrs
+        self.n_bytes += nbytes
+        row = self.by_src.get(src)
+        if row is None:
+            row = self.by_src[src] = [0.0, 0.0, 0.0]
+        row[0] += wrs
+        row[1] += 1
+        row[2] += nbytes
+
+    def _on_post(self, op, ch, group, extra_post_us: float) -> None:
+        """Worker-posting hook (same signature/call site as the tracer's):
+        stamp the span's posting slot if no tracer already did, and fold
+        the NIC queue backlog into the pair's gauge."""
+        sp = op.span
+        if sp is None:
+            return
+        if sp.t_enqueue is None:
+            sp.t_enqueue = self.loop.now
+        if sp.t_post is None:
+            sp.t_post = group._post_busy_until
+            sp.t_post0 = sp.t_post - group.post_us - extra_post_us
+            sp.track = ch.label
+        ph = self._pair(sp.src, sp.dst)
+        b = ch.nic.backlog_us(self.loop.now)
+        if b > ph.backlog_max_us:
+            ph.backlog_max_us = b
+
+    def on_deliver(self, sp) -> None:
+        """Delivery hook: fold one completed span into the pair's rolling
+        stats and run the deviation detector (the span is NOT retained)."""
+        ph = self._pair(sp.src, sp.dst)
+        ph.n += 1
+        ph.nbytes += sp.nbytes
+        ph.total_us += sp.t_deliver - sp.t_submit
+        if sp.t_enqueue is not None:
+            ph.enqueue_us += sp.t_enqueue - sp.t_submit
+            if sp.t_wire is not None:
+                ph.post_us += sp.t_wire - sp.t_enqueue
+        rec = getattr(self.fabric, "recorder", None)
+        if rec is not None:
+            rec.record(sp.kind, f"{sp.src}>{sp.dst}", sp.nbytes,
+                       sp.t_deliver - sp.t_submit)
+        if sp.t_wire is None:
+            return
+        obs = sp.t_deliver - sp.t_wire
+        exp = self._expected_wire_us(sp.src, sp.dst, sp.nbytes)
+        ph.wire_us += obs
+        ph.expected_wire_us += exp
+        ph.w_n += 1
+        ph.w_obs_us += obs
+        ph.w_exp_us += exp
+        if ph.w_n >= self.window_wrs:
+            self._close_window(ph)
+
+    # -- detector ----------------------------------------------------------
+    def _close_window(self, ph: PairHealth) -> None:
+        ratio = ph.w_obs_us / ph.w_exp_us if ph.w_exp_us > 0.0 else 0.0
+        ph.last_ratio = ratio
+        ph.windows += 1
+        ph.w_n = 0
+        ph.w_obs_us = 0.0
+        ph.w_exp_us = 0.0
+        if ratio > self.deviation_ratio:
+            ph.bad_windows += 1
+            if ph.bad_windows >= self.k_windows and not ph.flagged:
+                self._flag(ph, ratio)
+        else:
+            ph.bad_windows = 0
+
+    def _flag(self, ph: PairHealth, ratio: float) -> None:
+        ph.flagged = True
+        flag = {"t": self.loop.now, "src": ph.src, "dst": ph.dst,
+                "ratio": ratio, "window": ph.windows,
+                "backlog_max_us": ph.backlog_max_us}
+        self.flags.append(flag)
+        tr = self.fabric.tracer
+        if tr is not None:
+            tr.instant("health", f"degraded:{ph.src}>{ph.dst}",
+                       {"ratio": ratio, "window": ph.windows})
+        rec = getattr(self.fabric, "recorder", None)
+        if rec is not None:
+            if tr is None:
+                # tracer.instant above already mirrored into the recorder
+                rec.note("health", f"degraded:{ph.src}>{ph.dst}",
+                         {"ratio": ratio, "window": ph.windows})
+            rec.dump("health-flag")
+
+    def reset_flags(self) -> None:
+        """Re-arm the detector: clear flags and per-pair flagged state."""
+        self.flags.clear()
+        for ph in self.pairs.values():
+            ph.flagged = False
+            ph.bad_windows = 0
+
+    # -- model lookup ------------------------------------------------------
+    def _pair(self, src: str, dst: str) -> PairHealth:
+        key = (src, dst)
+        ph = self.pairs.get(key)
+        if ph is None:
+            ph = self.pairs[key] = PairHealth(src, dst)
+        return ph
+
+    def _expected_wire_us(self, src: str, dst: str, nbytes: int) -> float:
+        spec = self._spec_cache.get((src, dst))
+        if spec is None:
+            try:
+                spec = self.fabric.pair_spec(src, dst)
+            except KeyError:
+                return float("inf")     # unknown pair: never flag it
+            self._spec_cache[(src, dst)] = spec
+        return (spec.service_us(nbytes) + spec.base_latency_us
+                + spec.srd_jitter_us)
+
+    # -- aggregation -------------------------------------------------------
+    def src_stats(self, src: str) -> Dict[str, float]:
+        """Aggregate delivered-WR stats for one submitting engine — the
+        online chunk tuner's feed: per-WR post overhead and per-byte wire
+        cost measured from live traffic (``None``-free; zeros when the
+        engine has no delivered WRs yet)."""
+        n = 0
+        nbytes = 0
+        post = wire = enq = 0.0
+        for (s, _), ph in self.pairs.items():
+            if s != src:
+                continue
+            n += ph.n
+            nbytes += ph.nbytes
+            post += ph.post_us
+            wire += ph.wire_us
+            enq += ph.enqueue_us
+        row = self.by_src.get(src, (0.0, 0.0, 0.0))
+        return {"n": n, "nbytes": nbytes, "enqueue_us": enq,
+                "post_us": post, "wire_us": wire,
+                "wrs": row[0], "batches": row[1],
+                "post_enqueue_ratio": row[0] / row[1] if row[1] else 0.0}
+
+    def summary(self) -> dict:
+        """Whole-monitor summary: global attribution sums + per-pair rows +
+        flags, all plain scalars/lists (JSON-ready)."""
+        enq = post = wire = 0.0
+        for ph in self.pairs.values():
+            enq += ph.enqueue_us
+            post += ph.post_us
+            wire += ph.wire_us
+        return {
+            "wrs": self.n_wrs, "batches": self.n_batches,
+            "nbytes": self.n_bytes,
+            "post_enqueue_ratio": (self.n_wrs / self.n_batches
+                                   if self.n_batches else 0.0),
+            "enqueue_us": enq, "post_us": post, "wire_us": wire,
+            "pairs": {f"{s}>{d}": ph.as_dict()
+                      for (s, d), ph in sorted(self.pairs.items())},
+            "flags": list(self.flags),
+        }

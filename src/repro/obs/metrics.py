@@ -11,7 +11,23 @@ definition as ``numpy.percentile``'s default), which the unit tests pin.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Sequence, Tuple
+
+
+def rank_percentile(xs: Sequence[float], p: float) -> float:
+    """The ``p``-th percentile (0..100) of an already-**sorted** sequence,
+    linear interpolation between closest ranks — numpy's default
+    definition, pinned by unit tests.  Shared by :class:`Histogram` and the
+    serving SLO tracker so every percentile in the repo means the same
+    thing.  Returns 0.0 for an empty sequence."""
+    if not xs:
+        return 0.0
+    if len(xs) == 1:
+        return xs[0]
+    k = (len(xs) - 1) * (p / 100.0)
+    f = math.floor(k)
+    c = min(f + 1, len(xs) - 1)
+    return xs[f] + (xs[c] - xs[f]) * (k - f)
 
 
 class Histogram:
@@ -44,15 +60,7 @@ class Histogram:
     def percentile(self, p: float) -> float:
         """The ``p``-th percentile (0..100), linear interpolation between
         closest ranks — numpy's default definition, pinned by unit tests."""
-        xs = sorted(self.samples)
-        if not xs:
-            return 0.0
-        if len(xs) == 1:
-            return xs[0]
-        k = (len(xs) - 1) * (p / 100.0)
-        f = math.floor(k)
-        c = min(f + 1, len(xs) - 1)
-        return xs[f] + (xs[c] - xs[f]) * (k - f)
+        return rank_percentile(sorted(self.samples), p)
 
     def summary(self) -> Dict[str, float]:
         """count/mean/p50/p95/p99/max as a flat dict (bench JSON rows)."""

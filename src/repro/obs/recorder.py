@@ -1,0 +1,90 @@
+"""Flight recorder: an always-on bounded ring of compact fabric events.
+
+Full tracing (``BENCH_TRACE=1``) retains every span and is too heavy to
+leave on in production runs; the flight recorder is the black-box
+counterpart — a fixed-size ring (``collections.deque(maxlen=...)``) of
+compact tuples fed by the health monitor's delivery stream, ctrl-plane
+instants (mirrored from the tracer when one is attached), CommitGate
+anomalies and SLO breaches.  When something goes wrong — ``Fabric.audit()``
+failure, a CommitGate anomaly, an SLO breach, a health flag — the last N
+events are dumped as JSON for post-mortem forensics, with no full trace
+required.
+
+Same hard invariants as the tracer and health monitor: the recorder never
+schedules events and never draws RNG; recording is one ``deque.append``.
+Dumps happen only on failure paths (or explicit :meth:`dump` calls), write
+ordinary files outside the event loop's knowledge, and are rate-limited so
+a pathological run cannot fill a disk.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from collections import deque
+from typing import List, Optional
+
+# environment override for the dump directory (CI uploads this on failure)
+DUMP_DIR_ENV = "FLIGHT_DUMP_DIR"
+DEFAULT_DUMP_DIR = "flight-dumps"
+
+
+class FlightRecorder:
+    """Bounded event ring + failure-triggered JSON dumps.
+
+    Attach with ``FlightRecorder(fabric)``; record points call
+    :meth:`record` (per-WR delivery summaries, from the health monitor) or
+    :meth:`note` (sparse named events: instants, anomalies, breaches).
+    ``capacity`` bounds memory; ``max_dumps`` bounds disk.
+    """
+
+    def __init__(self, fabric, *, capacity: int = 2048, max_dumps: int = 8,
+                 dump_dir: Optional[str] = None):
+        self.fabric = fabric
+        self.loop = fabric.loop
+        self.ring: deque = deque(maxlen=int(capacity))
+        self.max_dumps = int(max_dumps)
+        self.dump_dir = dump_dir
+        self.dumps: List[str] = []      # paths written so far
+        self.n_events = 0               # total ever recorded (ring may drop)
+        fabric.attach_recorder(self)
+
+    # -- recording ---------------------------------------------------------
+    def record(self, kind: str, where: str, nbytes: int, dur_us: float) -> None:
+        """Append one compact per-WR record: (t, kind, src>dst, bytes, µs)."""
+        self.ring.append((self.loop.now, kind, where, nbytes, dur_us))
+        self.n_events += 1
+
+    def note(self, category: str, name: str, args: Optional[dict] = None) -> None:
+        """Append one sparse named event (instant / anomaly / breach)."""
+        self.ring.append((self.loop.now, category, name, args, None))
+        self.n_events += 1
+
+    # -- dumping -----------------------------------------------------------
+    def _dir(self) -> str:
+        return (self.dump_dir or os.environ.get(DUMP_DIR_ENV)
+                or DEFAULT_DUMP_DIR)
+
+    def dump(self, reason: str) -> Optional[str]:
+        """Write the ring (+ health summary when a monitor is attached) as
+        JSON; returns the path, or None once ``max_dumps`` is exhausted."""
+        if len(self.dumps) >= self.max_dumps:
+            return None
+        d = self._dir()
+        os.makedirs(d, exist_ok=True)
+        safe = "".join(c if c.isalnum() or c in "-_" else "-" for c in reason)
+        path = os.path.join(d, f"flight_{len(self.dumps):02d}_{safe}.json")
+        doc = {
+            "reason": reason,
+            "virtual_time_us": self.loop.now,
+            "n_events_total": self.n_events,
+            "events": [list(e) for e in self.ring],
+        }
+        mon = getattr(self.fabric, "health", None)
+        if mon is not None:
+            doc["health"] = mon.summary()
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        self.dumps.append(path)
+        return path

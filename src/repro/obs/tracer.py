@@ -32,15 +32,17 @@ from .metrics import MetricRegistry
 class WrSpan:
     """Lifecycle stamps (virtual µs) for ONE work request on the fabric."""
 
-    __slots__ = ("op_id", "kind", "phase", "dst", "nbytes", "imm", "track",
-                 "t_submit", "t_enqueue", "t_post0", "t_post", "t_wire",
-                 "t_deliver")
+    __slots__ = ("op_id", "kind", "phase", "src", "dst", "nbytes", "imm",
+                 "track", "t_submit", "t_enqueue", "t_post0", "t_post",
+                 "t_wire", "t_deliver")
 
     def __init__(self, op_id: int, kind: str, phase: str, dst: str,
-                 nbytes: int, imm: Optional[int], t_submit: float):
+                 nbytes: int, imm: Optional[int], t_submit: float,
+                 src: str = ""):
         self.op_id = op_id
         self.kind = kind
         self.phase = phase
+        self.src = src              # submitting engine's wire address
         self.dst = dst
         self.nbytes = nbytes
         self.imm = imm
@@ -132,10 +134,10 @@ class Tracer:
         return self._phases[-1] if self._phases else ""
 
     def begin_wr(self, kind: str, dst, nbytes: int,
-                 imm: Optional[int]) -> WrSpan:
+                 imm: Optional[int], src: str = "") -> WrSpan:
         """Open a lifecycle span for one WR at submission time."""
         sp = WrSpan(next(self._ids), kind, self.current_phase, str(dst),
-                    nbytes, imm, self.loop.now)
+                    nbytes, imm, self.loop.now, src=src)
         self.spans.append(sp)
         return sp
 
@@ -190,6 +192,10 @@ class Tracer:
         """Record a point event (ctrl-plane JOIN/DRAIN/expiry, imm fire...)."""
         self.instants.append((self.loop.now, category, name, args))
         self.metrics.count(f"instant.{category}")
+        rec = getattr(self.fabric, "recorder", None)
+        if rec is not None:
+            # mirror ctrl-plane instants into the always-on flight recorder
+            rec.note(category, name, args)
 
     def gauge(self, name: str, value: float) -> None:
         """Record a gauge sample (exported as a Perfetto counter track)."""

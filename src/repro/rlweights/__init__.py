@@ -1,12 +1,13 @@
 from .planner import ParamMeta, Route, compute_routing, schedule_stats
-from .transfer import (Cluster, CommitGate, StageChunk, arm_commit_gates,
-                       autotune_chunk_bytes, commit_imm, data_imm,
-                       launch_p2p_update, launch_pipelined_update,
+from .transfer import (Cluster, CommitGate, OnlineChunkTuner, StageChunk,
+                       arm_commit_gates, autotune_chunk_bytes, commit_imm,
+                       data_imm, launch_p2p_update, launch_pipelined_update,
                        make_cluster, p2p_transfer, plan_chunks,
                        rank0_transfer, resolve_chunk_bytes, run_pipelined_update, verify_contents)
 
 __all__ = ["ParamMeta", "Route", "compute_routing", "schedule_stats",
-           "Cluster", "CommitGate", "StageChunk", "arm_commit_gates",
+           "Cluster", "CommitGate", "OnlineChunkTuner", "StageChunk",
+           "arm_commit_gates",
            "autotune_chunk_bytes", "commit_imm", "data_imm",
            "launch_p2p_update", "launch_pipelined_update", "make_cluster",
            "p2p_transfer", "plan_chunks", "rank0_transfer",

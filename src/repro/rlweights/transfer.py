@@ -102,8 +102,11 @@ def resolve_chunk_bytes(chunk_bytes, routes: Sequence[Route], nic: str, *,
     """``chunk_bytes="auto"`` => derive from the pair cost model and the
     busiest rank's wire bytes; int/None pass through unchanged.  The
     single aggregation point for every "auto" consumer (engine + benches).
+    ``chunk_bytes="online"`` starts at the same auto value — the executor
+    then attaches an :class:`OnlineChunkTuner` per rank that re-derives the
+    optimum from *measured* per-WR/per-byte costs mid-update.
     ``dst_nic`` forwards the inference side's NIC kind for mixed clusters."""
-    if chunk_bytes != "auto":
+    if chunk_bytes not in ("auto", "online"):
         return chunk_bytes
     per_rank: Dict[int, int] = {}
     for r in routes:
@@ -171,6 +174,12 @@ class CommitGate:
     carrying the update's data immediate, and the single commit-barrier
     write.  The version flips exactly once, when both have fired —
     correctness never depends on the order the transport delivered them.
+
+    Anomaly detection (flight-recorder hook): a second flip for the same
+    ``update_id``, re-arming an already-armed id, or — checked by
+    :meth:`audit_commits` once the run quiesces — more data/commit
+    immediates landing than were armed, all append to ``anomalies``, emit
+    a ctrl instant, and dump the flight recorder when one is attached.
     """
 
     def __init__(self, engine: TransferEngine, device: int = 0):
@@ -178,14 +187,41 @@ class CommitGate:
         self.device = device
         self.version = 0
         self.flips: List[Tuple[float, int]] = []   # (virtual time, update_id)
+        self.expected: Dict[int, int] = {}         # update_id -> armed n_data
+        self.anomalies: List[dict] = []
+
+    def _anomaly(self, update_id: int, kind: str, info: dict) -> None:
+        fab = self.engine.fabric
+        rec = {"t": fab.now, "node": self.engine.node,
+               "update_id": update_id, "kind": kind}
+        rec.update(info)
+        self.anomalies.append(rec)
+        tr = fab.tracer
+        if tr is not None:
+            tr.instant("rlweights",
+                       f"commit_anomaly:{self.engine.node}", rec)
+        recorder = getattr(fab, "recorder", None)
+        if recorder is not None:
+            if tr is None:      # tracer instants already mirror into the ring
+                recorder.note("rlweights", f"commit_anomaly:{kind}", rec)
+            recorder.dump("commit-anomaly")
 
     def arm(self, update_id: int, n_data: int,
             on_flip: Optional[Callable[[int], None]] = None) -> None:
+        if update_id in self.expected:
+            self._anomaly(update_id, "re-armed",
+                          {"n_data": n_data,
+                           "prev_n_data": self.expected[update_id]})
+        self.expected[update_id] = n_data
         state = {"data": False, "commit": False}
 
         def check(kind: str) -> None:
             state[kind] = True
             if state["data"] and state["commit"]:
+                if any(uid == update_id for _, uid in self.flips):
+                    self._anomaly(update_id, "double-flip",
+                                  {"version": self.version})
+                    return
                 self.version += 1
                 self.flips.append((self.engine.fabric.now, update_id))
                 tr = self.engine.fabric.tracer
@@ -201,6 +237,23 @@ class CommitGate:
                                      lambda: check("data"), device=self.device)
         self.engine.expect_imm_count(commit_imm(update_id), 1,
                                      lambda: check("commit"), device=self.device)
+
+    def audit_commits(self, update_id: int) -> List[dict]:
+        """Post-quiesce over-delivery check: the landed data/commit counters
+        must sit *exactly* at the armed expectation — any excess means a
+        duplicated WRITE or a misrouted immediate (recorded as an anomaly).
+        Returns the gate's cumulative anomaly list."""
+        ctr = self.engine.counters[self.device]
+        n_data = self.expected.get(update_id, 0)
+        have = ctr.value(data_imm(update_id))
+        if have > n_data:
+            self._anomaly(update_id, "extra-data-imm",
+                          {"have": have, "need": n_data})
+        have_c = ctr.value(commit_imm(update_id))
+        if have_c > 1:
+            self._anomaly(update_id, "extra-commit-imm",
+                          {"have": have_c, "need": 1})
+        return self.anomalies
 
 
 def arm_commit_gates(engines: Sequence[TransferEngine],
@@ -313,6 +366,11 @@ class RankPipeline:
         self._flush_scheduled = False
         # assigned by run_pipelined_update: shared sent-accounting + release
         self.chunk_done_cb: Callable[[StageChunk], None] = self.chunk_sent
+        # online retuning (chunk_bytes="online"): per-rank tuner + the
+        # launcher's remaining-count adjustment when queued chunks merge
+        self.tuner = None
+        self.chunks_merged_cb: Callable[[int], None] = lambda n: None
+        self.n_merged = 0
 
     def start(self) -> None:
         self._admit()
@@ -366,6 +424,52 @@ class RankPipeline:
             self.tracer.gauge("rlweights.staged_bytes", self.staged)
         self._admit()
 
+    def retarget_chunk_bytes(self, target: int) -> int:
+        """Merge-only rechunk of the not-yet-admitted queue toward ``target``
+        wire bytes per chunk.
+
+        Adjacent queued chunks coalesce when they are the same parameter,
+        source-contiguous, and every replica target lines up (same infer
+        ranks, destination offsets contiguous) — exactly the inverse of the
+        split :func:`plan_chunks` performed, so the merged chunk WRITEs the
+        same bytes with fewer WRs.  Chunks already admitted (staging
+        reserved) or in flight are never touched, and chunks never shrink:
+        splitting mid-update would invalidate the commit gate's armed data
+        counts, merging only *reduces* them (the launcher is notified via
+        ``chunks_merged_cb``).  Returns the number of merges performed."""
+        if len(self.queue) < 2:
+            return 0
+        fifo = self.queue[::-1]                # queue tail = next FIFO chunk
+        out: List[StageChunk] = []
+        merged = 0
+        i = 0
+        while i < len(fifo):
+            c = fifo[i]
+            while i + 1 < len(fifo):
+                nxt = fifo[i + 1]
+                if not (nxt.param == c.param
+                        and nxt.src_off == c.src_off + c.nbytes
+                        and c.nbytes + nxt.nbytes <= target
+                        and len(nxt.targets) == len(c.targets)
+                        and all(ir2 == ir and d2 == d + c.nbytes
+                                for (ir, d), (ir2, d2)
+                                in zip(c.targets, nxt.targets))):
+                    break
+                c = StageChunk(
+                    param=c.param, src_off=c.src_off,
+                    nbytes=c.nbytes + nxt.nbytes,
+                    stage_bytes=c.stage_bytes + nxt.stage_bytes,
+                    targets=c.targets)
+                merged += 1
+                i += 1
+            out.append(c)
+            i += 1
+        if merged:
+            self.queue = out[::-1]
+            self.n_merged += merged
+            self.chunks_merged_cb(merged)
+        return merged
+
     def audit_leaks(self) -> Dict[str, int]:
         """Unreleased staging state at loop-idle (empty dict = clean):
         reserved-but-unreleased staging bytes, never-admitted chunks, and
@@ -388,13 +492,94 @@ class RankPipeline:
         return self.prep_work_us
 
 
+class OnlineChunkTuner:
+    """Closed-loop chunk-size calibration (``chunk_bytes="online"``).
+
+    :func:`autotune_chunk_bytes` derives ``c* = sqrt(B*fix/(stages*w))``
+    from the *static* NIC spec.  This tuner re-derives it from **measured**
+    costs, read off the always-on :class:`~repro.obs.health.HealthMonitor`
+    on each chunk's sender-side completion:
+
+    * ``fix`` = delta post-segment time / delta WRs for this rank's engine
+      — the live per-WR overhead.  On a congested fabric the post segment
+      absorbs the NIC backlog, so measured ``fix`` explodes past the
+      spec's ``POST_US + fixed_us`` and the optimum drifts to *bigger*
+      chunks (fewer WRs amortise the queueing).
+    * ``w`` = delta wire time / delta wire bytes — the live per-byte cost.
+    * ``B`` = bytes still queued (un-admitted) on the rank's pipeline.
+
+    Retargeting is merge-only (:meth:`RankPipeline.retarget_chunk_bytes`)
+    and gated by ``hysteresis`` (new target must exceed 1.5x the current
+    one), so a clean fabric — where measured costs match the spec — never
+    retunes and the schedule stays byte-identical to static ``"auto"``.
+    Pure bookkeeping: never schedules events, never draws RNG.  With no
+    HealthMonitor attached the tuner is inert.
+    """
+
+    def __init__(self, fabric: Fabric, src, chunk_bytes: int, *, cap: int,
+                 stages: int = AUTOTUNE_STAGES, min_wrs: int = 8,
+                 hysteresis: float = 1.5):
+        self.fabric = fabric
+        self.monitor = fabric.health
+        self.src = str(src)
+        self.target = int(chunk_bytes)
+        self.cap = int(cap)
+        self.stages = max(1, int(stages))
+        self.min_wrs = int(min_wrs)
+        self.hysteresis = float(hysteresis)
+        self.retunes: List[dict] = []
+        self._base = (self.monitor.src_stats(self.src)
+                      if self.monitor is not None else None)
+
+    def on_chunk_done(self, pipe: RankPipeline) -> None:
+        """Re-derive the chunk optimum from the observation window since
+        the last retune; merge the queued tail up when it moved >= 1.5x."""
+        mon = self.monitor
+        if mon is None:
+            return
+        st = mon.src_stats(self.src)
+        base = self._base
+        dn = st["n"] - base["n"]
+        dbytes = st["nbytes"] - base["nbytes"]
+        if dn < self.min_wrs or dbytes <= 0:
+            return
+        fix_us = (st["post_us"] - base["post_us"]) / dn
+        w = (st["wire_us"] - base["wire_us"]) / dbytes
+        b_rem = sum(c.nbytes for c in pipe.queue)
+        if b_rem <= 0 or fix_us <= 0.0 or w <= 0.0:
+            return
+        c = int((b_rem * fix_us / (self.stages * w)) ** 0.5)
+        c = min(c, self.cap)
+        c = max(MIN_CHUNK_BYTES, (c // MIN_CHUNK_BYTES) * MIN_CHUNK_BYTES)
+        if c < self.target * self.hysteresis:
+            return
+        merged = pipe.retarget_chunk_bytes(c)
+        old, self.target = self.target, c
+        self._base = st          # rolling window: next decision on fresh data
+        rec = {"t": self.fabric.now, "rank": pipe.label, "old": old,
+               "new": c, "merged": merged, "fix_us": fix_us,
+               "wire_us_per_byte": w}
+        self.retunes.append(rec)
+        tr = self.fabric.tracer
+        if tr is not None:
+            tr.instant("rlweights", f"chunk_retarget:{pipe.label}", rec)
+        else:
+            recorder = getattr(self.fabric, "recorder", None)
+            if recorder is not None:
+                recorder.note("rlweights", f"chunk_retarget:{pipe.label}",
+                              rec)
+
+
 def launch_pipelined_update(
         fabric: Fabric, chunks_by_rank: Dict[int, List[StageChunk]], *,
         make_submit: Callable[[int, "RankPipeline"],
                               Callable[[List[StageChunk]], None]],
         commit_fn: Optional[Callable[[], None]],
         watermark_bytes: int, window_us: float, h2d: bool,
-        h2d_gbps: float, prep_gbps: float) -> Callable[[], Dict[str, float]]:
+        h2d_gbps: float, prep_gbps: float,
+        tuner_factory: Optional[Callable[[int, "RankPipeline"],
+                                         Optional[OnlineChunkTuner]]] = None
+        ) -> Callable[[], Dict[str, float]]:
     """Create and START every rank's pipeline NOW — without draining the
     fabric — and return a ``collect()`` closure for the stats once the run
     has quiesced.  This is the overlap building block: a second update can
@@ -407,6 +592,12 @@ def launch_pipelined_update(
     — wiring kept in the callers so the real-bytes and synthetic paths
     share this exact scheduler.  ``commit_fn`` is invoked once, after every
     chunk of every rank has sender-side completions.
+
+    ``tuner_factory(rank, pipe)`` (optional) attaches an
+    :class:`OnlineChunkTuner` per rank; it observes on every chunk
+    completion and may merge the queued tail into bigger chunks — the
+    launcher's remaining-count is adjusted through ``chunks_merged_cb`` so
+    the commit still fires after the *last actually-sent* chunk.
     """
     pipes: Dict[int, RankPipeline] = {}
     state = {"remaining": sum(len(v) for v in chunks_by_rank.values()),
@@ -417,8 +608,16 @@ def launch_pipelined_update(
         pipe.chunk_sent(c)
         state["writes_sent"] += len(c.targets)
         state["remaining"] -= 1
+        if pipe.tuner is not None:
+            pipe.tuner.on_chunk_done(pipe)
         if state["remaining"] == 0 and commit_fn is not None:
             commit_fn()
+
+    def chunks_merged(n: int) -> None:
+        # n merges = n fewer chunk completions still to come; merged chunks
+        # are un-admitted, so remaining stays >= 1 here — the commit check
+        # in chunk_done still sees the true last completion
+        state["remaining"] -= n
 
     for rank, chunks in chunks_by_rank.items():
         pipe = RankPipeline(
@@ -428,6 +627,9 @@ def launch_pipelined_update(
             submit_window=lambda w: None)      # bound just below
         pipe.submit_window = make_submit(rank, pipe)
         pipe.chunk_done_cb = lambda c, pipe=pipe: chunk_done(pipe, c)
+        pipe.chunks_merged_cb = chunks_merged
+        if tuner_factory is not None:
+            pipe.tuner = tuner_factory(rank, pipe)
         fabric.register_auditable(f"rlweights.rank{rank}", pipe)
         pipes[rank] = pipe
 
@@ -443,6 +645,9 @@ def launch_pipelined_update(
             "prep_us": max((p.prep_total_us for p in pipes.values()), default=0.0),
             "writes": state["writes_sent"],
             "n_chunks": sum(len(v) for v in chunks_by_rank.values()),
+            "n_merges": sum(p.n_merged for p in pipes.values()),
+            "n_retunes": sum(len(p.tuner.retunes) for p in pipes.values()
+                             if p.tuner is not None),
             "n_batches": sum(p.n_flushes for p in pipes.values()),
             "peak_staged_bytes": max((p.peak_staged for p in pipes.values()),
                                      default=0),
@@ -457,12 +662,15 @@ def launch_pipelined_update(
 def run_pipelined_update(
         fabric: Fabric, chunks_by_rank: Dict[int, List[StageChunk]], *,
         make_submit, commit_fn, watermark_bytes: int, window_us: float,
-        h2d: bool, h2d_gbps: float, prep_gbps: float) -> Dict[str, float]:
+        h2d: bool, h2d_gbps: float, prep_gbps: float,
+        tuner_factory: Optional[Callable[[int, "RankPipeline"],
+                                         Optional[OnlineChunkTuner]]] = None
+        ) -> Dict[str, float]:
     """Launch one pipelined update and drive the fabric until idle."""
     collect = launch_pipelined_update(
         fabric, chunks_by_rank, make_submit=make_submit, commit_fn=commit_fn,
         watermark_bytes=watermark_bytes, window_us=window_us, h2d=h2d,
-        h2d_gbps=h2d_gbps, prep_gbps=prep_gbps)
+        h2d_gbps=h2d_gbps, prep_gbps=prep_gbps, tuner_factory=tuner_factory)
     fabric.run()
     return collect()
 
@@ -491,6 +699,7 @@ def launch_p2p_update(cluster: Cluster, routes: List[Route], *,
     nic = cluster.train_engines[0].nic_name
     dst_nic = cluster.infer_engines[0].nic_name if cluster.infer_engines \
         else None
+    online = chunk_bytes == "online"
     chunk_bytes = resolve_chunk_bytes(chunk_bytes, routes, nic,
                                       watermark_bytes=watermark_bytes,
                                       stage_scale=stage_scale,
@@ -500,9 +709,18 @@ def launch_p2p_update(cluster: Cluster, routes: List[Route], *,
                                  stage_scale=stage_scale)
 
     gates: List[CommitGate] = []
+    n_data_live = [0] * len(cluster.infer_engines)
     if commit:
-        gates = arm_commit_gates(cluster.infer_engines, chunks_by_rank,
-                                 update_id)
+        if online:
+            # gate arming is deferred to commit time: the online tuner may
+            # merge queued chunks mid-update, so per-rank data-WRITE counts
+            # are only final once every chunk has a sender-side completion.
+            # ImmCounter is order-agnostic — arming after (some) data
+            # landed still flips exactly once, in any delivery order.
+            gates = [CommitGate(eng) for eng in cluster.infer_engines]
+        else:
+            gates = arm_commit_gates(cluster.infer_engines, chunks_by_rank,
+                                     update_id)
 
     imm = data_imm(update_id) if commit else None
     handles = src_handles if src_handles is not None else cluster.train_handles
@@ -512,6 +730,10 @@ def launch_p2p_update(cluster: Cluster, routes: List[Route], *,
         handle = handles[rank]
 
         def submit(window: List[StageChunk]) -> None:
+            if online and commit:
+                for c in window:
+                    for ir, _ in c.targets:
+                        n_data_live[ir] += 1
             eng.submit_scatters([
                 (handle,
                  [ScatterDst(len=c.nbytes, src=c.src_off,
@@ -523,24 +745,48 @@ def launch_p2p_update(cluster: Cluster, routes: List[Route], *,
         return submit
 
     def commit_fn() -> None:
+        if online and commit:
+            for ir, g in enumerate(gates):
+                g.arm(update_id, n_data_live[ir])
         cluster.train_engines[0].submit_barrier(
             list(cluster.infer_descs), commit_imm(update_id))
+
+    tuners: Dict[int, OnlineChunkTuner] = {}
+    tuner_factory = None
+    if online:
+        cap = max(MIN_CHUNK_BYTES,
+                  int(watermark_bytes / max(stage_scale, 1e-9) / 2))
+
+        def tuner_factory(rank: int, pipe: RankPipeline) -> OnlineChunkTuner:
+            t = OnlineChunkTuner(
+                fab, cluster.train_engines[rank].address(0), chunk_bytes,
+                cap=cap)
+            tuners[rank] = t
+            return t
 
     collect_pipe = launch_pipelined_update(
         fab, chunks_by_rank,
         make_submit=make_submit,
         commit_fn=commit_fn if commit else None,
         watermark_bytes=watermark_bytes, window_us=window_us, h2d=h2d,
-        h2d_gbps=h2d_gbps, prep_gbps=prep_gbps)
+        h2d_gbps=h2d_gbps, prep_gbps=prep_gbps,
+        tuner_factory=tuner_factory)
 
     def collect() -> Dict[str, float]:
         stats = collect_pipe()
         stats["chunk_bytes"] = chunk_bytes
+        if online:
+            stats["online"] = True
+            stats["chunk_bytes_final"] = max(
+                (t.target for t in tuners.values()), default=chunk_bytes)
         if commit:
+            for g in gates:
+                g.audit_commits(update_id)
             stats["commits"] = [len(g.flips) for g in gates]
             stats["committed"] = all(
                 len(g.flips) == 1 and g.flips[0][1] == update_id
                 for g in gates)
+            stats["commit_anomalies"] = sum(len(g.anomalies) for g in gates)
         return stats
 
     return collect
@@ -560,8 +806,10 @@ def p2p_transfer(cluster: Cluster, routes: List[Route], *,
     group per chunk so staging frees per chunk); with ``commit=True`` the
     update ends with the two-phase commit barrier and the returned stats
     carry per-rank flip records ("commits").  ``chunk_bytes`` may be an
-    int, None (watermark-capped whole ranges), or ``"auto"`` (per-NIC cost
-    model via :func:`autotune_chunk_bytes`).
+    int, None (watermark-capped whole ranges), ``"auto"`` (per-NIC cost
+    model via :func:`autotune_chunk_bytes`), or ``"online"`` (start at the
+    auto value, then let :class:`OnlineChunkTuner` recalibrate from the
+    attached HealthMonitor's measured costs mid-update).
     """
     collect = launch_p2p_update(
         cluster, routes, watermark_bytes=watermark_bytes, h2d=h2d,

@@ -2,6 +2,8 @@ from .disagg import (Decoder, DispatchReq, Prefiller,
                      disagg_unsupported_reason)
 from .kvpool import KvPool, PagedKvPool, PoolGeometry
 from .scheduler import Scheduler
+from .slo import SloTracker
 
 __all__ = ["Prefiller", "Decoder", "DispatchReq", "KvPool", "PagedKvPool",
-           "PoolGeometry", "Scheduler", "disagg_unsupported_reason"]
+           "PoolGeometry", "Scheduler", "SloTracker",
+           "disagg_unsupported_reason"]

@@ -52,12 +52,16 @@ POLICIES = ("round-robin", "least-loaded")
 
 class Scheduler:
     def __init__(self, fabric: Fabric, ctrl: ControlPlane, *,
-                 node: str = "sched", policy: str = "round-robin"):
+                 node: str = "sched", policy: str = "round-robin",
+                 slo=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.fabric = fabric
         self.ctrl = ctrl
         self.policy = policy
+        # optional repro.serving.slo.SloTracker: fed per completion, read
+        # by the Autoscaler as its percentile latency signal
+        self.slo = slo
         self.engine = fabric.add_engine(node, nic=ctrl.nic)
         self.engine.submit_recvs(1 << 16, 64, self._on_msg)
         self.view = MembershipView(0, ())
@@ -114,6 +118,8 @@ class Scheduler:
         rid = next(self._req)
         self.backlog.append((rid, np.asarray(input_ids), n_decode, 0,
                              vision_emb))
+        if self.slo is not None:
+            self.slo.observe_queue_depth(self.queue_depth())
         self._pump()
         return rid
 
@@ -228,6 +234,9 @@ class Scheduler:
             self.ttft_ema = msg.ttft_us if self.ttft_ema is None else (
                 TTFT_EMA_ALPHA * msg.ttft_us
                 + (1 - TTFT_EMA_ALPHA) * self.ttft_ema)
+            if self.slo is not None:
+                self.slo.observe_ttft(msg.ttft_us)
+                self.slo.observe_queue_depth(self.queue_depth())
             self._pump()
 
     def _reroute(self, gone: set) -> None:

@@ -1,0 +1,109 @@
+"""Serving SLO tracker: sliding-window TTFT / queue-depth percentiles.
+
+The Autoscaler's original latency signal is a single TTFT EMA — cheap, but
+a mean-like signal that hides tail degradation (one slow pair drags p99
+long before the EMA moves).  :class:`SloTracker` keeps bounded sliding
+windows of TTFT samples and queue-depth observations and serves
+p50/p95/p99 via the same closest-rank interpolation as
+:class:`repro.obs.metrics.Histogram` (shared ``rank_percentile``), so SLO
+numbers in the autoscaler, the benches and the trace report all agree.
+
+Breach tracking: when ``ttft_slo_us`` is set, every observation checks the
+configured percentile against it.  Crossing from ok to breached appends a
+breach record, emits an ``slo`` ctrl-plane instant when the fabric has a
+tracer, and (first breach only) dumps the flight recorder when one is
+attached.  Like the rest of ``repro.obs``, the tracker never schedules
+events and never draws RNG — attaching it leaves runs bit-identical.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional
+
+from ..obs.metrics import rank_percentile
+
+
+class SloTracker:
+    """Sliding-window TTFT/queue-depth percentiles + breach detection.
+
+    ``window`` bounds both sample deques; ``ttft_slo_us`` (optional)
+    arms breach detection on ``percentile`` (default p95) once at least
+    ``min_samples`` TTFTs are in the window.  Attach to a scheduler by
+    passing ``slo=...`` to its constructor; the autoscaler picks it up
+    through ``scheduler.slo``.
+    """
+
+    def __init__(self, fabric=None, *, window: int = 256,
+                 ttft_slo_us: Optional[float] = None,
+                 percentile: float = 95.0, min_samples: int = 16):
+        self.fabric = fabric
+        self.window = int(window)
+        self.ttft_slo_us = ttft_slo_us
+        self.pct = float(percentile)
+        self.min_samples = int(min_samples)
+        self.ttfts: deque = deque(maxlen=self.window)
+        self.depths: deque = deque(maxlen=self.window)
+        self.n_ttft = 0                  # total ever observed
+        self.breaches: List[dict] = []
+        self.in_breach = False
+
+    # -- observation --------------------------------------------------------
+    def observe_ttft(self, ttft_us: float) -> None:
+        """Record one completed request's TTFT; runs breach detection."""
+        self.ttfts.append(float(ttft_us))
+        self.n_ttft += 1
+        if self.ttft_slo_us is None or len(self.ttfts) < self.min_samples:
+            return
+        p = self.ttft_percentile(self.pct)
+        if p > self.ttft_slo_us:
+            if not self.in_breach:
+                self.in_breach = True
+                self._breach(p)
+        else:
+            self.in_breach = False
+
+    def observe_queue_depth(self, depth: int) -> None:
+        """Record one scheduler queue-depth sample."""
+        self.depths.append(int(depth))
+
+    def _breach(self, p: float) -> None:
+        now = self.fabric.now if self.fabric is not None else 0.0
+        rec = {"t": now, f"p{self.pct:g}_us": p,
+               "slo_us": self.ttft_slo_us, "n": self.n_ttft}
+        self.breaches.append(rec)
+        if self.fabric is None:
+            return
+        tr = self.fabric.tracer
+        if tr is not None:
+            tr.instant("slo", f"ttft_p{self.pct:g}_breach",
+                       {"value_us": p, "slo_us": self.ttft_slo_us})
+        recorder = getattr(self.fabric, "recorder", None)
+        if recorder is not None:
+            if tr is None:
+                recorder.note("slo", f"ttft_p{self.pct:g}_breach",
+                              {"value_us": p, "slo_us": self.ttft_slo_us})
+            if len(self.breaches) == 1:
+                recorder.dump("slo-breach")
+
+    # -- readout ------------------------------------------------------------
+    def ttft_percentile(self, p: float) -> float:
+        """TTFT percentile over the current window (0.0 when empty)."""
+        return rank_percentile(sorted(self.ttfts), p)
+
+    def queue_percentile(self, p: float) -> float:
+        """Queue-depth percentile over the current window (0.0 when empty)."""
+        return rank_percentile(sorted(self.depths), p)
+
+    def summary(self) -> dict:
+        """Flat scalar summary (bench JSON rows)."""
+        return {
+            "ttft_n": self.n_ttft,
+            "ttft_p50_us": self.ttft_percentile(50),
+            "ttft_p95_us": self.ttft_percentile(95),
+            "ttft_p99_us": self.ttft_percentile(99),
+            "queue_p50": self.queue_percentile(50),
+            "queue_p95": self.queue_percentile(95),
+            "queue_p99": self.queue_percentile(99),
+            "breaches": len(self.breaches),
+        }

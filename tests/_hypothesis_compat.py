@@ -5,7 +5,13 @@ environments without ``hypothesis`` the modules must still *collect* (the
 seed repo errored collection, interrupting the whole suite): the stand-ins
 below turn every ``@given`` test into a skip while leaving the example-based
 tests in the same module runnable.
+
+Set ``REQUIRE_HYPOTHESIS=1`` (CI does, on the test jobs) to turn the
+silent fallback into a hard error — proof the property tests actually ran
+rather than all skipping because an environment forgot the dev extra.
 """
+
+import os
 
 try:
     from hypothesis import given, settings
@@ -15,11 +21,18 @@ try:
 except ImportError:  # pragma: no cover - exercised only without the dev extra
     import pytest
 
+    if os.environ.get("REQUIRE_HYPOTHESIS") == "1":
+        raise RuntimeError(
+            "REQUIRE_HYPOTHESIS=1 but hypothesis is not importable — the "
+            "property tests would all skip; install the [dev] extra")
+
     HAVE_HYPOTHESIS = False
 
     def given(*_args, **_kwargs):
         def deco(fn):
-            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+            return pytest.mark.skip(
+                reason="hypothesis not installed (install the [dev] extra "
+                       "to run the property tests)")(fn)
         return deco
 
     def settings(*_args, **_kwargs):

@@ -17,22 +17,29 @@ def pytest_configure(config):
 
 
 @pytest.fixture
-def audited_fabrics(monkeypatch):
+def audited_fabrics(monkeypatch, tmp_path):
     """Track every Fabric built during the test and, at teardown, assert
     each one that ran to quiescence is leak-free: no un-delivered WRs, no
     unfulfilled ImmCounter expectations, no unreleased staging
     reservations (``repro.obs.assert_clean``).  Fabrics left with pending
     events were stopped mid-flight on purpose (bounded ``run_until`` /
     crash scenarios) and are skipped.  Fabric test modules opt in with a
-    one-line autouse wrapper."""
+    one-line autouse wrapper.
+
+    Every tracked fabric also gets the always-on :class:`HealthMonitor` +
+    :class:`FlightRecorder` attached (dumps into the test's tmp dir) — the
+    whole audited suite doubles as the proof that always-on monitoring
+    changes no simulated timing, since none of these tests expect it."""
     from repro.core import Fabric
-    from repro.obs import assert_clean
+    from repro.obs import FlightRecorder, HealthMonitor, assert_clean
 
     built = []
     orig = Fabric.__init__
 
     def wrapped(self, *a, **kw):
         orig(self, *a, **kw)
+        HealthMonitor(self)
+        FlightRecorder(self, dump_dir=str(tmp_path / "flight-dumps"))
         built.append(self)
 
     monkeypatch.setattr(Fabric, "__init__", wrapped)

@@ -1,0 +1,405 @@
+"""Closed-loop observability: always-on health monitor (bit-identity,
+degradation detection + attribution), flight recorder, commit anomalies,
+SLO tracking, and the online chunk tuner."""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import Fabric, Pages
+from repro.core.netsim import degrade
+from repro.obs import FlightRecorder, HealthMonitor, assert_clean
+from repro.rlweights import (CommitGate, ParamMeta, commit_imm,
+                             compute_routing, data_imm, make_cluster,
+                             p2p_transfer, verify_contents)
+from repro.serving import SloTracker
+
+PAGE = 256 << 10          # large pages: bandwidth-dominated wire times, so
+                          # a bw_scale cut is visible above base latency
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _fanout_run(nic, *, monitored=True, degrade_ab=None, n_pages=128,
+                seed=5, window_wrs=32, recorder_dir=None):
+    """One engine writing ``n_pages`` large pages to each of two peers;
+    optionally degrade only the a->b pair before any traffic."""
+    fab = Fabric(seed=seed)
+    mon = HealthMonitor(fab, window_wrs=window_wrs) if monitored else None
+    if monitored and recorder_dir is not None:
+        FlightRecorder(fab, dump_dir=recorder_dir)
+    a = fab.add_engine("a", nic=nic)
+    b = fab.add_engine("b", nic=nic)
+    c = fab.add_engine("c", nic=nic)
+    if degrade_ab:
+        assert fab.degrade_pair("a", "b", bw_scale=degrade_ab) > 0
+    src = (np.arange(n_pages * PAGE) % 251).astype(np.uint8)
+    dstb = np.zeros(n_pages * PAGE, np.uint8)
+    dstc = np.zeros(n_pages * PAGE, np.uint8)
+    hs, _ = a.reg_mr(src)
+    _, db = b.reg_mr(dstb)
+    _, dc = c.reg_mr(dstc)
+    idx = tuple(range(n_pages))
+    a.submit_paged_writes(PAGE, 1, (hs, Pages(idx, PAGE)),
+                          (db, Pages(idx, PAGE)))
+    a.submit_paged_writes(PAGE, 2, (hs, Pages(idx, PAGE)),
+                          (dc, Pages(idx, PAGE)))
+    fab.run()
+    assert np.array_equal(src, dstb) and np.array_equal(src, dstc)
+    return fab, mon
+
+
+# ---------------------------------------------------------------------------
+# the always-on invariant: monitoring changes NO simulated time
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nic", ["cx7", "efa"])
+def test_monitored_run_is_bit_identical(nic):
+    """Golden pin: HealthMonitor + FlightRecorder never schedule events and
+    never draw RNG — monitored virtual time equals bare virtual time
+    exactly, including through EFA's jittered SRD path."""
+    fab_off, _ = _fanout_run(nic, monitored=False)
+    fab_on, mon = _fanout_run(nic, monitored=True)
+    assert fab_on.now == fab_off.now          # bit-identical, not approx
+    assert mon.n_wrs == 256 and not mon.flags
+
+
+def test_degrade_rejects_nonpositive_bw():
+    fab = Fabric(seed=0)
+    a = fab.add_engine("a", nic="cx7")
+    ch = a.groups[0].domains[0].channel_to(
+        fab.add_engine("b", nic="cx7").groups[0].addr, 0)
+    with pytest.raises(ValueError):
+        degrade(ch, bw_scale=0.0)
+
+
+# ---------------------------------------------------------------------------
+# deviation detection + attribution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nic", ["cx7", "efa"])
+def test_degraded_pair_flagged_and_attributed(nic):
+    """A 4x bandwidth cut on a->b is flagged within a few observation
+    windows, attributed to exactly that pair; the co-resident clean pair
+    a->c never trips."""
+    fab, mon = _fanout_run(nic, degrade_ab=0.25)
+    flagged = {(f["src"], f["dst"]) for f in mon.flags}
+    assert flagged == {("a/gpu0", "b/gpu0")}
+    flag = mon.flags[0]
+    assert flag["ratio"] > 1.5
+    assert flag["window"] <= 3                # detected promptly
+    assert mon.pairs[("a/gpu0", "b/gpu0")].flagged
+    assert not mon.pairs[("a/gpu0", "c/gpu0")].flagged
+    assert mon.pairs[("a/gpu0", "c/gpu0")].last_ratio <= 1.05
+    assert_clean(fab, allow_pending_sends=True)
+
+
+@pytest.mark.parametrize("nic", ["cx7", "efa", "efa4"])
+def test_clean_fabric_never_flags(nic):
+    """No false positives: observed wire time on an undegraded channel
+    never exceeds the pair-spec model by the flag threshold."""
+    _, mon = _fanout_run(nic)
+    assert mon.flags == []
+    for ph in mon.pairs.values():
+        assert ph.windows >= 2                # the detector actually ran
+        assert ph.last_ratio <= 1.05
+
+
+def test_src_stats_and_summary_consistency():
+    """Aggregations agree: per-src sums equal the per-pair sums, the
+    global summary equals the whole population, segments are all
+    accounted (enqueue + post + wire == total)."""
+    _, mon = _fanout_run("efa")
+    s = mon.src_stats("a/gpu0")
+    assert s["n"] == mon.n_wrs == 256
+    assert s["nbytes"] == mon.n_bytes == 256 * PAGE
+    assert s["post_enqueue_ratio"] > 1.0      # batched posting
+    doc = mon.summary()
+    assert doc["wrs"] == 256 and len(doc["pairs"]) == 2
+    for row in doc["pairs"].values():
+        assert (row["enqueue_us"] + row["post_us"] + row["wire_us"]
+                == pytest.approx(row["total_us"]))
+
+
+def test_health_flag_dumps_flight_recorder(tmp_path):
+    """The first deviation flag triggers a flight-recorder dump whose JSON
+    carries the ring events and the full health summary."""
+    d = str(tmp_path / "dumps")
+    _, mon = _fanout_run("cx7", degrade_ab=0.25, recorder_dir=d)
+    assert mon.flags
+    files = sorted(os.listdir(d))
+    assert files and files[0].startswith("flight_00_health-flag")
+    doc = json.loads((tmp_path / "dumps" / files[0]).read_text())
+    assert doc["reason"] == "health-flag"
+    assert doc["events"]
+    assert doc["health"]["flags"]
+
+
+# ---------------------------------------------------------------------------
+# flight recorder ring
+# ---------------------------------------------------------------------------
+
+def test_recorder_ring_bounded_and_audit_dump(tmp_path):
+    """The ring never exceeds its capacity (memory-bounded always-on), a
+    failed audit dumps it, and max_dumps caps disk usage."""
+    fab = Fabric(seed=1)
+    HealthMonitor(fab)
+    rec = FlightRecorder(fab, capacity=16, max_dumps=2,
+                         dump_dir=str(tmp_path))
+    a = fab.add_engine("a", nic="cx7")
+    b = fab.add_engine("b", nic="cx7")
+    src = np.zeros(64 * 4096, np.uint8)
+    dst = np.zeros(64 * 4096, np.uint8)
+    hs, _ = a.reg_mr(src)
+    _, dd = b.reg_mr(dst)
+    idx = tuple(range(64))
+    a.submit_paged_writes(4096, 1, (hs, Pages(idx, 4096)),
+                          (dd, Pages(idx, 4096)))
+    a.expect_imm_count(99, 5, lambda: None)   # never fulfilled -> dirty audit
+    fab.run()
+    assert len(rec.ring) <= 16 and rec.n_events > 16
+    with pytest.raises(AssertionError):
+        assert_clean(fab)
+    files = sorted(os.listdir(tmp_path))
+    assert len(files) == 1 and "audit-failure" in files[0]
+    doc = json.loads((tmp_path / files[0]).read_text())
+    assert doc["reason"] == "audit-failure"
+    assert len(doc["events"]) <= 16
+    # max_dumps: repeated failures stop writing after the cap
+    assert rec.dump("again") is not None
+    assert rec.dump("over-cap") is None
+    assert len(os.listdir(tmp_path)) == 2
+
+
+# ---------------------------------------------------------------------------
+# commit anomalies
+# ---------------------------------------------------------------------------
+
+def _tiny_cluster(seed=3):
+    params = [ParamMeta("w0", (256, 64), 2)]
+    routes, sizes = compute_routing(params, 1, 1, infer_tp=1,
+                                    quant_ratio=1.0)
+    cl = make_cluster(1, 1, max(sizes["train"].values()),
+                      max(sizes["infer"].values()), nic="cx7", seed=seed)
+    return cl, routes
+
+
+def test_commit_gate_rearm_is_anomalous(tmp_path):
+    cl, _ = _tiny_cluster()
+    FlightRecorder(cl.fabric, dump_dir=str(tmp_path))
+    gate = CommitGate(cl.infer_engines[0])
+    gate.arm(7, 2)
+    gate.arm(7, 2)                            # double-arm: protocol bug
+    assert [a["kind"] for a in gate.anomalies] == ["re-armed"]
+    files = os.listdir(tmp_path)
+    assert files and "commit-anomaly" in files[0]
+    # leave the fabric clean for teardown-free exit
+    cl.infer_engines[0].counters[0].reset(data_imm(7))
+    cl.infer_engines[0].counters[0].reset(commit_imm(7))
+
+
+def test_commit_gate_detects_extra_imms():
+    """audit_commits flags over-delivery: more data immediates landed than
+    the gate armed for (a duplicated WRITE would corrupt versioning)."""
+    cl, _ = _tiny_cluster()
+    eng = cl.infer_engines[0]
+    gate = CommitGate(eng)
+    gate.arm(3, 1)
+    ctr = eng.counters[0]
+    ctr.increment(data_imm(3), 0.0)
+    ctr.increment(data_imm(3), 1.0)           # one too many
+    ctr.increment(commit_imm(3), 2.0)
+    assert len(gate.flips) == 1               # still flips exactly once
+    anomalies = gate.audit_commits(3)
+    assert [a["kind"] for a in anomalies] == ["extra-data-imm"]
+    assert anomalies[0]["have"] == 2 and anomalies[0]["need"] == 1
+
+
+# ---------------------------------------------------------------------------
+# online chunk calibration (the closed loop)
+# ---------------------------------------------------------------------------
+
+def _online_setup(seed=7):
+    params = [ParamMeta(f"w{i}", (4096, 1024), 2) for i in range(8)]
+    routes, sizes = compute_routing(params, 2, 2, infer_tp=1,
+                                    quant_ratio=1.0)
+    return routes, sizes
+
+
+def _online_run(mode, *, degrade_scale=None, seed=7):
+    routes, sizes = _online_setup(seed)
+    cl = make_cluster(2, 2, max(sizes["train"].values()),
+                      max(sizes["infer"].values()), nic="efa", seed=seed)
+    HealthMonitor(cl.fabric)
+    if degrade_scale:
+        for t in range(2):
+            for i in range(2):
+                cl.fabric.degrade_pair(f"train{t}", f"infer{i}",
+                                       bw_scale=degrade_scale)
+    stats = p2p_transfer(cl, routes, chunk_bytes=mode,
+                         watermark_bytes=8 << 20)
+    assert stats["committed"] and stats["commit_anomalies"] == 0
+    assert verify_contents(cl, routes)
+    assert_clean(cl.fabric, allow_pending_sends=True)
+    return stats
+
+
+def test_online_matches_auto_on_clean_fabric():
+    """On an undegraded fabric the measured costs match the spec model, the
+    1.5x hysteresis suppresses every retune, and the online schedule is
+    bit-identical to static "auto"."""
+    auto = _online_run("auto")
+    online = _online_run("online")
+    assert online["total_us"] == auto["total_us"]
+    assert online["n_retunes"] == 0 and online["n_merges"] == 0
+    assert online["chunk_bytes_final"] == online["chunk_bytes"] \
+        == auto["chunk_bytes"]
+
+
+def test_online_beats_auto_under_congestion():
+    """With every train->infer channel cut to 1/4 bandwidth, measured
+    per-WR cost (NIC backlog lands in the post segment) exceeds the spec
+    model, the tuner merges the queued tail into bigger chunks, and the
+    congested update strictly beats static "auto" on the same fabric."""
+    auto = _online_run("auto", degrade_scale=0.25)
+    online = _online_run("online", degrade_scale=0.25)
+    assert online["n_retunes"] > 0 and online["n_merges"] > 0
+    assert online["chunk_bytes_final"] > online["chunk_bytes"]
+    assert online["writes"] < auto["writes"]  # fewer, bigger WRs
+    assert online["total_us"] < auto["total_us"]
+
+
+# ---------------------------------------------------------------------------
+# SLO tracking
+# ---------------------------------------------------------------------------
+
+def test_slo_percentiles_match_numpy():
+    rng = np.random.default_rng(2)
+    xs = rng.uniform(50.0, 5000.0, size=200)
+    slo = SloTracker(window=256)
+    for x in xs:
+        slo.observe_ttft(float(x))
+        slo.observe_queue_depth(int(x) % 17)
+    for p in (50, 95, 99):
+        assert slo.ttft_percentile(p) == pytest.approx(np.percentile(xs, p))
+    s = slo.summary()
+    assert s["ttft_n"] == 200 and s["breaches"] == 0
+
+
+def test_slo_window_slides():
+    slo = SloTracker(window=8)
+    for v in [1000.0] * 8 + [10.0] * 8:
+        slo.observe_ttft(v)
+    assert slo.ttft_percentile(99) == 10.0    # old samples aged out
+    assert slo.n_ttft == 16
+
+
+def test_slo_breach_records_and_dumps(tmp_path):
+    """Crossing the SLO from ok to breached records exactly one breach (no
+    re-trigger while still breached) and dumps the flight recorder once."""
+    fab = Fabric(seed=0)
+    FlightRecorder(fab, dump_dir=str(tmp_path))
+    slo = SloTracker(fab, window=32, ttft_slo_us=100.0, min_samples=4)
+    for _ in range(4):
+        slo.observe_ttft(50.0)
+    assert not slo.breaches
+    for _ in range(8):
+        slo.observe_ttft(500.0)               # p95 shoots past the SLO
+    assert len(slo.breaches) == 1 and slo.in_breach
+    files = os.listdir(tmp_path)
+    assert len(files) == 1 and "slo-breach" in files[0]
+    # recovery then re-breach -> a second record, but no second dump
+    for _ in range(32):
+        slo.observe_ttft(10.0)
+    assert not slo.in_breach
+    for _ in range(32):
+        slo.observe_ttft(900.0)
+    assert len(slo.breaches) == 2
+    assert len(os.listdir(tmp_path)) == 1
+
+
+def test_autoscaler_scales_on_percentile_not_ema():
+    """A scheduler carrying an SloTracker feeds the autoscaler tail
+    percentiles: a p95 blowout triggers scale-up even while the EMA
+    (dragged down by many fast requests) sits below the threshold."""
+    from repro.ctrl.autoscaler import Autoscaler, ScalingPolicy
+    from test_ctrl import _FakeCtrl, _FakeSched, _pf
+    from repro.ctrl.registry import MembershipView
+
+    sched = _FakeSched()
+    slo = SloTracker(window=64, min_samples=4)
+    for _ in range(30):
+        slo.observe_ttft(50.0)
+    for _ in range(3):
+        slo.observe_ttft(5000.0)              # 3/33 tail blowout
+    sched.slo = slo
+    sched.ttft_ema = 60.0                     # EMA says: all fine
+    ctrl = _FakeCtrl(MembershipView(1, (_pf("a"),)))
+    spawned = []
+    pol = ScalingPolicy(queue_high=99, ttft_high_us=200.0,
+                        ttft_percentile=95.0, cooldown_us=0.0,
+                        max_prefillers=4)
+    sc = Autoscaler(ctrl, sched, spawned.append, policy=pol, auto=False)
+    assert slo.ttft_percentile(95.0) > 200.0 > (sched.ttft_ema or 0)
+    assert sc.step(0.0) == "up" and spawned == [1]
+    # without the tracker the same EMA would NOT have scaled
+    sched.slo = None
+    sc2 = Autoscaler(ctrl, sched, spawned.append, policy=pol, auto=False,
+                     next_index=9)
+    assert sc2.step(0.0) is None
+
+
+# ---------------------------------------------------------------------------
+# live parity (streaming counters vs post-hoc span attribution)
+# ---------------------------------------------------------------------------
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_trace_report_live_parity_cli(tmp_path):
+    """A trace exported from a monitored+traced fabric passes
+    --live-parity (streaming per-pair sums == recomputed span sums within
+    1%) and prints the per-channel health table; a bare trace fails."""
+    from repro.obs import Tracer, export_chrome_trace
+
+    def traced_run(monitored):
+        fab = Fabric(seed=5)
+        tr = Tracer(fab)
+        if monitored:
+            HealthMonitor(fab)
+        a = fab.add_engine("a", nic="efa")
+        b = fab.add_engine("b", nic="efa")
+        src = np.zeros(64 * PAGE, np.uint8)
+        dst = np.zeros(64 * PAGE, np.uint8)
+        hs, _ = a.reg_mr(src)
+        _, dd = b.reg_mr(dst)
+        idx = tuple(range(64))
+        a.submit_paged_writes(PAGE, 1, (hs, Pages(idx, PAGE)),
+                              (dd, Pages(idx, PAGE)))
+        fab.run()
+        return tr
+
+    path = tmp_path / "trace.json"
+    export_chrome_trace(traced_run(monitored=True), str(path))
+    p = subprocess.run(
+        [sys.executable, "tools/trace_report.py", str(path),
+         "--live-parity", "--min-coverage", "0.5"],
+        cwd=REPO, capture_output=True, text=True)
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "live parity" in p.stdout and "channel" in p.stdout
+
+    bare = tmp_path / "bare.json"
+    export_chrome_trace(traced_run(monitored=False), str(bare))
+    p = subprocess.run(
+        [sys.executable, "tools/trace_report.py", str(bare),
+         "--live-parity", "--min-coverage", "0.5"],
+        cwd=REPO, capture_output=True, text=True)
+    assert p.returncode == 1
+    assert "no embedded health doc" in p.stderr

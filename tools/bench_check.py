@@ -27,7 +27,9 @@ import sys
 from typing import List, Tuple
 
 EPS = 1e-9
-DEFAULT_FILES = ["BENCH_moe.json", "BENCH_rlweights.json"]
+DEFAULT_FILES = ["BENCH_moe.json", "BENCH_rlweights.json",
+                 "BENCH_p2p.json", "BENCH_kvcache.json",
+                 "BENCH_scaling.json"]
 
 
 def flat_rows(doc: dict) -> dict:

@@ -25,10 +25,20 @@ explain at least ``--min-coverage`` (default 0.95) of the end-to-end
 virtual time, else exit 1 — untraced gaps mean the instrumentation lost
 track of something.
 
+When the trace embeds a ``"health"`` document (exported from a fabric with
+the always-on :class:`~repro.obs.health.HealthMonitor` attached), the
+report prints the per-channel health/deviation table, and ``--live-parity``
+cross-checks the monitor's *streaming* per-pair segment counters against
+the attribution recomputed post-hoc from the retained spans: every pair's
+enqueue/post/wire sums must agree within 1% (counts and bytes exactly), or
+exit 1 — the two implementations watch the same hook points, so any drift
+is an instrumentation bug.
+
 Usage::
 
     python tools/trace_report.py benchmarks/out/trace_moe.json
     python tools/trace_report.py trace.json --min-coverage 0.9 --top 8
+    python tools/trace_report.py benchmarks/out/trace_moe.json --live-parity
 """
 
 from __future__ import annotations
@@ -36,18 +46,26 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
+
+PARITY_TOL = 0.01
+
+
+def load_doc(path: str) -> dict:
+    """Read a Chrome trace file; bare arrays are wrapped as traceEvents."""
+    with open(path) as f:
+        doc = json.load(f)
+    return doc if isinstance(doc, dict) else {"traceEvents": doc}
 
 
 def load_events(path: str) -> List[dict]:
     """Read a Chrome trace file (object-with-traceEvents or bare array)."""
-    with open(path) as f:
-        doc = json.load(f)
-    return doc["traceEvents"] if isinstance(doc, dict) else doc
+    return load_doc(path)["traceEvents"]
 
 
 def wr_segments(events: List[dict]) -> List[dict]:
-    """Complete WR spans: [{dst, phase, nbytes, enqueue, post, wire}, ...]."""
+    """Complete WR spans: [{src, dst, phase, nbytes, enqueue, post, wire},
+    ...]."""
     out = []
     for ev in events:
         if ev.get("ph") != "b" or ev.get("cat") != "wr":
@@ -59,6 +77,7 @@ def wr_segments(events: List[dict]) -> List[dict]:
             continue        # orphan / never-posted span: excluded, reported
         t_submit, t_enqueue, t_wire, t_deliver = stamps
         out.append({
+            "src": a.get("src", ""),
             "dst": a.get("dst", "?"), "phase": a.get("phase") or "(none)",
             "nbytes": a.get("nbytes", 0),
             "t0": t_submit, "t1": t_deliver,
@@ -134,6 +153,72 @@ def render(by: Dict[str, dict], label: str, top: int) -> None:
               f"{d['limited_by']}-limited")
 
 
+def pair_sums(segs: List[dict]) -> Dict[str, dict]:
+    """Post-hoc per-(src>dst) segment sums recomputed from retained spans —
+    the ground truth --live-parity checks the streaming counters against."""
+    by: Dict[str, dict] = {}
+    for s in segs:
+        d = by.setdefault(f"{s['src']}>{s['dst']}",
+                          {"n": 0, "nbytes": 0, "enqueue_us": 0.0,
+                           "post_us": 0.0, "wire_us": 0.0})
+        d["n"] += 1
+        d["nbytes"] += s["nbytes"]
+        d["enqueue_us"] += s["enqueue"]
+        d["post_us"] += s["post"]
+        d["wire_us"] += s["wire"]
+    return by
+
+
+def render_health(health: dict, top: int) -> None:
+    """Per-channel health/deviation table from the embedded monitor doc."""
+    pairs = health.get("pairs", {})
+    if not pairs:
+        return
+    rows = sorted(pairs.items(), key=lambda kv: -kv[1]["wire_us"])[:top]
+    w = max(len("channel"), max(len(k) for k, _ in rows))
+    print(f"\n{'channel':<{w}}  {'wrs':>6} {'MiB':>8} {'wire us':>10} "
+          f"{'model us':>10} {'dev':>6} {'win':>4}  status")
+    for k, d in rows:
+        exp = d["expected_wire_us"]
+        dev = d["wire_us"] / exp if exp else 0.0
+        status = "DEGRADED" if d["flagged"] else "ok"
+        print(f"{k:<{w}}  {d['n']:>6} {d['nbytes'] / (1 << 20):>8.1f} "
+              f"{d['wire_us']:>10.1f} {exp:>10.1f} {dev:>6.2f} "
+              f"{d['windows']:>4}  {status}")
+    for f in health.get("flags", []):
+        print(f"  flag @{f['t']:.1f}us {f['src']}>{f['dst']} "
+              f"ratio={f['ratio']:.2f} window={f['window']}")
+
+
+def check_live_parity(health: dict, segs: List[dict],
+                      tol: float = PARITY_TOL) -> List[str]:
+    """Streaming (HealthMonitor) vs post-hoc (span) attribution: counts and
+    bytes must match exactly, segment sums within ``tol`` relative."""
+    bad: List[str] = []
+    post_hoc = pair_sums(segs)
+    live = health.get("pairs", {})
+    for key in sorted(set(post_hoc) | set(live)):
+        if key not in live:
+            bad.append(f"pair {key}: in spans but not in live counters")
+            continue
+        if key not in post_hoc:
+            bad.append(f"pair {key}: in live counters but not in spans")
+            continue
+        a, b = post_hoc[key], live[key]
+        for fld in ("n", "nbytes"):
+            if a[fld] != b[fld]:
+                bad.append(f"pair {key}: {fld} live={b[fld]} "
+                           f"post-hoc={a[fld]}")
+        for fld in ("enqueue_us", "post_us", "wire_us"):
+            ref = max(abs(a[fld]), 1e-9)
+            if abs(a[fld] - b[fld]) / ref > tol:
+                bad.append(f"pair {key}: {fld} live={b[fld]:.3f} "
+                           f"post-hoc={a[fld]:.3f} "
+                           f"({100 * abs(a[fld] - b[fld]) / ref:.2f}% "
+                           f"> {100 * tol:.0f}%)")
+    return bad
+
+
 def main(argv: List[str]) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trace", help="Chrome trace JSON from export_chrome_trace")
@@ -141,9 +226,13 @@ def main(argv: List[str]) -> int:
                     help="fail if less of the timeline is attributed")
     ap.add_argument("--top", type=int, default=16,
                     help="rows per table (largest first)")
+    ap.add_argument("--live-parity", action="store_true",
+                    help="require the embedded health counters to match the "
+                         "span-recomputed attribution within 1%%")
     args = ap.parse_args(argv)
 
-    events = load_events(args.trace)
+    doc = load_doc(args.trace)
+    events = doc["traceEvents"]
     segs = wr_segments(events)
     n_b = sum(1 for ev in events
               if ev.get("ph") == "b" and ev.get("cat") == "wr")
@@ -153,6 +242,30 @@ def main(argv: List[str]) -> int:
     render(attribute(segs, "dst"), "destination", args.top)
     render(attribute(segs, "phase"), "phase", args.top)
 
+    health: Optional[dict] = doc.get("health")
+    if health is not None:
+        render_health(health, args.top)
+
+    rc = 0
+    if args.live_parity:
+        if health is None:
+            print("FAIL: --live-parity needs a trace exported with a "
+                  "HealthMonitor attached (no embedded health doc)",
+                  file=sys.stderr)
+            rc = 1
+        else:
+            bad = check_live_parity(health, segs)
+            if bad:
+                print(f"FAIL: live/post-hoc parity: {len(bad)} mismatches",
+                      file=sys.stderr)
+                for m in bad:
+                    print(f"  {m}", file=sys.stderr)
+                rc = 1
+            else:
+                print(f"\nlive parity: {len(segs)} spans across "
+                      f"{len(health.get('pairs', {}))} pairs agree with the "
+                      f"streaming counters (tol {100 * PARITY_TOL:.0f}%)")
+
     covered, span, frac = coverage(events, segs)
     print(f"\ncoverage: {covered:.1f} of {span:.1f} virtual us attributed "
           f"to named spans ({100 * frac:.1f}%, floor "
@@ -160,7 +273,7 @@ def main(argv: List[str]) -> int:
     if frac < args.min_coverage:
         print("FAIL: timeline has untraced gaps", file=sys.stderr)
         return 1
-    return 0
+    return rc
 
 
 if __name__ == "__main__":
