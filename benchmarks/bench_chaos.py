@@ -1,0 +1,212 @@
+"""Chaos rows: data-plane fault injection under the real protocols.
+
+Three scenarios, every byte real (verified bit-exact), every fault drawn
+from the seeded :class:`repro.core.FaultPlan` so the rows replay
+deterministically:
+
+  rl_loss     — the staged RL weight update commits exactly-once under
+                0% / 2% / 10% WR loss on one train->infer pair; rows show
+                the retry tax on total time.
+  rl_abort    — a mixed CX7->EFA pair degraded to 0.25x bandwidth drops
+                every WR with a starved retry budget: the update aborts
+                (commit withheld on every rank, staging released, audit
+                clean) and, after the fault clears, the next update_id
+                commits on the same cluster.
+  kv_failover — a serving fleet (real reduced-stablelm compute) loses
+                every KV handoff from one prefiller; requests re-route via
+                XferFail escalation and all complete, with the TTFT
+                overhead vs the clean fleet reported.
+
+Appends the rows to ``BENCH_rlweights.json`` / ``BENCH_scaling.json``
+(run AFTER those modules: ``python -m benchmarks.run ... rlweights
+scaling chaos``) so the perf-gate and trajectory tooling see chaos next
+to the clean numbers.
+
+Env knobs:
+  BENCH_CHAOS_SMOKE=1   shrink the failover arrival train for CI
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+SMOKE = os.environ.get("BENCH_CHAOS_SMOKE", "") not in ("", "0")
+
+OUT_DIR = os.environ.get(
+    "BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
+
+LOSS_RATES = (0.0, 0.02, 0.10)
+N_FAILOVER_REQS = 3 if SMOKE else 6
+
+
+def _rl_setup(nic: str = "cx7", infer_nic=None, seed: int = 11):
+    from repro.rlweights import ParamMeta, compute_routing, make_cluster
+    params = [ParamMeta(f"w{i}", (512, 128), 2) for i in range(6)]
+    routes, sizes = compute_routing(params, 2, 2, infer_tp=1,
+                                    quant_ratio=1.0)
+    cl = make_cluster(2, 2, max(sizes["train"].values()),
+                      max(sizes["infer"].values()), nic=nic, seed=seed,
+                      infer_nic=infer_nic)
+    return cl, routes
+
+
+def rl_loss_sweep() -> Dict[str, Dict]:
+    """Real-byte staged update vs WR loss rate on one train->infer pair."""
+    from repro.core import FaultPlan
+    from repro.rlweights import p2p_transfer, verify_contents
+    rows: Dict[str, Dict] = {}
+    for rate in LOSS_RATES:
+        cl, routes = _rl_setup()
+        plan = FaultPlan(cl.fabric, seed=2, timeout_us=400.0,
+                         max_retries=16, backoff_us=25.0)
+        if rate > 0.0:
+            plan.inject("train0", "infer0", drop_prob=rate)
+        stats = p2p_transfer(cl, routes, chunk_bytes=4096)
+        rows[f"loss_{int(rate * 100)}pct"] = {
+            "total_us": stats["total_us"],
+            "committed": bool(stats["committed"]),
+            "verified": bool(verify_contents(cl, routes)),
+            "drops": plan.stats["drops"],
+            "retries": plan.stats["retries"],
+            "exhausted": plan.stats["exhausted"],
+        }
+    return rows
+
+
+def rl_abort_recovery() -> Dict[str, Dict]:
+    """Abort on a degraded mixed-NIC pair, then recover on the next update."""
+    from repro.core import FaultPlan
+    from repro.rlweights import p2p_transfer, verify_contents
+    cl, routes = _rl_setup(nic="cx7", infer_nic="efa")
+    cl.fabric.degrade_pair("train0", "infer0", bw_scale=0.25)
+    plan = FaultPlan(cl.fabric, seed=3, timeout_us=300.0, max_retries=1,
+                     backoff_us=20.0)
+    plan.inject("train0", "infer0", drop_prob=1.0)
+    t0 = cl.fabric.now
+    stats = p2p_transfer(cl, routes, chunk_bytes=4096)
+    abort = {
+        "aborted": bool(stats["aborted"]),
+        "committed": bool(stats["committed"]),
+        "commits": sum(stats["commits"]),
+        "abort_detect_us": cl.fabric.now - t0,
+        "exhausted": plan.stats["exhausted"],
+    }
+    plan.clear()
+    t1 = cl.fabric.now
+    stats2 = p2p_transfer(cl, routes, chunk_bytes=4096, update_id=1)
+    recovery = {
+        "committed": bool(stats2["committed"]),
+        "verified": bool(verify_contents(cl, routes)),
+        "recovery_us": cl.fabric.now - t1,
+    }
+    return {"abort": abort, "recovery": recovery}
+
+
+def kv_failover(faulty: bool) -> Dict[str, float]:
+    """Serving fleet under total KV loss from one prefiller (or clean)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import Fabric, FaultPlan
+    from repro.ctrl import ControlPlane
+    from repro.models import init_params
+    from repro.serving import Decoder, Prefiller, Scheduler
+
+    cfg = get_config("stablelm-3b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fab = Fabric(seed=9)
+    ctrl = ControlPlane(fab, nic="efa", max_sweeps=256)
+    for p in ("p0", "p1"):
+        Prefiller(fab, p, cfg, params, nic="efa", ctrl=ctrl,
+                  max_renewals=256)
+    Decoder(fab, "d0", cfg, params, nic="efa", ctrl=ctrl, max_renewals=256)
+    sched = Scheduler(fab, ctrl)
+    if faulty:
+        plan = FaultPlan(fab, seed=5, timeout_us=10_000.0, max_retries=1,
+                         backoff_us=50.0)
+        plan.inject("p0", "d0", drop_prob=1.0)
+    rng = np.random.default_rng(4)
+    rids = []
+
+    def submit_all() -> None:
+        # after membership settles, so round-robin spreads across BOTH
+        # prefillers and the lossy one actually takes traffic
+        rids.extend(sched.submit(rng.integers(0, cfg.vocab, size=24 + 2 * i),
+                                 n_decode=2) for i in range(N_FAILOVER_REQS))
+
+    t_submit = 1_000.0
+    fab.loop.schedule(t_submit, submit_all)
+    fab.run()
+    done = [sched.completed[r] for r in rids if r in sched.completed]
+    # ttft_us is per-attempt (decoder-side); end-to-end submit->done is the
+    # number that shows the failover cost (timeout + re-route + re-prefill)
+    e2es = [d["done_us"] - t_submit for d in done]
+    return {
+        "n_reqs": len(rids),
+        "n_completed": len(done),
+        "n_rerouted": len(sched.rerouted),
+        "n_failed": len(sched.failed),
+        "mean_ttft_us": float(np.mean([d["ttft_us"] for d in done]))
+        if done else 0.0,
+        "mean_e2e_us": float(np.mean(e2es)) if e2es else 0.0,
+        "total_us": fab.now,
+    }
+
+
+def _append_rows(fname: str, rows: Dict[str, Dict]) -> None:
+    """Merge chaos rows into an existing BENCH_*.json (same formatting)."""
+    path = os.path.join(OUT_DIR, fname)
+    if not os.path.exists(path):
+        return
+    with open(path) as f:
+        doc = json.load(f)
+    doc.setdefault("rows", {}).update(rows)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def run(report) -> None:
+    loss = rl_loss_sweep()
+    for key, row in loss.items():
+        report(f"chaos_rl_{key}", row["total_us"],
+               f"us total; committed={row['committed']} "
+               f"verified={row['verified']} ({row['drops']} drops, "
+               f"{row['retries']} retries, {row['exhausted']} exhausted)")
+    base = loss["loss_0pct"]["total_us"]
+    worst = loss[f"loss_{int(LOSS_RATES[-1] * 100)}pct"]["total_us"]
+    report("chaos_rl_retry_tax", worst / base,
+           f"x slowdown at {LOSS_RATES[-1]:.0%} loss vs clean "
+           f"(exactly-once commit held at every rate)")
+
+    ar = rl_abort_recovery()
+    report("chaos_rl_abort", ar["abort"]["abort_detect_us"],
+           f"us to abort on dead 0.25x CX7->EFA pair; "
+           f"commits={ar['abort']['commits']} (withheld on all ranks), "
+           f"aborted={ar['abort']['aborted']}")
+    report("chaos_rl_recovery_us", ar["recovery"]["recovery_us"],
+           f"us for the next update_id on the healed cluster; "
+           f"committed={ar['recovery']['committed']} "
+           f"verified={ar['recovery']['verified']}")
+
+    clean = kv_failover(faulty=False)
+    chaos = kv_failover(faulty=True)
+    report("chaos_kv_failover", chaos["mean_e2e_us"],
+           f"us mean submit->done with every p0->d0 handoff lost "
+           f"({chaos['n_completed']}/{chaos['n_reqs']} completed, "
+           f"{chaos['n_rerouted']} rerouted, {chaos['n_failed']} failed "
+           f"terminally) vs {clean['mean_e2e_us']:.0f}us clean")
+
+    _append_rows("BENCH_rlweights.json", {
+        **{f"chaos_{k}": v for k, v in loss.items()},
+        "chaos_abort": ar["abort"],
+        "chaos_recovery": ar["recovery"],
+    })
+    _append_rows("BENCH_scaling.json", {
+        "chaos_kv_failover": chaos,
+        "chaos_kv_failover_clean_baseline": clean,
+    })

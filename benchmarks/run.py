@@ -20,8 +20,8 @@ OUT_DIR = os.environ.get(
 
 
 def main() -> None:
-    from . import (bench_ablation, bench_kvcache, bench_moe, bench_p2p,
-                   bench_rlweights, bench_scaling)
+    from . import (bench_ablation, bench_chaos, bench_kvcache, bench_moe,
+                   bench_p2p, bench_rlweights, bench_scaling)
     modules = {
         "p2p": bench_p2p,              # Table 2 / Fig. 8
         "kvcache": bench_kvcache,      # Table 3 / Table 4
@@ -29,6 +29,8 @@ def main() -> None:
         "moe": bench_moe,              # Fig. 9/10 / Table 6
         "ablation": bench_ablation,    # Fig. 11 / Table 8/9
         "scaling": bench_scaling,      # §4 dynamic scaling timeline
+        "chaos": bench_chaos,          # fault injection (run last: appends
+                                       # rows to rlweights/scaling JSONs)
     }
     wanted = sys.argv[1:] or list(modules)
     os.makedirs(OUT_DIR, exist_ok=True)

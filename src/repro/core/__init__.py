@@ -9,6 +9,7 @@ from .domain import (MrDesc, MrHandle, NetAddr, Pages, PayloadDst,
                      ScatterDst, WrBatch)
 from .engine import (BatchState, BatchStats, Fabric, Flag, TransferEngine,
                      WriteState, NIC_PRESETS)
+from .faults import BackpressureError, FaultPlan, TransferError
 from .imm_counter import ImmCounter
 from .netsim import CX7, EFA_100, EFA_200, NVLINK, EventLoop, NicSpec
 from .topology import ChannelPlan, TopoEntry, Topology, cross_spec
@@ -18,6 +19,7 @@ __all__ = [
     "Fabric", "TransferEngine", "Flag", "NIC_PRESETS",
     "MrDesc", "MrHandle", "NetAddr", "Pages", "PayloadDst", "ScatterDst",
     "WrBatch", "BatchState", "BatchStats", "WriteState",
+    "FaultPlan", "TransferError", "BackpressureError",
     "ImmCounter", "UvmWatcher",
     "EventLoop", "NicSpec", "CX7", "EFA_100", "EFA_200", "NVLINK",
     "Topology", "TopoEntry", "ChannelPlan", "cross_spec",

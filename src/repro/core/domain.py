@@ -268,6 +268,9 @@ class DomainGroup:
         # observability hooks (repro.obs); None => zero-cost guarded check
         self.tracer = None
         self.health = None
+        # fault-injection hook (repro.core.faults.FaultPlan); None => the
+        # direct channel post below, bit-identical to the pre-fault fabric
+        self.faults = None
 
     # -- memory ---------------------------------------------------------
     def register(self, buf: np.ndarray, device: int) -> Tuple[MrHandle, MrDesc]:
@@ -313,6 +316,9 @@ class DomainGroup:
             self.tracer._on_post(op, ch, self, extra_post_us)
         if self.health is not None:
             self.health._on_post(op, ch, self, extra_post_us)
+        if self.faults is not None:
+            self.faults.on_post(self, dst_group, op, ch, delay, d.index)
+            return
         self.loop.schedule(delay, lambda: ch.post(op))
 
     def split_across_nics(self, nbytes: int) -> List[Tuple[int, int, int]]:

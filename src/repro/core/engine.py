@@ -30,6 +30,7 @@ import numpy as np
 
 from .domain import (DomainGroup, MemoryRegion, MrDesc, MrHandle, NetAddr,
                      Pages, PayloadDst, ScatterDst, WrBatch)
+from .faults import BackpressureError, TransferError
 from .imm_counter import ImmCounter
 from .netsim import (ENQUEUE_US, EventLoop, NicSpec, CX7, EFA_100, EFA_200,
                      degrade, stable_hash)
@@ -130,19 +131,39 @@ class BatchStats:
 class BatchState:
     """Sender-side completion state shared by every logical write of one
     batched submission (replaces the per-op ``{"sent": n}`` dict closures):
-    fires ``on_done`` exactly once, when all logical writes report sent."""
+    fires ``on_done`` exactly once, when all logical writes report sent.
 
-    __slots__ = ("remaining", "on_done")
+    ``on_error`` is the terminal failure path (retry exhaustion or peer
+    death under a :class:`~repro.core.faults.FaultPlan`): the FIRST failed
+    logical write fires it once with a reason string, ``on_done`` is
+    permanently suppressed, and with no handler installed a
+    :class:`TransferError` propagates out of ``Fabric.run()`` — loud,
+    never a silent hang."""
 
-    def __init__(self, n_logical: int, on_done: OnDone):
+    __slots__ = ("remaining", "on_done", "on_error", "failed")
+
+    def __init__(self, n_logical: int, on_done: OnDone,
+                 on_error: Optional[Callable[[str], None]] = None):
         self.remaining = n_logical
         self.on_done = on_done
+        self.on_error = on_error
+        self.failed = False
 
     def note_sent(self) -> None:
         """One logical write finished sending; fires ``on_done`` at zero."""
         self.remaining -= 1
-        if self.remaining == 0:
+        if self.remaining == 0 and not self.failed:
             _fire(self.on_done)
+
+    def note_error(self, reason: str) -> None:
+        """One logical write failed terminally; first failure wins."""
+        if self.failed:
+            return
+        self.failed = True
+        if self.on_error is not None:
+            self.on_error(reason)
+        else:
+            raise TransferError(reason)
 
 
 class WriteState:
@@ -150,10 +171,13 @@ class WriteState:
 
     The receiver-side immediate fires exactly once, when the last stripe's
     payload is fully visible; the sender side notifies the owning
-    ``BatchState`` once all stripes have local completions."""
+    ``BatchState`` once all stripes have local completions.  A stripe that
+    exhausts its retry budget marks the whole logical write ``failed`` —
+    late deliveries of sibling stripes are then ignored (the immediate
+    never fires for a failed write) and the batch takes its error path."""
 
     __slots__ = ("n_parts", "delivered", "sent", "imm", "counter", "batch",
-                 "fabric")
+                 "fabric", "failed")
 
     def __init__(self, n_parts: int, imm: Optional[int],
                  counter: Optional[ImmCounter], batch: BatchState,
@@ -165,9 +189,12 @@ class WriteState:
         self.counter = counter
         self.batch = batch
         self.fabric = fabric
+        self.failed = False
 
     def on_delivered(self, op, now: float) -> None:
         """Receiver-side stripe landing; fires the immediate on the last."""
+        if self.failed:
+            return
         fab = self.fabric
         if fab is not None and fab.health is not None and op.span is not None:
             fab.health.on_deliver(op.span)
@@ -180,9 +207,22 @@ class WriteState:
 
     def on_sent(self, now: float) -> None:
         """Sender-side stripe completion; notifies the batch on the last."""
+        if self.failed:
+            return
         self.sent += 1
         if self.sent == self.n_parts:
             self.batch.note_sent()
+
+    def on_error(self, op, reason: str) -> None:
+        """Terminal stripe failure (from the FaultPlan): fail the logical
+        write once — release the in-flight accounting, never fire the
+        immediate, and surface the error through the batch."""
+        if self.failed:
+            return
+        self.failed = True
+        if self.fabric is not None:
+            self.fabric.inflight_writes -= 1
+        self.batch.note_error(reason)
 
 
 class TransferEngine:
@@ -210,6 +250,13 @@ class TransferEngine:
         self.counters: Dict[int, ImmCounter] = {}
         self._recv_pools: Dict[int, List] = {}
         self._pending_sends: Dict[int, List] = {}
+        # RNR backpressure bound: a NIC RNR-retries only so long before the
+        # QP errors out — cap the parked-send queue per device and surface a
+        # structured BackpressureError (via on_backpressure when set, else
+        # raised) instead of growing without bound
+        self.max_pending_sends = 256
+        self.on_backpressure: Optional[Callable[[BackpressureError], None]] = None
+        self.dropped_sends = 0
         # device -> (WrBatch, created_at): SENDs submitted in the same loop
         # entry coalesce into one enqueue (flushed ENQUEUE_US later)
         self._send_batches: Dict[int, Tuple[WrBatch, float]] = {}
@@ -258,7 +305,18 @@ class TransferEngine:
     def _deliver_send(self, device: int, payload: bytes) -> None:
         pool = self._recv_pools.get(device, [])
         if not pool:
-            self._pending_sends.setdefault(device, []).append(payload)
+            # RNR path: park the payload until a RECV is posted — bounded.
+            # At the cap the SEND is dropped (accounting already settled by
+            # the caller) and the backpressure error is surfaced.
+            pending = self._pending_sends.setdefault(device, [])
+            if len(pending) >= self.max_pending_sends:
+                self.dropped_sends += 1
+                err = BackpressureError(self.node, device, len(pending))
+                if self.on_backpressure is not None:
+                    self.on_backpressure(err)
+                    return
+                raise err
+            pending.append(payload)
             return
         length, cb = pool.pop(0)
         if len(payload) > length:
@@ -365,7 +423,7 @@ class TransferEngine:
             op = WireOp(kind="write", payload=chunk, dst_region=dst_region,
                         dst_offset=dst_offset + off, imm=imm,
                         on_delivered=state.on_delivered, on_sent=state.on_sent,
-                        nbytes=ln)
+                        nbytes=ln, on_error=state.on_error)
             if tr is not None:
                 op.span = tr.begin_wr("write", dst.owner, ln, imm, src=obs_src)
             elif mon is not None:
@@ -389,35 +447,41 @@ class TransferEngine:
 
     def submit_single_write(self, length: int, imm: Optional[int],
                             src: Tuple[MrHandle, int], dst: Tuple[MrDesc, int],
-                            on_done: OnDone = None) -> None:
+                            on_done: OnDone = None,
+                            on_error: Optional[Callable[[str], None]] = None
+                            ) -> None:
         """One-sided WRITE of ``length`` bytes, striped across all NICs;
         ``imm`` (if set) increments the receiver's counter once, when the
-        last stripe lands."""
+        last stripe lands.  ``on_error`` is the terminal failure path under
+        fault injection (see :class:`BatchState`)."""
         handle, src_off = src
         desc, dst_off = dst
         src_group = self.fabric.group(handle.owner)
         payload = src_group.region(handle.region_id).snapshot(src_off, length)
         batch = WrBatch(src_group)
-        self._add_logical_write(batch, BatchState(1, on_done), payload,
-                                desc, dst_off, imm, stripe=True)
+        self._add_logical_write(batch, BatchState(1, on_done, on_error),
+                                payload, desc, dst_off, imm, stripe=True)
         self._enqueue_batch(batch)
 
     def submit_write_batch(self, writes: Sequence[Tuple[int, Optional[int],
                                                         Tuple[MrHandle, int],
                                                         Tuple[MrDesc, int]]],
-                           on_done: OnDone = None, device: int = 0) -> None:
+                           on_done: OnDone = None, device: int = 0,
+                           on_error: Optional[Callable[[str], None]] = None
+                           ) -> None:
         """Batched single-write submission: N ``(length, imm, (handle,
         src_off), (desc, dst_off))`` WRITEs templated and posted in one
         event-loop entry.  Each entry keeps ``submit_single_write``
         semantics (NIC striping, per-write immediate); ``on_done`` fires
-        after ALL entries have sender-side completions."""
+        after ALL entries have sender-side completions; ``on_error`` fires
+        once on the first entry that fails terminally."""
         src_group = self.groups[device]
         n = len(writes)
         if n == 0:
             _fire(on_done)
             return
         batch = WrBatch(src_group)
-        batch_state = BatchState(n, on_done)
+        batch_state = BatchState(n, on_done, on_error)
         for length, imm, (handle, src_off), (desc, dst_off) in writes:
             if handle.owner != src_group.addr:
                 raise ValueError("submit_write_batch: mixed source groups")
@@ -428,7 +492,9 @@ class TransferEngine:
 
     def submit_paged_writes(self, page_len: int, imm: Optional[int],
                             src: Tuple[MrHandle, Pages], dst: Tuple[MrDesc, Pages],
-                            on_done: OnDone = None) -> None:
+                            on_done: OnDone = None,
+                            on_error: Optional[Callable[[str], None]] = None
+                            ) -> None:
         """One WRITE per page; pages rotate across NICs.  All pages are
         templated into a single ``WrBatch`` (one enqueue, per-WR posting
         cost amortised on the worker).
@@ -449,7 +515,7 @@ class TransferEngine:
             _fire(on_done)
             return
         batch = WrBatch(src_group)
-        batch_state = BatchState(n, on_done)
+        batch_state = BatchState(n, on_done, on_error)
         n_nics = len(src_group.domains)
         for k, (so, do) in enumerate(zip(src_offs, dst_offs)):
             self._add_logical_write(batch, batch_state,
@@ -464,20 +530,23 @@ class TransferEngine:
 
     def submit_scatter(self, handle: MrHandle, dsts: Sequence[ScatterDst],
                        imm: Optional[int] = None, on_done: OnDone = None,
-                       device: int = 0) -> None:
+                       device: int = 0,
+                       on_error: Optional[Callable[[str], None]] = None
+                       ) -> None:
         """WRITE a distinct slice of ``handle`` to each peer (paper §3.3).
 
         WR-templating in the paper amortises descriptor setup; posting cost
         is modeled by the DomainGroup's per-WR posting delay (Table 9).
         """
-        self.submit_scatters([(handle, dsts, imm, on_done)], device=device)
+        self.submit_scatters([(handle, dsts, imm, on_done, on_error)],
+                             device=device)
 
-    def submit_scatters(self, groups: Sequence[Tuple[MrHandle,
-                                                     Sequence[ScatterDst],
-                                                     Optional[int], OnDone]],
+    def submit_scatters(self, groups: Sequence[Tuple],
                         device: int = 0) -> None:
         """Batched scatter submission: several ``(handle, dsts, imm,
         on_done)`` scatters templated into ONE WrBatch / event-loop entry.
+        A group may carry an optional 5th element ``on_error`` — the
+        per-scatter terminal failure callback under fault injection.
 
         Completion state stays per-scatter (each ``on_done`` fires when its
         own destinations have sender-side completions; each imm counts its
@@ -491,14 +560,15 @@ class TransferEngine:
         extra = SCATTER_EXTRA_US.get(self.nic_name, 0.0)
         n_nics = len(src_group.domains)
         batch = WrBatch(src_group)
-        for handle, dsts, imm, on_done in groups:
+        for handle, dsts, imm, on_done, *rest in groups:
+            on_error = rest[0] if rest else None
             n = len(dsts)
             if n == 0:
                 _fire(on_done)
                 continue
             region = (src_group.region(handle.region_id)
                       if handle is not None else None)
-            batch_state = BatchState(n, on_done)
+            batch_state = BatchState(n, on_done, on_error)
             for k, sd in enumerate(dsts):
                 desc, off = sd.dst
                 if isinstance(sd, PayloadDst):
@@ -514,20 +584,24 @@ class TransferEngine:
 
     def submit_synthetic_write(self, nbytes: int, imm: Optional[int],
                                dst: MrDesc, on_done: OnDone = None,
-                               device: int = 0) -> None:
+                               device: int = 0,
+                               on_error: Optional[Callable[[str], None]] = None
+                               ) -> None:
         """Timing-only single write (no payload) — cluster-scale benches."""
         src_group = self.groups[device]
         batch = WrBatch(src_group)
-        self._add_logical_write(batch, BatchState(1, on_done), None, dst, 0,
+        self._add_logical_write(batch, BatchState(1, on_done, on_error),
+                                None, dst, 0,
                                 imm, stripe=True, synthetic_bytes=nbytes)
         self._enqueue_batch(batch)
 
-    def submit_synthetic_batch(self, writes: Sequence[Tuple[int, Optional[int],
-                                                            MrDesc, OnDone]],
+    def submit_synthetic_batch(self, writes: Sequence[Tuple],
                                device: int = 0) -> None:
         """Batched timing-only writes: N ``(nbytes, imm, desc, on_done)``
-        entries templated into ONE WrBatch / event-loop entry.  Each entry
-        keeps ``submit_synthetic_write`` semantics (NIC striping, its own
+        entries templated into ONE WrBatch / event-loop entry.  An entry may
+        carry an optional 5th element ``on_error`` (terminal failure
+        callback under fault injection).  Each entry keeps
+        ``submit_synthetic_write`` semantics (NIC striping, its own
         immediate and sender-side ``on_done``) — only the submission is
         coalesced, mirroring ``submit_scatters`` for the payload-free path
         used by cluster-scale benches."""
@@ -535,14 +609,17 @@ class TransferEngine:
         if not writes:
             return
         batch = WrBatch(src_group)
-        for nbytes, imm, desc, on_done in writes:
-            self._add_logical_write(batch, BatchState(1, on_done), None,
-                                    desc, 0, imm, stripe=True,
+        for nbytes, imm, desc, on_done, *rest in writes:
+            on_error = rest[0] if rest else None
+            self._add_logical_write(batch, BatchState(1, on_done, on_error),
+                                    None, desc, 0, imm, stripe=True,
                                     synthetic_bytes=nbytes)
         self._enqueue_batch(batch)
 
     def submit_barrier(self, dsts: Sequence[MrDesc], imm: int,
-                       on_done: OnDone = None, device: int = 0) -> None:
+                       on_done: OnDone = None, device: int = 0,
+                       on_error: Optional[Callable[[str], None]] = None
+                       ) -> None:
         """Immediate-only zero-length WRITE to each peer.
 
         EFA diverges from the RDMA spec and requires a valid descriptor even
@@ -554,7 +631,7 @@ class TransferEngine:
             _fire(on_done)
             return
         batch = WrBatch(src_group)
-        batch_state = BatchState(n, on_done)
+        batch_state = BatchState(n, on_done, on_error)
         n_nics = len(src_group.domains)
         for k, desc in enumerate(dsts):
             self._add_logical_write(batch, batch_state, b"", desc, 0, imm,
@@ -615,6 +692,10 @@ class Fabric:
         self.tracer = None
         self.health = None
         self.recorder = None
+        # fault injection (repro.core.faults): None => post_write's hot path
+        # pays one attribute check and nothing else; attach via
+        # FaultPlan(fabric, ...) which calls attach_faults
+        self.faults = None
         # always-on leak accounting (plain int bumps, no timing impact)
         self.inflight_writes = 0
         self.inflight_sends = 0
@@ -686,6 +767,8 @@ class Fabric:
             self._wire_tracer(addr, group, engine)
         if self.health is not None:
             group.health = self.health
+        if self.faults is not None:
+            group.faults = self.faults
 
     # -- observability (repro.obs) ----------------------------------------------
     def _wire_tracer(self, addr: NetAddr, group: DomainGroup,
@@ -722,6 +805,16 @@ class Fabric:
         The recorder is fed by the health monitor's delivery stream and by
         ctrl-plane instants; it dumps its ring on failure paths only."""
         self.recorder = recorder
+
+    def attach_faults(self, plan) -> None:
+        """Attach a :class:`repro.core.faults.FaultPlan` (or None to
+        detach): wires every existing and future DomainGroup's posting
+        path through the plan's WR interception.  An attached plan with no
+        injected pairs is bit-identical to no plan at all — it draws no
+        RNG and its guard timers cancel without advancing virtual time."""
+        self.faults = plan
+        for group, _engine in self._groups.values():
+            group.faults = plan
 
     def register_auditable(self, name: str, obj) -> None:
         """Register an object exposing ``audit_leaks() -> dict`` (empty =

@@ -1,0 +1,379 @@
+"""Deterministic transport fault injection + per-WR retry/timeout budgets.
+
+Real SRD/RC fabrics lose packets, flush QPs on error, and drop whole peers
+mid-transfer; until this module the simulator only modeled *slowdowns*
+(``Fabric.degrade_pair``), so a lost WRITE would wedge an update forever.
+:class:`FaultPlan` closes that gap with three properties:
+
+* **Deterministic** — every verdict draws from the plan's own
+  ``stable_hash``-derived RNG streams (one per (src, dst) node pair), never
+  from the channels' jitter RNGs, so a seeded fault schedule replays
+  bit-identically across processes and ``PYTHONHASHSEED`` values.
+* **Zero-overhead when absent** — with no plan attached the hot path costs
+  one ``is None`` check; no events are scheduled, no RNG is drawn, and all
+  existing golden latencies stay byte-identical.
+* **Exactly-once completion** — a replayed WriteImm is idempotent on
+  payload (same bytes, same remote offset) but its completion callbacks are
+  deduplicated per work request, so :class:`~repro.core.imm_counter.\
+ImmCounter` increments exactly once per logical WRITE no matter how many
+  replays raced a spurious timeout.
+
+Fault model (per (src, dst) *node* pair, WRITEs only — replaying a SEND is
+not idempotent, so SENDs are never retried; ``kill_peer`` blackholes them
+instead and lease expiry handles the fallout):
+
+* ``drop_prob`` — the WR vanishes on the wire; detected by the delivery
+  timeout, then retried with exponential backoff.
+* ``error_prob`` — the NIC completes the WR in error after ~RTT (QP flush);
+  retried with backoff without waiting for the timeout.
+* ``burst(n)`` — the next ``n`` WRs on the pair all drop (loss burst).
+* ``kill_peer(node)`` — NIC-down: all outstanding tracked WRs touching the
+  node fail at once (channel-level error state) and every later WR or SEND
+  to/from it fails immediately, skipping the retry budget.
+
+On retry exhaustion the WR takes its terminal ``on_error`` path (see
+``WriteState.on_error`` / ``BatchState.note_error`` in ``core.engine``);
+with no handler installed a :class:`TransferError` propagates out of
+``Fabric.run()`` — loud, never a silent hang.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .netsim import stable_hash
+
+
+class TransferError(RuntimeError):
+    """A data-plane transfer failed terminally (retry budget exhausted or
+    peer dead) and no ``on_error`` handler was installed to absorb it."""
+
+
+class BackpressureError(TransferError):
+    """The receiver-not-ready requeue path hit its depth cap.
+
+    Raised (or passed to ``TransferEngine.on_backpressure``) when a SEND
+    arrives at an engine whose pending-send queue for the target device is
+    already ``max_pending_sends`` deep — the simulated analog of RNR-retry
+    exhaustion.  Carries the receiver ``node``, ``device`` and queue
+    ``depth`` for structured handling.
+    """
+
+    def __init__(self, node: str, device: int, depth: int):
+        super().__init__(
+            f"pending-send queue for {node}/gpu{device} full at depth "
+            f"{depth}: receiver posts no RECVs (RNR backpressure)")
+        self.node = node
+        self.device = device
+        self.depth = depth
+
+
+class _OpTrack:
+    """Retry bookkeeping for one in-flight work request (one wire op)."""
+
+    __slots__ = ("op", "group", "dst_group", "nic_index", "src", "dst",
+                 "attempts", "timer", "done", "sent")
+
+    def __init__(self, op, group, dst_group, nic_index, src, dst):
+        self.op = op
+        self.group = group
+        self.dst_group = dst_group
+        self.nic_index = nic_index
+        self.src = src
+        self.dst = dst
+        self.attempts = 0          # retries consumed (0 = first attempt)
+        self.timer: Optional[int] = None
+        self.done = False          # delivered or terminally failed
+        self.sent = False          # sender-side CQE already surfaced
+
+
+class FaultPlan:
+    """Seeded per-pair fault schedule + per-WR retry/timeout policy.
+
+    Constructing the plan attaches it to ``fabric`` (every current and
+    future :class:`~repro.core.domain.DomainGroup` gets a ``faults`` ref)
+    and registers it as an auditable, so ``Fabric.audit()`` reports any WR
+    left tracked-but-unresolved at loop idle.
+
+    Policy knobs: a WR that misses ``timeout_us`` (or completes in error)
+    is reposted after ``backoff_us * backoff_factor**k`` for retry ``k``,
+    up to ``max_retries`` replays; exhaustion takes the WR's ``on_error``
+    terminal path.  All knobs are plain floats — no RNG is involved in the
+    retry schedule itself, only in the per-pair fault verdicts.
+    """
+
+    def __init__(self, fabric, *, seed: int = 0, timeout_us: float = 5000.0,
+                 max_retries: int = 4, backoff_us: float = 50.0,
+                 backoff_factor: float = 2.0):
+        self.fabric = fabric
+        self.loop = fabric.loop
+        self.seed = stable_hash(fabric.seed, "faults", seed)
+        self.timeout_us = float(timeout_us)
+        self.max_retries = int(max_retries)
+        self.backoff_us = float(backoff_us)
+        self.backoff_factor = float(backoff_factor)
+        self._pair_cfg: Dict[Tuple[str, str], dict] = {}
+        self._rngs: Dict[Tuple[str, str], np.random.Generator] = {}
+        self.dead: set = set()
+        self._tracked: Dict[int, _OpTrack] = {}
+        self.stats: Dict[str, int] = {
+            "drops": 0, "errors": 0, "retries": 0, "recovered": 0,
+            "exhausted": 0, "killed": 0, "blackholed_sends": 0}
+        fabric.attach_faults(self)
+        fabric.register_auditable("faults", self)
+
+    # -- configuration ------------------------------------------------------
+
+    @staticmethod
+    def _node(x) -> str:
+        """Coerce a node name / NetAddr / engine-ish object to a node str."""
+        return getattr(x, "node", x if isinstance(x, str) else str(x))
+
+    def inject(self, src, dst, *, drop_prob: float = 0.0,
+               error_prob: float = 0.0) -> None:
+        """Set probabilistic loss on the (src, dst) node pair (WRITEs only).
+
+        ``drop_prob``: the WR silently vanishes (timeout-detected);
+        ``error_prob``: the NIC flushes it with a completion error after
+        ~RTT.  One uniform draw per WR decides: ``u < drop`` => drop,
+        ``u < drop + error`` => error.  Replaces any previous setting for
+        the pair; probabilities of 0 restore the clean fast path (a pair
+        with no active knobs draws no RNG).
+        """
+        if not (0.0 <= drop_prob <= 1.0 and 0.0 <= error_prob <= 1.0
+                and drop_prob + error_prob <= 1.0):
+            raise ValueError(
+                f"invalid probabilities drop={drop_prob} error={error_prob}")
+        key = (self._node(src), self._node(dst))
+        cfg = self._pair_cfg.setdefault(key, {})
+        cfg["drop"] = float(drop_prob)
+        cfg["error"] = float(error_prob)
+
+    def burst(self, src, dst, n: int) -> None:
+        """Drop the next ``n`` WRITEs on the pair unconditionally (adds to
+        any burst already pending) — a deterministic loss burst."""
+        if n < 0:
+            raise ValueError(f"negative burst {n}")
+        key = (self._node(src), self._node(dst))
+        cfg = self._pair_cfg.setdefault(key, {})
+        cfg["burst"] = cfg.get("burst", 0) + int(n)
+
+    def kill_peer(self, node) -> None:
+        """NIC-down for ``node``: every outstanding tracked WR to/from it
+        fails now (one event each, skipping the retry budget — the
+        channel-level error state of a flushed QP), and all later WRs and
+        SENDs touching the node fail/blackhole immediately."""
+        name = self._node(node)
+        self.dead.add(name)
+        for tr in list(self._tracked.values()):
+            if tr.done or (tr.src != name and tr.dst != name):
+                continue
+            self.stats["killed"] += 1
+            self.loop.schedule(0.0, lambda tr=tr: self._exhaust(
+                tr, f"peer {name} died with WR outstanding"))
+
+    def clear(self, src=None, dst=None) -> None:
+        """Remove fault knobs: for one pair when given, else every pair and
+        every dead peer (retry policy and RNG streams are kept)."""
+        if src is None and dst is None:
+            self._pair_cfg.clear()
+            self.dead.clear()
+            return
+        self._pair_cfg.pop((self._node(src), self._node(dst)), None)
+
+    # -- hot path (called from DomainGroup.post_write) ----------------------
+
+    def on_post(self, group, dst_group, op, ch, delay: float,
+                nic_index: int) -> None:
+        """Decide one WR post's fate: deliver, drop, error, or fail-fast.
+
+        Called by ``DomainGroup.post_write`` in place of the direct channel
+        post whenever a plan is attached; also re-entered by retries (the
+        tracked op re-runs the verdict, so a retry can be lost again).
+        """
+        src = group.addr.node
+        dst = dst_group.addr.node
+        if op.kind != "write":
+            # SENDs: never retried (replay is not idempotent). Dead peers
+            # blackhole them — accounting stays clean, delivery never comes,
+            # and the ctrl plane's lease expiry provides failure detection.
+            if src in self.dead or dst in self.dead:
+                self.stats["blackholed_sends"] += 1
+                self._note("send_blackholed", src, dst, op)
+                self.fabric.inflight_sends -= 1
+                return
+            self.loop.schedule(delay, lambda: ch.post(op))
+            return
+        track = self._tracked.get(id(op))
+        if track is None:
+            track = _OpTrack(op, group, dst_group, nic_index, src, dst)
+            self._wrap(track)
+            self._tracked[id(op)] = track
+        if src in self.dead or dst in self.dead:
+            self.stats["killed"] += 1
+            self.loop.schedule(delay, lambda: self._exhaust(
+                track, f"peer dead ({src}->{dst})"))
+            return
+        verdict = self._verdict(src, dst)
+        if verdict == "drop":
+            self.stats["drops"] += 1
+            self._note("drop", src, dst, op)
+            track.timer = self.loop.schedule_cancelable(
+                delay + self.timeout_us, lambda: self._timeout(track))
+            return
+        if verdict == "error":
+            self.stats["errors"] += 1
+            self._note("error", src, dst, op)
+            self.loop.schedule(delay + ch.spec.rtt_us,
+                               lambda: self._on_attempt_failed(
+                                   track, "completion-with-error"))
+            return
+        self.loop.schedule(delay, lambda: ch.post(op))
+        track.timer = self.loop.schedule_cancelable(
+            delay + self.timeout_us, lambda: self._timeout(track))
+
+    def _verdict(self, src: str, dst: str) -> str:
+        """One fault verdict for a WRITE on the pair: ok / drop / error."""
+        cfg = self._pair_cfg.get((src, dst))
+        if cfg is None:
+            return "ok"
+        if cfg.get("burst", 0) > 0:
+            cfg["burst"] -= 1
+            return "drop"
+        dp = cfg.get("drop", 0.0)
+        ep = cfg.get("error", 0.0)
+        if dp <= 0.0 and ep <= 0.0:
+            return "ok"
+        key = (src, dst)
+        rng = self._rngs.get(key)
+        if rng is None:
+            rng = np.random.default_rng(
+                stable_hash(self.seed, "pair", src, dst))
+            self._rngs[key] = rng
+        u = float(rng.random())
+        if u < dp:
+            return "drop"
+        if u < dp + ep:
+            return "error"
+        return "ok"
+
+    # -- retry machinery ----------------------------------------------------
+
+    def _wrap(self, track: _OpTrack) -> None:
+        """Intercept the op's completion callbacks: first completion wins,
+        duplicates from raced replays are suppressed (the exactly-once
+        ImmCounter contract — payload replays are idempotent, callbacks are
+        not)."""
+        op = track.op
+        orig_delivered = op.on_delivered
+
+        def delivered(o, now: float) -> None:
+            if track.done:
+                return
+            track.done = True
+            if track.attempts:
+                self.stats["recovered"] += 1
+            self._cancel_timer(track)
+            self._tracked.pop(id(op), None)
+            orig_delivered(o, now)
+
+        op.on_delivered = delivered
+        if op.on_sent is not None:
+            orig_sent = op.on_sent
+
+            def sent(now: float) -> None:
+                if track.sent:
+                    return
+                track.sent = True
+                orig_sent(now)
+
+            op.on_sent = sent
+
+    def _timeout(self, track: _OpTrack) -> None:
+        """Delivery timeout fired: the attempt is presumed lost (it may in
+        fact still be in flight — the dedup in :meth:`_wrap` makes the
+        resulting replay harmless)."""
+        track.timer = None
+        self._on_attempt_failed(track, "delivery-timeout")
+
+    def _on_attempt_failed(self, track: _OpTrack, why: str) -> None:
+        """Retry with exponential backoff, or exhaust the budget."""
+        if track.done:
+            return
+        if track.attempts >= self.max_retries:
+            self._exhaust(track, why)
+            return
+        track.attempts += 1
+        self.stats["retries"] += 1
+        self._note("retry", track.src, track.dst, track.op,
+                   attempt=track.attempts, why=why)
+        back = self.backoff_us * (self.backoff_factor ** (track.attempts - 1))
+        self.loop.schedule(back, lambda: self._repost(track))
+
+    def _repost(self, track: _OpTrack) -> None:
+        """Replay the WR through the normal posting path (same NIC index,
+        fresh posting cost, fresh fault verdict)."""
+        if track.done:
+            return
+        track.group.post_write(track.dst_group, track.op,
+                               nic_index=track.nic_index)
+
+    def _exhaust(self, track: _OpTrack, why: str) -> None:
+        """Terminal failure: budget exhausted or peer dead.  Takes the op's
+        ``on_error`` path (raising :class:`TransferError` if none) and dumps
+        the flight recorder when one is attached."""
+        if track.done:
+            return
+        track.done = True
+        self._cancel_timer(track)
+        self._tracked.pop(id(track.op), None)
+        self.stats["exhausted"] += 1
+        reason = (f"WR {track.src}->{track.dst} failed after "
+                  f"{track.attempts} retr{'y' if track.attempts == 1 else 'ies'}: {why}")
+        self._note("exhausted", track.src, track.dst, track.op, why=why)
+        rec = getattr(self.fabric, "recorder", None)
+        if rec is not None:
+            rec.dump("retry-exhausted")
+        op = track.op
+        if op.on_error is not None:
+            op.on_error(op, reason)
+        else:
+            raise TransferError(reason)
+
+    def _cancel_timer(self, track: _OpTrack) -> None:
+        """Disarm the track's pending timeout, if any."""
+        if track.timer is not None:
+            self.loop.cancel(track.timer)
+            track.timer = None
+
+    def _note(self, kind: str, src: str, dst: str, op, **info) -> None:
+        """Feed the observability loop: HealthMonitor counter + tracer
+        instant (mirrored into the flight-recorder ring when only the
+        recorder is attached).  Pure bookkeeping — no events, no RNG."""
+        mon = self.fabric.health
+        if mon is not None:
+            mon.on_fault(kind)
+        args = {"src": src, "dst": dst, "nbytes": op.nbytes}
+        args.update(info)
+        tr = self.fabric.tracer
+        if tr is not None:
+            tr.instant("fault", f"{kind}:{src}>{dst}", args)
+        else:
+            rec = getattr(self.fabric, "recorder", None)
+            if rec is not None:
+                rec.note("fault", f"{kind}:{src}>{dst}", args)
+
+    # -- audit --------------------------------------------------------------
+
+    def outstanding(self) -> List[Tuple[str, str, str, int]]:
+        """Unresolved tracked WRs as (src, dst, kind, attempts) tuples."""
+        return [(t.src, t.dst, t.op.kind, t.attempts)
+                for t in self._tracked.values() if not t.done]
+
+    def audit_leaks(self) -> Dict[str, int]:
+        """Auditable hook: tracked-but-unresolved WRs at loop idle (empty
+        dict = clean — every WR either delivered or took its error path)."""
+        out = self.outstanding()
+        return {"tracked_wrs": len(out)} if out else {}

@@ -40,6 +40,7 @@ class EventLoop:
     def __init__(self) -> None:
         self._queue: List = []
         self._counter = itertools.count()
+        self._cancelled: set = set()
         self.now: float = 0.0
         self._running = False
 
@@ -53,11 +54,33 @@ class EventLoop:
         """Run ``fn`` at absolute virtual time ``t_us`` (clamped to now)."""
         self.schedule(max(0.0, t_us - self.now), fn)
 
+    def schedule_cancelable(self, delay_us: float, fn: Callable[[], None]) -> int:
+        """Like :meth:`schedule` but returns a handle for :meth:`cancel`.
+
+        Used for guard timers (per-WR delivery timeouts): a cancelled entry
+        is skipped when popped WITHOUT advancing ``now``, so an armed-then-
+        cancelled timer never inflates the run's final virtual time — a
+        fault-plan run whose timers all cancel ends at the same ``now`` as
+        one that never armed them.
+        """
+        if delay_us < 0:
+            raise ValueError(f"negative delay {delay_us}")
+        seq = next(self._counter)
+        heapq.heappush(self._queue, (self.now + delay_us, seq, fn))
+        return seq
+
+    def cancel(self, handle: int) -> None:
+        """Cancel a handle from :meth:`schedule_cancelable` (lazy removal)."""
+        self._cancelled.add(handle)
+
     def run_until_idle(self, max_events: int = 10_000_000) -> float:
         """Run until no events remain.  Returns the final virtual time."""
         n = 0
         while self._queue:
-            t, _, fn = heapq.heappop(self._queue)
+            t, seq, fn = heapq.heappop(self._queue)
+            if self._cancelled and seq in self._cancelled:
+                self._cancelled.discard(seq)
+                continue
             self.now = max(self.now, t)
             fn()
             n += 1
@@ -69,7 +92,10 @@ class EventLoop:
         """Run until ``pred()`` is true (checked after each event)."""
         n = 0
         while self._queue and not pred():
-            t, _, fn = heapq.heappop(self._queue)
+            t, seq, fn = heapq.heappop(self._queue)
+            if self._cancelled and seq in self._cancelled:
+                self._cancelled.discard(seq)
+                continue
             self.now = max(self.now, t)
             fn()
             n += 1
@@ -81,8 +107,8 @@ class EventLoop:
 
     @property
     def pending(self) -> int:
-        """Number of not-yet-run events in the queue."""
-        return len(self._queue)
+        """Number of not-yet-run events in the queue (cancelled excluded)."""
+        return len(self._queue) - len(self._cancelled)
 
 
 @dataclass(frozen=True)

@@ -46,6 +46,10 @@ class WireOp:
     # observability (repro.obs): lifecycle span stamped by the transport
     # hooks when a tracer is attached; None => hooks are no-ops
     span: Optional[object] = None
+    # terminal failure hook (repro.core.faults): invoked as
+    # ``on_error(op, reason)`` when the retry budget is exhausted or the
+    # peer dies; None on SENDs and on fabrics without a FaultPlan
+    on_error: Optional[Callable[["WireOp", str], None]] = None
 
 
 class Channel:

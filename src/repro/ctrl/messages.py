@@ -231,3 +231,24 @@ class ReqDone:
     peer_id: str
     ttft_us: float
     tokens: List[int] = field(default_factory=list)
+
+
+@wire("XFLR")
+@dataclass
+class XferFail:
+    """Structured mid-transfer failure notification (fault injection).
+
+    Prefiller -> decoder: a KV handoff WRITE exhausted its retry budget —
+    the decoder frees the attempt's pages and immediate expectations, then
+    forwards the message to the scheduler (``reply_to`` of the attempt),
+    which re-routes with a bumped attempt number.  ``peer_id`` names the
+    failing prefiller.  The prefiller sends ``attempt=-1`` (DispatchReq
+    carries no attempt number, keeping fault-free wire bytes bit-exact);
+    the decoder stamps the authoritative attempt from its pending state
+    before forwarding, and the scheduler uses it to drop notifications
+    that raced a re-route (same contract as CANCEL)."""
+
+    request_id: int
+    attempt: int
+    peer_id: str
+    reason: str = ""

@@ -91,14 +91,18 @@ class TransferPlan:
     def submit_span(self, engine, src_handle, src_pages: Sequence[int],
                     dst_desc, dst_pages: Sequence[int], base_imm: int,
                     lo: int, hi: int,
-                    on_sent: Optional[Callable[[int], None]] = None) -> int:
+                    on_sent: Optional[Callable[[int], None]] = None,
+                    on_error: Optional[Callable[[str], None]] = None) -> int:
         """WRITE everything unlocked by layers [lo, hi): ONE WrBatch.
 
         ``src_pages``/``dst_pages`` are the two pools' page ids in canonical
         slot order.  Each component rides its own immediate
         (``base_imm + comp_idx``); ``on_sent(n)`` fires once per component
         group with its write count when that group has sender completions.
-        Returns the number of WRITEs templated."""
+        ``on_error(reason)`` (fault injection) fires when a component
+        group's WRITEs exhaust their retry budget — at most once per group;
+        the caller dedups across groups.  Returns the number of WRITEs
+        templated."""
         stride = self.slot_bytes
         per_comp: Dict[int, List[ScatterDst]] = {}
         for ci, slot in self.span_writes(lo, hi):
@@ -113,7 +117,7 @@ class TransferPlan:
             dsts = per_comp[ci]
             cb = ((lambda n=len(dsts): on_sent(n))
                   if on_sent is not None else None)
-            groups.append((src_handle, dsts, base_imm + ci, cb))
+            groups.append((src_handle, dsts, base_imm + ci, cb, on_error))
         engine.submit_scatters(groups)
         return sum(len(d) for d in per_comp.values())
 

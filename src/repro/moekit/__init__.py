@@ -1,5 +1,6 @@
-from .dispatch import MoEConfig, MoEEndpoint, PeerPorts, multi_arange
+from .dispatch import (DispatchError, MoEConfig, MoEEndpoint, PeerPorts,
+                       multi_arange)
 from .driver import make_endpoints, oracle, run_moe_layer
 
 __all__ = ["MoEConfig", "MoEEndpoint", "PeerPorts", "multi_arange",
-           "make_endpoints", "run_moe_layer", "oracle"]
+           "make_endpoints", "run_moe_layer", "oracle", "DispatchError"]

@@ -35,11 +35,12 @@ combined output against a dense oracle.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from ..core import Fabric, MrDesc, PayloadDst, ScatterDst, TransferEngine
+from ..core import (Fabric, MrDesc, PayloadDst, ScatterDst, TransferEngine,
+                    TransferError)
 from ..obs import traced_phase
 
 KERNEL_LAUNCH_US = 15.0      # launch -> first transfer (paper §6.2)
@@ -50,6 +51,21 @@ ROUTE_IMM = 0x520
 TOK_IMM = 0x521
 COMB_IMM = 0x522
 BARRIER_IMM = 0x523
+
+
+class DispatchError(TransferError):
+    """A MoE dispatch/combine WRITE exhausted its retry budget (dead or
+    unreachable peer).  Raised out of ``fabric.run()`` — instead of the
+    round silently hanging on an ImmCounter that can never fire — after
+    the endpoint's round state has been cleaned up via
+    :meth:`MoEEndpoint.abort_round`."""
+
+    def __init__(self, rank: int, round_id: int, reason: str):
+        super().__init__(
+            f"moe rank{rank} round {round_id} dispatch failed: {reason}")
+        self.rank = rank
+        self.round_id = round_id
+        self.reason = reason
 
 
 def multi_arange(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
@@ -149,14 +165,43 @@ class MoEEndpoint:
             raise ValueError("ports must cover ranks 0..N-1 in order")
         self.ports = ports
 
+    # -- fault cleanup ------------------------------------------------------
+    def abort_round(self) -> None:
+        """Drop the current round's immediate expectations (route, token
+        and combine counters) so a failed round leaves no unfulfilled
+        watchers behind — ``Fabric.audit()`` stays clean and the next
+        round's (round-scoped) immediates start fresh."""
+        ctr = self.engine.counters[0]
+        for base in (ROUTE_IMM, TOK_IMM, COMB_IMM):
+            ctr.reset(base + (self.round << 8))
+
+    def _fail(self, ctx: Dict, phase: str, reason: str,
+              on_error: Optional[Callable[["DispatchError"], None]]) -> None:
+        if ctx.get("failed"):
+            return               # sibling WRITE of the same round already did
+        ctx["failed"] = True
+        self.stats["failures"] = self.stats.get("failures", 0) + 1
+        self.abort_round()
+        err = DispatchError(self.rank, self.round, f"{phase}: {reason}")
+        if on_error is not None:
+            on_error(err)
+            return
+        raise err
+
     # -- dispatch ------------------------------------------------------------
     def dispatch(self, tokens: np.ndarray, eids: np.ndarray,
-                 on_complete: Callable[[], None]) -> Dict:
+                 on_complete: Callable[[], None],
+                 on_error: Optional[Callable[["DispatchError"], None]] = None
+                 ) -> Dict:
         """tokens: (T, token_bytes) uint8; eids: (T, top_k) int32 global ids.
 
         Returns a context dict used later by combine; ``on_complete`` fires
         when this rank has received ALL tokens routed to its local experts
-        (and can run its grouped GEMM)."""
+        (and can run its grouped GEMM).  Under fault injection a WRITE that
+        exhausts its retry budget (e.g. a dead peer) aborts the round:
+        expectations are reset (:meth:`abort_round`) and a
+        :class:`DispatchError` is raised out of ``fabric.run()`` — or
+        handed to ``on_error`` when provided."""
         cfg = self.cfg
         N, E, R = cfg.n_ranks, cfg.n_experts, cfg.top_k
         T = tokens.shape[0]
@@ -209,10 +254,12 @@ class MoEEndpoint:
                     dst=(self.ports[r].d_priv, self.rank * cfg.t_priv * tb)))
             # routes + private tokens ride ONE WrBatch (one proxy handoff);
             # each keeps its own imm so completion accounting is unchanged
+            xerr = (lambda reason: self._fail(ctx, "dispatch.p1", reason,
+                                              on_error))
             with traced_phase(self.fabric, "moe.dispatch.p1"):
                 self.engine.submit_scatters([
-                    (self.h_route_send, route_dsts, route_imm, None),
-                    (None, priv_dsts, tok_imm, None),
+                    (self.h_route_send, route_dsts, route_imm, None, xerr),
+                    (None, priv_dsts, tok_imm, None, xerr),
                 ])
 
         tr = self.fabric.tracer
@@ -251,7 +298,9 @@ class MoEEndpoint:
                 with traced_phase(self.fabric, "moe.dispatch.p2"):
                     self.engine.submit_scatters(
                         [(None, shared_dsts, tok_imm,
-                          lambda: ctx.__setitem__("sent_at", self.fabric.now))])
+                          lambda: ctx.__setitem__("sent_at", self.fabric.now),
+                          lambda reason: self._fail(ctx, "dispatch.p2",
+                                                    reason, on_error))])
             else:
                 ctx["sent_at"] = self.fabric.now
 
@@ -320,9 +369,13 @@ class MoEEndpoint:
 
     # -- combine ----------------------------------------------------------------
     def combine(self, ctx: Dict, expert_out: List[np.ndarray],
-                on_complete: Callable[[], None]) -> None:
+                on_complete: Callable[[], None],
+                on_error: Optional[Callable[["DispatchError"], None]] = None
+                ) -> None:
         """Send processed tokens back to their sources: ONE zero-copy
-        scatter (a single WrBatch enqueue, one WRITE per source)."""
+        scatter (a single WrBatch enqueue, one WRITE per source).  Fault
+        handling mirrors :meth:`dispatch` — retry-budget exhaustion aborts
+        the round and raises / reports a :class:`DispatchError`."""
         from ..kernels.host import moe_pack_host
         cfg = self.cfg
         tb = cfg.token_bytes
@@ -355,7 +408,10 @@ class MoEEndpoint:
 
         def proxy_send() -> None:
             with traced_phase(self.fabric, "moe.combine"):
-                self.engine.submit_scatters([(None, dsts, comb_imm, None)])
+                self.engine.submit_scatters(
+                    [(None, dsts, comb_imm, None,
+                      lambda reason: self._fail(ctx, "combine", reason,
+                                                on_error))])
 
         tr = self.fabric.tracer
         if tr is not None:

@@ -117,6 +117,9 @@ class HealthMonitor:
         self.k_windows = int(k_windows)
         self.pairs: Dict[Tuple[str, str], PairHealth] = {}
         self.flags: List[dict] = []
+        # fault-plan event counters (repro.core.faults): kind -> count,
+        # bumped via on_fault from the plan's retry/exhaust/kill paths
+        self.fault_counts: Dict[str, int] = {}
         # enqueue-side counters (bumped per WrBatch handoff, same ground
         # truth as BatchStats / Tracer.n_*), keyed by submitting engine
         self.n_wrs = 0
@@ -227,6 +230,12 @@ class HealthMonitor:
                          {"ratio": ratio, "window": ph.windows})
             rec.dump("health-flag")
 
+    def on_fault(self, kind: str) -> None:
+        """Fault-plan hook: count one transport fault event by kind
+        (``drop`` / ``completion-error`` / ``retry`` / ``exhausted`` /
+        ``send_blackholed`` ...).  Plain dict bump — never perturbs time."""
+        self.fault_counts[kind] = self.fault_counts.get(kind, 0) + 1
+
     def reset_flags(self) -> None:
         """Re-arm the detector: clear flags and per-pair flagged state."""
         self.flags.clear()
@@ -293,4 +302,5 @@ class HealthMonitor:
             "pairs": {f"{s}>{d}": ph.as_dict()
                       for (s, d), ph in sorted(self.pairs.items())},
             "flags": list(self.flags),
+            "faults": dict(sorted(self.fault_counts.items())),
         }

@@ -35,17 +35,25 @@ class FlightRecorder:
     Attach with ``FlightRecorder(fabric)``; record points call
     :meth:`record` (per-WR delivery summaries, from the health monitor) or
     :meth:`note` (sparse named events: instants, anomalies, breaches).
-    ``capacity`` bounds memory; ``max_dumps`` bounds disk.
+    ``capacity`` bounds memory; ``max_dumps`` bounds disk globally and
+    ``max_per_reason`` bounds it per dump reason, so a chaos run whose
+    fault plan exhausts hundreds of retries (reason ``retry-exhausted``)
+    cannot crowd out the one ``update-abort`` dump that matters.
+    First-class dump reasons: ``retry-exhausted`` (per-WR retry budget
+    spent), ``update-abort`` (rlweights update rolled back), plus the
+    PR-7/8 reasons (``commit-anomaly``, ``slo-breach``, ``health-flag``).
     """
 
     def __init__(self, fabric, *, capacity: int = 2048, max_dumps: int = 8,
-                 dump_dir: Optional[str] = None):
+                 max_per_reason: int = 2, dump_dir: Optional[str] = None):
         self.fabric = fabric
         self.loop = fabric.loop
         self.ring: deque = deque(maxlen=int(capacity))
         self.max_dumps = int(max_dumps)
+        self.max_per_reason = int(max_per_reason)
         self.dump_dir = dump_dir
         self.dumps: List[str] = []      # paths written so far
+        self._reason_counts: dict = {}  # reason -> dumps written
         self.n_events = 0               # total ever recorded (ring may drop)
         fabric.attach_recorder(self)
 
@@ -67,8 +75,11 @@ class FlightRecorder:
 
     def dump(self, reason: str) -> Optional[str]:
         """Write the ring (+ health summary when a monitor is attached) as
-        JSON; returns the path, or None once ``max_dumps`` is exhausted."""
+        JSON; returns the path, or None once ``max_dumps`` (global) or
+        ``max_per_reason`` (for this ``reason``) is exhausted."""
         if len(self.dumps) >= self.max_dumps:
+            return None
+        if self._reason_counts.get(reason, 0) >= self.max_per_reason:
             return None
         d = self._dir()
         os.makedirs(d, exist_ok=True)
@@ -87,4 +98,5 @@ class FlightRecorder:
             json.dump(doc, f, indent=2, sort_keys=True)
             f.write("\n")
         self.dumps.append(path)
+        self._reason_counts[reason] = self._reason_counts.get(reason, 0) + 1
         return path

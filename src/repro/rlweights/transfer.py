@@ -189,6 +189,7 @@ class CommitGate:
         self.flips: List[Tuple[float, int]] = []   # (virtual time, update_id)
         self.expected: Dict[int, int] = {}         # update_id -> armed n_data
         self.anomalies: List[dict] = []
+        self.aborted_ids: List[int] = []           # update_ids rolled back
 
     def _anomaly(self, update_id: int, kind: str, info: dict) -> None:
         fab = self.engine.fabric
@@ -237,6 +238,20 @@ class CommitGate:
                                      lambda: check("data"), device=self.device)
         self.engine.expect_imm_count(commit_imm(update_id), 1,
                                      lambda: check("commit"), device=self.device)
+
+    def abort(self, update_id: int) -> None:
+        """Roll back an armed-but-uncommitted update: reset both of the
+        update's immediate counters (dropping their watchers, so late data
+        WRITEs land bytes but fire nothing) and forget the armed
+        expectation.  The coordinator calls this when it withholds the
+        commit barrier — the rank's version never flips, the next
+        ``update_id``'s immediates are untouched, and ``Fabric.audit()``
+        stays clean (no unfulfilled expectations survive)."""
+        ctr = self.engine.counters[self.device]
+        ctr.reset(data_imm(update_id))
+        ctr.reset(commit_imm(update_id))
+        self.expected.pop(update_id, None)
+        self.aborted_ids.append(update_id)
 
     def audit_commits(self, update_id: int) -> List[dict]:
         """Post-quiesce over-delivery check: the landed data/commit counters
@@ -362,10 +377,15 @@ class RankPipeline:
         self.h2d_work_us = 0.0    # pure stage service time (Table-5 style:
         self.prep_work_us = 0.0   # excludes watermark-admission stalls)
         self.n_flushes = 0
+        self.aborted = False
         self._ready: List[StageChunk] = []
         self._flush_scheduled = False
         # assigned by run_pipelined_update: shared sent-accounting + release
         self.chunk_done_cb: Callable[[StageChunk], None] = self.chunk_sent
+        # terminal per-chunk failure (fault injection): assigned by the
+        # launcher to its abort handler; default swallows (no fault plan)
+        self.chunk_error_cb: Callable[[StageChunk, str], None] = \
+            lambda c, reason: None
         # online retuning (chunk_bytes="online"): per-rank tuner + the
         # launcher's remaining-count adjustment when queued chunks merge
         self.tuner = None
@@ -376,6 +396,8 @@ class RankPipeline:
         self._admit()
 
     def _admit(self) -> None:
+        if self.aborted:
+            return
         while self.queue:
             c = self.queue[-1]
             if self.staged + c.stage_bytes > self.watermark:
@@ -405,6 +427,11 @@ class RankPipeline:
             self.loop.schedule_at(t_ready, lambda c=c: self._prepared(c))
 
     def _prepared(self, c: StageChunk) -> None:
+        if self.aborted:
+            # admitted before the abort, prepared after: release its
+            # staging reservation instead of submitting it
+            self.staged -= c.stage_bytes
+            return
         self._ready.append(c)
         if not self._flush_scheduled:
             self._flush_scheduled = True
@@ -423,6 +450,20 @@ class RankPipeline:
         if self.tracer is not None:
             self.tracer.gauge("rlweights.staged_bytes", self.staged)
         self._admit()
+
+    def abort(self) -> None:
+        """Stop this rank's pipeline: drop un-admitted chunks and release
+        the staging of prepared-but-unsubmitted ones.  Chunks already on
+        the wire run to their own completion (success frees staging via
+        :meth:`chunk_sent`; failure via the launcher's error handler) — so
+        at loop-idle an aborted pipeline audits clean."""
+        self.aborted = True
+        self.queue.clear()
+        for c in self._ready:
+            self.staged -= c.stage_bytes
+        self._ready.clear()
+        if self.tracer is not None:
+            self.tracer.gauge("rlweights.staged_bytes", self.staged)
 
     def retarget_chunk_bytes(self, target: int) -> int:
         """Merge-only rechunk of the not-yet-admitted queue toward ``target``
@@ -578,7 +619,8 @@ def launch_pipelined_update(
         watermark_bytes: int, window_us: float, h2d: bool,
         h2d_gbps: float, prep_gbps: float,
         tuner_factory: Optional[Callable[[int, "RankPipeline"],
-                                         Optional[OnlineChunkTuner]]] = None
+                                         Optional[OnlineChunkTuner]]] = None,
+        on_abort: Optional[Callable[[str], None]] = None
         ) -> Callable[[], Dict[str, float]]:
     """Create and START every rank's pipeline NOW — without draining the
     fabric — and return a ``collect()`` closure for the stats once the run
@@ -598,10 +640,19 @@ def launch_pipelined_update(
     completion and may merge the queued tail into bigger chunks — the
     launcher's remaining-count is adjusted through ``chunks_merged_cb`` so
     the commit still fires after the *last actually-sent* chunk.
+
+    **Abort protocol** (fault injection): when a chunk's WRITEs exhaust
+    their retry budget, the chunk's error callback fires ``chunk_error`` —
+    the first failure aborts every rank's pipeline (un-admitted chunks
+    dropped, staged-but-unsubmitted reservations released), the commit is
+    permanently withheld, the flight recorder dumps with reason
+    ``update-abort``, and ``on_abort(reason)`` lets the caller roll back
+    consumer-side state (:meth:`CommitGate.abort`).  Chunks already on the
+    wire drain to their own terminal state, so the fabric audits clean.
     """
     pipes: Dict[int, RankPipeline] = {}
     state = {"remaining": sum(len(v) for v in chunks_by_rank.values()),
-             "writes_sent": 0}
+             "writes_sent": 0, "aborted": False, "abort_reason": None}
     t0 = fabric.now
 
     def chunk_done(pipe: RankPipeline, c: StageChunk) -> None:
@@ -610,8 +661,31 @@ def launch_pipelined_update(
         state["remaining"] -= 1
         if pipe.tuner is not None:
             pipe.tuner.on_chunk_done(pipe)
-        if state["remaining"] == 0 and commit_fn is not None:
+        if (state["remaining"] == 0 and commit_fn is not None
+                and not state["aborted"]):
             commit_fn()
+
+    def chunk_error(pipe: RankPipeline, c: StageChunk, reason: str) -> None:
+        # the failed chunk's staging was reserved at admission and will
+        # never see a sender-side completion — release it here
+        pipe.staged -= c.stage_bytes
+        if state["aborted"]:
+            return                  # a sibling already tore the update down
+        state["aborted"] = True
+        state["abort_reason"] = reason
+        for p in pipes.values():
+            p.abort()
+        tr = fabric.tracer
+        info = {"rank": pipe.label, "param": c.param, "reason": reason}
+        if tr is not None:
+            tr.instant("rlweights", "update_abort", info)
+        rec = getattr(fabric, "recorder", None)
+        if rec is not None:
+            if tr is None:          # tracer instants mirror into the ring
+                rec.note("rlweights", "update_abort", info)
+            rec.dump("update-abort")
+        if on_abort is not None:
+            on_abort(reason)
 
     def chunks_merged(n: int) -> None:
         # n merges = n fewer chunk completions still to come; merged chunks
@@ -627,6 +701,8 @@ def launch_pipelined_update(
             submit_window=lambda w: None)      # bound just below
         pipe.submit_window = make_submit(rank, pipe)
         pipe.chunk_done_cb = lambda c, pipe=pipe: chunk_done(pipe, c)
+        pipe.chunk_error_cb = (
+            lambda c, reason, pipe=pipe: chunk_error(pipe, c, reason))
         pipe.chunks_merged_cb = chunks_merged
         if tuner_factory is not None:
             pipe.tuner = tuner_factory(rank, pipe)
@@ -653,7 +729,9 @@ def launch_pipelined_update(
                                      default=0),
             "watermark_ok": all(p.peak_staged <= watermark_bytes
                                 for p in pipes.values()),
-            "all_sent": state["remaining"] == 0,
+            "all_sent": state["remaining"] == 0 and not state["aborted"],
+            "aborted": state["aborted"],
+            "abort_reason": state["abort_reason"],
         }
 
     return collect
@@ -739,10 +817,18 @@ def launch_p2p_update(cluster: Cluster, routes: List[Route], *,
                  [ScatterDst(len=c.nbytes, src=c.src_off,
                              dst=(cluster.infer_descs[ir], doff))
                   for ir, doff in c.targets],
-                 imm, (lambda c=c: pipe.chunk_done_cb(c)))
+                 imm, (lambda c=c: pipe.chunk_done_cb(c)),
+                 (lambda reason, c=c: pipe.chunk_error_cb(c, reason)))
                 for c in window])
 
         return submit
+
+    def on_abort(reason: str) -> None:
+        # coordinator withholds the commit barrier; roll back each
+        # consumer's armed gate so no expectation leaks (online gates are
+        # unarmed at this point — resetting their imms is a no-op)
+        for g in gates:
+            g.abort(update_id)
 
     def commit_fn() -> None:
         if online and commit:
@@ -770,7 +856,8 @@ def launch_p2p_update(cluster: Cluster, routes: List[Route], *,
         commit_fn=commit_fn if commit else None,
         watermark_bytes=watermark_bytes, window_us=window_us, h2d=h2d,
         h2d_gbps=h2d_gbps, prep_gbps=prep_gbps,
-        tuner_factory=tuner_factory)
+        tuner_factory=tuner_factory,
+        on_abort=on_abort if commit else None)
 
     def collect() -> Dict[str, float]:
         stats = collect_pipe()
@@ -780,10 +867,13 @@ def launch_p2p_update(cluster: Cluster, routes: List[Route], *,
             stats["chunk_bytes_final"] = max(
                 (t.target for t in tuners.values()), default=chunk_bytes)
         if commit:
-            for g in gates:
-                g.audit_commits(update_id)
+            if not stats["aborted"]:
+                # post-quiesce over-delivery audit is meaningless after an
+                # abort: the gates' counters were deliberately reset
+                for g in gates:
+                    g.audit_commits(update_id)
             stats["commits"] = [len(g.flips) for g in gates]
-            stats["committed"] = all(
+            stats["committed"] = (not stats["aborted"]) and all(
                 len(g.flips) == 1 and g.flips[0][1] == update_id
                 for g in gates)
             stats["commit_anomalies"] = sum(len(g.anomalies) for g in gates)

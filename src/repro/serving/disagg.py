@@ -261,7 +261,35 @@ class Prefiller:
         tail_handle, _ = self.engine.reg_mr(tail_buf)
 
         cnt = {"done": 0}
+        failed = {"sent": False}
         total_writes = plan.total_writes + 1
+
+        def on_xfer_error(reason: str) -> None:
+            # a KV WRITE exhausted its retry budget: abandon THIS attempt
+            # (no further spans, pages freed by the poll loop) and surface
+            # a structured failure to the decoder, which forwards it to
+            # the scheduler for a re-route.  First failure wins — sibling
+            # component groups failing later are folded into it; a
+            # cancelled attempt stays silent (its decoder-side state is
+            # gone, so a late XferFail could only mis-target a re-route).
+            # The prefiller doesn't know its attempt number (DispatchReq
+            # stays attempt-free so fault-free wire bytes match pre-fault
+            # builds bit-exactly) — it sends -1 and the decoder stamps the
+            # authoritative attempt from its pending state.
+            if (failed["sent"] or not self.alive
+                    or req.request_id in self._cancelled):
+                return
+            failed["sent"] = True
+            self.stats["xfer_failures"] = \
+                self.stats.get("xfer_failures", 0) + 1
+            tr = self.fabric.tracer
+            if tr is not None:
+                tr.instant("serving", f"xfer_fail:req{req.request_id}",
+                           {"reason": reason})
+            peer = self.client.peer_id if self.client else self.engine.node
+            self.engine.submit_send(req.decoder_addr, m.encode(m.XferFail(
+                request_id=req.request_id, attempt=-1,
+                peer_id=peer, reason=reason)))
 
         def send_layers(lo: int, hi: int) -> None:
             # Model layers [lo, hi) completed since the last poll land as
@@ -269,13 +297,14 @@ class Prefiller:
             # rides a single WrBatch, distinct imm per component.  The UVM
             # poller coalesces increments, so coalesced layers share it too.
             if (not self.alive or req.request_id in self._cancelled
-                    or hi <= lo):
+                    or failed["sent"] or hi <= lo):
                 return
             with traced_phase(self.fabric, "serving.kv_span"):
                 n = plan.submit_span(
                     self.engine, self.pool.handle, local_pages,
                     req.kv_desc, req.pages, req.imm, lo, hi,
-                    on_sent=lambda n: cnt.__setitem__("done", cnt["done"] + n))
+                    on_sent=lambda n: cnt.__setitem__("done", cnt["done"] + n),
+                    on_error=on_xfer_error)
             if n:
                 self.span_log.append((req.request_id, lo, hi, n))
 
@@ -287,13 +316,15 @@ class Prefiller:
                                       lambda l=l: watcher.store(l + 1))
 
         def send_tail() -> None:
-            if not self.alive or req.request_id in self._cancelled:
+            if (not self.alive or req.request_id in self._cancelled
+                    or failed["sent"]):
                 return
             with traced_phase(self.fabric, "serving.tail"):
                 self.engine.submit_single_write(
                     tail.size, req.imm + plan.n_imms, (tail_handle, 0),
                     (req.tail_desc, req.tail_idx * tail.size),
-                    on_done=lambda: cnt.__setitem__("done", cnt["done"] + 1))
+                    on_done=lambda: cnt.__setitem__("done", cnt["done"] + 1),
+                    on_error=on_xfer_error)
 
         self.fabric.loop.schedule(
             delay0 + cfg.n_layers * self.layer_compute_us + 1.0, send_tail)
@@ -301,7 +332,7 @@ class Prefiller:
         def poll_free() -> None:
             if not self.alive:
                 return        # crashed: the node (and its pool) is gone
-            if req.request_id in self._cancelled:
+            if req.request_id in self._cancelled or failed["sent"]:
                 self.pool.free(local_pages)
                 self.inflight -= 1
                 self.inflight_slots -= plan.n_slots
@@ -354,6 +385,8 @@ class Decoder:
         self.results: Dict[int, Dict] = {}
         self._pending: Dict[int, Dict] = {}   # rid -> in-flight attempt state
         self._attempt: Dict[int, int] = {}    # rid -> newest attempt seen
+        # (rid, attempt, reason) per XferFail accepted — fault forensics
+        self.xfer_failed: List[tuple] = []
         self.engine.submit_recvs(1 << 16, 32, self._on_msg)
         self.client: Optional[ControlClient] = None
         if ctrl is not None:
@@ -412,6 +445,29 @@ class Decoder:
             # can deliver a stale CANCEL after its re-route's SUBMIT
             if msg.attempt == self._attempt.get(msg.request_id):
                 self.cancel(msg.request_id)
+        elif isinstance(msg, m.XferFail):
+            # prefiller reports a mid-transfer retry exhaustion: free this
+            # attempt's pages + imm expectations and escalate to the
+            # scheduler for a re-route.  ``_pending`` presence is the
+            # staleness guard — each attempt's prefiller sends at most one
+            # XferFail (and none once cancelled), and the re-route that
+            # would supersede this attempt is only triggered *by* this
+            # message passing through here, so a pending entry always
+            # belongs to the reporting prefiller's attempt.  The decoder
+            # stamps the authoritative attempt number before forwarding
+            # (the prefiller sent -1; DispatchReq carries no attempt so
+            # fault-free wire bytes stay bit-identical).
+            st = self._pending.get(msg.request_id)
+            if st is None:
+                return      # attempt already cancelled / completed
+            attempt = st["attempt"]
+            self.xfer_failed.append(
+                (msg.request_id, attempt, msg.reason))
+            self.cancel(msg.request_id)
+            if st["reply_to"] is not None:
+                self.engine.submit_send(st["reply_to"], m.encode(m.XferFail(
+                    request_id=msg.request_id, attempt=attempt,
+                    peer_id=msg.peer_id, reason=msg.reason)))
 
     def cancel(self, request_id: int) -> bool:
         """Abandon an in-flight attempt: free pages + tail slot, drop every

@@ -53,12 +53,15 @@ POLICIES = ("round-robin", "least-loaded")
 class Scheduler:
     def __init__(self, fabric: Fabric, ctrl: ControlPlane, *,
                  node: str = "sched", policy: str = "round-robin",
-                 slo=None):
+                 slo=None, max_attempts: int = 4):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.fabric = fabric
         self.ctrl = ctrl
         self.policy = policy
+        # re-route budget per request under mid-transfer failures
+        # (XferFail): attempts beyond this land in ``failed`` terminally
+        self.max_attempts = max_attempts
         # optional repro.serving.slo.SloTracker: fed per completion, read
         # by the Autoscaler as its percentile latency signal
         self.slo = slo
@@ -79,6 +82,10 @@ class Scheduler:
         self.backlog: Deque[Tuple] = deque()
         self.inflight: Dict[int, Dict] = {}
         self.completed: Dict[int, Dict] = {}
+        # rid -> terminal failure record (re-route budget exhausted)
+        self.failed: Dict[int, Dict] = {}
+        # (rid, attempt, reason) per accepted XferFail — fault forensics
+        self.xfer_failures: List[Tuple[int, int, str]] = []
         self.ttft_ema: Optional[float] = None
         self.rerouted: List[int] = []
         self.routing_log: List[Tuple[int, int, str, str]] = []
@@ -237,6 +244,32 @@ class Scheduler:
             if self.slo is not None:
                 self.slo.observe_ttft(msg.ttft_us)
                 self.slo.observe_queue_depth(self.queue_depth())
+            self._pump()
+        elif isinstance(msg, m.XferFail):
+            # mid-transfer failure escalated by the decoder: both ends
+            # already released the attempt's resources — re-route with a
+            # bumped attempt, or fail terminally once the budget is spent
+            st = self.inflight.get(msg.request_id)
+            if st is None or st["attempt"] != msg.attempt:
+                return     # stale attempt (already re-routed or done)
+            del self.inflight[msg.request_id]
+            self._release(st)
+            self.xfer_failures.append(
+                (msg.request_id, msg.attempt, msg.reason))
+            tr = self.fabric.tracer
+            if tr is not None:
+                tr.instant("serving", f"xfer_fail:req{msg.request_id}",
+                           {"attempt": msg.attempt, "reason": msg.reason,
+                            "prefiller": msg.peer_id})
+            if msg.attempt + 1 >= self.max_attempts:
+                self.failed[msg.request_id] = dict(
+                    reason=msg.reason, attempts=msg.attempt + 1,
+                    prefiller=st["prefiller"], decoder=st["decoder"])
+            else:
+                self.rerouted.append(msg.request_id)
+                self.backlog.appendleft(
+                    (msg.request_id, st["ids"], st["n_decode"],
+                     msg.attempt + 1, st["vision_emb"]))
             self._pump()
 
     def _reroute(self, gone: set) -> None:

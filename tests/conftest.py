@@ -29,7 +29,13 @@ def audited_fabrics(monkeypatch, tmp_path):
     Every tracked fabric also gets the always-on :class:`HealthMonitor` +
     :class:`FlightRecorder` attached (dumps into the test's tmp dir) — the
     whole audited suite doubles as the proof that always-on monitoring
-    changes no simulated timing, since none of these tests expect it."""
+    changes no simulated timing, since none of these tests expect it.
+
+    Fault-injection tests get the same guarantee for free: an attached
+    :class:`repro.core.FaultPlan` registers as an auditable, so any WR
+    still tracked at quiescence (a leaked retry/guard timer) fails the
+    audit, and the plan's ``outstanding()`` table is asserted empty
+    explicitly — recovery AND abort paths must both drain to zero."""
     from repro.core import Fabric
     from repro.obs import FlightRecorder, HealthMonitor, assert_clean
 
@@ -47,6 +53,9 @@ def audited_fabrics(monkeypatch, tmp_path):
     for fab in built:
         if fab.loop.pending == 0:
             assert_clean(fab, allow_pending_sends=True)
+            plan = getattr(fab, "faults", None)
+            if plan is not None:
+                assert not plan.outstanding(), plan.outstanding()
 
 
 @pytest.fixture(scope="session", autouse=True)

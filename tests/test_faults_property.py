@@ -1,0 +1,86 @@
+"""Property tests for the fault plan's exactly-once delivery contract.
+
+For ANY seeded drop/error schedule with a sufficient retry budget:
+every ImmCounter expectation fires exactly once, every submitted byte
+lands bit-exact at its destination, and the plan's tracking table drains
+to empty (no leaked retry state).  Runs under hypothesis when installed
+(CI sets ``REQUIRE_HYPOTHESIS=1``); collects and skips cleanly without
+the dev extra."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import Fabric, FaultPlan
+
+
+@pytest.fixture(autouse=True)
+def _audit_fabrics(audited_fabrics):
+    """Leak-free teardown: every quiescent fabric must pass the obs audit."""
+    yield
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), fault_seed=st.integers(0, 2**16),
+       drop=st.floats(0.0, 0.5), error=st.floats(0.0, 0.3),
+       burst=st.integers(0, 3), n_writes=st.integers(1, 8),
+       nic=st.sampled_from(["cx7", "efa"]))
+def test_random_loss_schedule_delivers_exactly_once(seed, fault_seed, drop,
+                                                    error, burst, n_writes,
+                                                    nic):
+    """drop + error <= 0.8 with 24 retries: terminal exhaustion is outside
+    the search space, so every schedule must recover — exactly one imm
+    event per WR, submitted bytes == delivered bytes."""
+    fab = Fabric(seed=seed)
+    a = fab.add_engine("a", nic=nic)
+    b = fab.add_engine("b", nic=nic)
+    plan = FaultPlan(fab, seed=fault_seed, timeout_us=250.0,
+                     max_retries=24, backoff_us=20.0)
+    plan.inject("a", "b", drop_prob=drop, error_prob=error)
+    if burst:
+        plan.burst("a", "b", burst)
+
+    chunk = 4096
+    src = np.random.default_rng(seed).integers(
+        0, 255, n_writes * chunk, dtype=np.uint8)
+    dst = np.zeros_like(src)
+    hs, _ = a.reg_mr(src)
+    _, dd = b.reg_mr(dst)
+    fires = []
+    b.expect_imm_count(4, n_writes, lambda: fires.append(fab.now))
+    for i in range(n_writes):
+        a.submit_single_write(chunk, 4, (hs, i * chunk), (dd, i * chunk))
+    fab.run()
+
+    assert fires and len(fires) == 1          # expectation fired exactly once
+    assert b.imm_value(4) == n_writes         # one event per WR, no dupes
+    assert np.array_equal(src, dst)           # delivered == submitted
+    assert plan.stats["exhausted"] == 0
+    assert plan.outstanding() == []           # tracking table drained
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), drop=st.floats(0.1, 0.5))
+def test_fault_runs_replay_bit_identically(seed, drop):
+    """Any (seed, drop) schedule replays with identical final virtual time,
+    identical fault counters, and identical destination bytes."""
+    def run():
+        fab = Fabric(seed=seed)
+        a = fab.add_engine("a", nic="efa")
+        b = fab.add_engine("b", nic="efa")
+        plan = FaultPlan(fab, seed=seed ^ 0x5A5A, timeout_us=250.0,
+                         max_retries=24, backoff_us=20.0)
+        plan.inject("a", "b", drop_prob=drop)
+        src = np.random.default_rng(seed).integers(0, 255, 1 << 15,
+                                                   dtype=np.uint8)
+        dst = np.zeros_like(src)
+        hs, _ = a.reg_mr(src)
+        _, dd = b.reg_mr(dst)
+        for i in range(4):
+            a.submit_single_write(1 << 13, 6, (hs, i << 13), (dd, i << 13))
+        fab.run()
+        return fab.now, dict(plan.stats), dst.copy()
+
+    t1, s1, d1 = run()
+    t2, s2, d2 = run()
+    assert t1 == t2 and s1 == s2 and np.array_equal(d1, d2)
