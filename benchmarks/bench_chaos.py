@@ -16,6 +16,16 @@ deterministically:
                 every KV handoff from one prefiller; requests re-route via
                 XferFail escalation and all complete, with the TTFT
                 overhead vs the clean fleet reported.
+  ctrl_churn  — membership-churn storm (join + drain + crash + partition/
+                re-join) under a seeded ctrl-SEND loss sweep with the
+                reliability layer on (CtrlRetryPolicy everywhere): rows
+                report partition->rejoin recovery time plus the exact
+                booleans ``zero_leaked_pages`` / ``exactly_once_adoption``
+                the perf gate matches.  Loss is injected only on
+                peer<->ctrl and sched<->decoder pairs — the decoder->
+                prefiller DispatchReq is the data-plane handshake, whose
+                loss is the *data* fault model (kv_failover), not a
+                retryable ctrl RPC.
 
 Appends the rows to ``BENCH_rlweights.json`` / ``BENCH_scaling.json``
 (run AFTER those modules: ``python -m benchmarks.run ... rlweights
@@ -41,6 +51,9 @@ OUT_DIR = os.environ.get(
 
 LOSS_RATES = (0.0, 0.02, 0.10)
 N_FAILOVER_REQS = 3 if SMOKE else 6
+
+CHURN_LOSS_RATES = (0.0, 0.05, 0.10)
+N_CHURN_REQS = 2 if SMOKE else 4          # per wave; two waves
 
 
 def _rl_setup(nic: str = "cx7", infer_nic=None, seed: int = 11):
@@ -157,6 +170,124 @@ def kv_failover(faulty: bool) -> Dict[str, float]:
     }
 
 
+def ctrl_churn(loss: float, cfg, params) -> Dict[str, object]:
+    """Membership-churn storm under ``loss``-rate ctrl-SEND faults.
+
+    Timeline (virtual us): requests at 1000 and 2200; d1 joins at 1500 and
+    p2 at 2000; p1 is drained at 2500; d1 crashes at 3000; p0 is fully
+    partitioned from the control plane at 6000 and healed at 24000 — its
+    lease lapses, the scheduler re-routes with an epoch fence (late zombie
+    WRITEs from p0 are rejected at d0), renew-retry exhaustion triggers the
+    auto re-JOIN, and the fleet converges.
+    """
+    from repro.core import Fabric, FaultPlan
+    from repro.ctrl import ControlPlane, CtrlRetryPolicy
+    from repro.serving import Decoder, Prefiller, Scheduler
+
+    fab = Fabric(seed=13)
+    pol = CtrlRetryPolicy()
+    ctrl = ControlPlane(fab, nic="efa", max_sweeps=320, retry=pol)
+    p0 = Prefiller(fab, "p0", cfg, params, nic="efa", ctrl=ctrl,
+                   max_renewals=320, ctrl_retry=pol)
+    p1 = Prefiller(fab, "p1", cfg, params, nic="efa", ctrl=ctrl,
+                   max_renewals=320, ctrl_retry=pol)
+    d0 = Decoder(fab, "d0", cfg, params, nic="efa", ctrl=ctrl,
+                 max_renewals=320, ctrl_retry=pol)
+    sched = Scheduler(fab, ctrl, retry=pol)
+    plan = FaultPlan(fab, seed=17, timeout_us=5_000.0, max_retries=4,
+                     backoff_us=50.0)
+
+    def baseline(src: str, dst: str) -> None:
+        if loss > 0.0:
+            plan.inject_ctrl(src, dst, drop_prob=loss, dup_prob=loss / 2,
+                             delay_prob=loss / 2, delay_us=300.0)
+        else:
+            plan.clear(src, dst)
+
+    ctrl_pairs = [(n, "ctrl") for n in ("p0", "p1", "p2", "d0", "d1")]
+    ctrl_pairs += [(b, a) for (a, b) in ctrl_pairs]
+    ctrl_pairs += [("sched", "d0"), ("d0", "sched"), ("ctrl", "sched")]
+    if loss > 0.0:
+        for src, dst in ctrl_pairs:
+            baseline(src, dst)
+
+    rids: list = []
+    rng = np.random.default_rng(6)
+    late: Dict[str, object] = {}
+
+    def submit_wave() -> None:
+        rids.extend(sched.submit(rng.integers(0, cfg.vocab, size=24 + 2 * i),
+                                 n_decode=2) for i in range(N_CHURN_REQS))
+
+    fab.loop.schedule(1_000.0, submit_wave)
+    fab.loop.schedule(1_500.0, lambda: late.update(d1=Decoder(
+        fab, "d1", cfg, params, nic="efa", ctrl=ctrl, max_renewals=320,
+        ctrl_retry=pol)))
+    fab.loop.schedule(2_000.0, lambda: late.update(p2=Prefiller(
+        fab, "p2", cfg, params, nic="efa", ctrl=ctrl, max_renewals=320,
+        ctrl_retry=pol)))
+    fab.loop.schedule(2_200.0, submit_wave)
+    fab.loop.schedule(2_500.0, lambda: ctrl.drain("p1"))
+    fab.loop.schedule(3_000.0, lambda: late["d1"].crash())
+
+    def partition() -> None:
+        plan.inject_ctrl("p0", "ctrl", drop_prob=1.0)
+        plan.inject_ctrl("ctrl", "p0", drop_prob=1.0)
+
+    def heal() -> None:
+        baseline("p0", "ctrl")
+        baseline("ctrl", "p0")
+
+    fab.loop.schedule(6_000.0, partition)
+    fab.loop.schedule(24_000.0, heal)
+
+    # fixed-cadence membership probe (event count independent of faults):
+    # times p0's removal from and return to the scheduler's view
+    seen = {"t_removed": None, "t_rejoined": None}
+
+    def probe() -> None:
+        ids = set(sched.view.ids())
+        if seen["t_removed"] is None:
+            if "p0" not in ids:
+                seen["t_removed"] = fab.now
+        elif seen["t_rejoined"] is None and "p0" in ids:
+            seen["t_rejoined"] = fab.now
+
+    for k in range(160):
+        fab.loop.schedule(6_000.0 + 250.0 * k, probe)
+
+    fab.run()
+    done = [sched.completed[r] for r in rids if r in sched.completed]
+    # d1 crashed mid-run: its pool is dead memory, not a leak.  Every
+    # *live* peer must have released every page.
+    live_pools = [p0.pool, p1.pool, late["p2"].pool, d0.pool]
+    zero_leaked = all(len(p._free) == p.n_pages for p in live_pools)
+    exactly_once = (len(done) == len(rids)
+                    and not (set(sched.completed) & set(sched.failed))
+                    and len(sched.routing_log)
+                    == len(set(sched.routing_log)))
+    recovery = (seen["t_rejoined"] - seen["t_removed"]
+                if seen["t_removed"] is not None
+                and seen["t_rejoined"] is not None else -1.0)
+    return {
+        "n_reqs": len(rids),
+        "n_completed": len(done),
+        "n_rerouted": len(sched.rerouted),
+        "n_failed": len(sched.failed),
+        "recovery_us": float(recovery),
+        "zero_leaked_pages": bool(zero_leaked),
+        "exactly_once_adoption": bool(exactly_once),
+        "ctrl_drops": plan.ctrl_stats["drops"],
+        "ctrl_dups": plan.ctrl_stats["dups"],
+        "ctrl_delays": plan.ctrl_stats["delays"],
+        "submit_resends": sched.submit_resends,
+        "dup_dropped": ctrl.stats["dup_dropped"],
+        "rejoins": p0.client.rejoins,
+        "replayed_dones": d0.replayed_dones,
+        "total_us": fab.now,
+    }
+
+
 def _append_rows(fname: str, rows: Dict[str, Dict]) -> None:
     """Merge chaos rows into an existing BENCH_*.json (same formatting)."""
     path = os.path.join(OUT_DIR, fname)
@@ -206,7 +337,28 @@ def run(report) -> None:
         "chaos_abort": ar["abort"],
         "chaos_recovery": ar["recovery"],
     })
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("stablelm-3b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    churn_rows: Dict[str, Dict] = {}
+    for rate in CHURN_LOSS_RATES:
+        row = ctrl_churn(rate, cfg, params)
+        key = f"chaos_ctrl_churn_{int(rate * 100)}pct"
+        churn_rows[key] = row
+        report(key, row["recovery_us"],
+               f"us p0 partition->rejoin recovery at {rate:.0%} ctrl loss; "
+               f"zero_leaked_pages={row['zero_leaked_pages']} "
+               f"exactly_once={row['exactly_once_adoption']} "
+               f"({row['n_completed']}/{row['n_reqs']} done, "
+               f"{row['ctrl_drops']} ctrl drops, "
+               f"{row['submit_resends']} submit resends, "
+               f"rejoins={row['rejoins']})")
+
     _append_rows("BENCH_scaling.json", {
         "chaos_kv_failover": chaos,
         "chaos_kv_failover_clean_baseline": clean,
+        **churn_rows,
     })

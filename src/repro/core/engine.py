@@ -179,6 +179,36 @@ class WriteState:
     __slots__ = ("n_parts", "delivered", "sent", "imm", "counter", "batch",
                  "fabric", "failed")
 
+    def on_fenced(self, op, now: float) -> None:
+        """Epoch-fence rejection (zombie-writer guard): the receiving
+        engine's fence table holds a higher epoch than this WRITE's stamp —
+        the bytes were not written and the immediate must never fire.
+        Surfaces through the standard terminal ``on_error`` path (first
+        failure wins) after feeding the observability loop: a ``fenced``
+        fault count, a tracer/recorder instant, and a rate-limited flight
+        dump carrying the fenced WR and its stale epoch."""
+        if self.failed:
+            return
+        fence = op.fences.get(op.src_node)
+        reason = (f"fenced: WRITE from {op.src_node} carries view epoch "
+                  f"{op.fence_epoch} below fence {fence}")
+        fab = self.fabric
+        if fab is not None:
+            mon = fab.health
+            if mon is not None:
+                mon.on_fault("fenced")
+            args = {"src": op.src_node, "imm": op.imm, "nbytes": op.nbytes,
+                    "epoch": op.fence_epoch, "fence": fence}
+            tr = fab.tracer
+            if tr is not None:
+                tr.instant("fault", f"fenced:{op.src_node}", args)
+            rec = getattr(fab, "recorder", None)
+            if rec is not None:
+                if tr is None:
+                    rec.note("fault", f"fenced:{op.src_node}", args)
+                rec.dump("fence-rejected")
+        self.on_error(op, reason)
+
     def __init__(self, n_parts: int, imm: Optional[int],
                  counter: Optional[ImmCounter], batch: BatchState,
                  fabric: Optional["Fabric"] = None):
@@ -260,6 +290,10 @@ class TransferEngine:
         # device -> (WrBatch, created_at): SENDs submitted in the same loop
         # entry coalesce into one enqueue (flushed ENQUEUE_US later)
         self._send_batches: Dict[int, Tuple[WrBatch, float]] = {}
+        # epoch fences (repro.ctrl zombie-writer guard): src node -> minimum
+        # acceptable view epoch.  Inbound WRITEs stamped with a lower epoch
+        # are rejected at landing; empty table = no checks anywhere.
+        self.fences: Dict[str, int] = {}
         self.batch_stats = BatchStats()
         for dev in range(num_devices):
             addr = NetAddr(node, dev)
@@ -277,6 +311,18 @@ class TransferEngine:
     def address(self, device: int = 0) -> NetAddr:
         """The :class:`NetAddr` of one of this engine's devices."""
         return NetAddr(self.node, device)
+
+    # -- epoch fencing ------------------------------------------------------
+    def set_fence(self, src_node: str, min_epoch: int) -> None:
+        """Reject future WRITE landings from ``src_node`` stamped with a
+        view epoch below ``min_epoch`` (the zombie-writer guard — installed
+        when the ctrl plane evicts a peer whose pages are being
+        reallocated).  Fences only tighten: a lower ``min_epoch`` than the
+        current fence is ignored, so a delayed duplicate CANCEL can never
+        loosen the guard."""
+        cur = self.fences.get(src_node)
+        if cur is None or min_epoch > cur:
+            self.fences[src_node] = int(min_epoch)
 
     # -- memory region management ------------------------------------------
     def reg_mr(self, buf: np.ndarray, device: int = 0) -> Tuple[MrHandle, MrDesc]:
@@ -395,14 +441,20 @@ class TransferEngine:
                            imm: Optional[int], stripe: bool,
                            nic_rr: Optional[int] = None,
                            extra_post_us: float = 0.0,
-                           synthetic_bytes: Optional[int] = None) -> None:
+                           synthetic_bytes: Optional[int] = None,
+                           fence_epoch: Optional[int] = None) -> None:
         """Template one logical WRITE into ``batch``, striping across NICs
         when ``stripe``.  ``payload`` is a zero-copy buffer view (already
         snapshotted by the caller); stripes slice it without copying.
 
         ``synthetic_bytes``: timing-only write of that size (no payload copy)
         — used by cluster-scale benchmarks where materialising terabytes of
-        real bytes is pointless; all protocol behaviour is identical."""
+        real bytes is pointless; all protocol behaviour is identical.
+
+        ``fence_epoch``: stamp the WRITE with the sender's current view
+        epoch; the receiving engine rejects it at landing if its fence
+        table demands a higher epoch from this node (zombie-writer guard).
+        None (default) posts an unstamped, never-fenced WRITE."""
         src_group = batch.group
         fab = self.fabric
         dst_group, dst_engine = fab._lookup(dst.owner)
@@ -424,6 +476,11 @@ class TransferEngine:
                         dst_offset=dst_offset + off, imm=imm,
                         on_delivered=state.on_delivered, on_sent=state.on_sent,
                         nbytes=ln, on_error=state.on_error)
+            if fence_epoch is not None:
+                op.fence_epoch = int(fence_epoch)
+                op.src_node = src_group.addr.node
+                op.fences = dst_engine.fences
+                op.on_fenced = state.on_fenced
             if tr is not None:
                 op.span = tr.begin_wr("write", dst.owner, ln, imm, src=obs_src)
             elif mon is not None:
@@ -448,19 +505,22 @@ class TransferEngine:
     def submit_single_write(self, length: int, imm: Optional[int],
                             src: Tuple[MrHandle, int], dst: Tuple[MrDesc, int],
                             on_done: OnDone = None,
-                            on_error: Optional[Callable[[str], None]] = None
+                            on_error: Optional[Callable[[str], None]] = None,
+                            fence_epoch: Optional[int] = None
                             ) -> None:
         """One-sided WRITE of ``length`` bytes, striped across all NICs;
         ``imm`` (if set) increments the receiver's counter once, when the
         last stripe lands.  ``on_error`` is the terminal failure path under
-        fault injection (see :class:`BatchState`)."""
+        fault injection (see :class:`BatchState`); ``fence_epoch`` stamps
+        the WRITE for the receiver's epoch fence (zombie-writer guard)."""
         handle, src_off = src
         desc, dst_off = dst
         src_group = self.fabric.group(handle.owner)
         payload = src_group.region(handle.region_id).snapshot(src_off, length)
         batch = WrBatch(src_group)
         self._add_logical_write(batch, BatchState(1, on_done, on_error),
-                                payload, desc, dst_off, imm, stripe=True)
+                                payload, desc, dst_off, imm, stripe=True,
+                                fence_epoch=fence_epoch)
         self._enqueue_batch(batch)
 
     def submit_write_batch(self, writes: Sequence[Tuple[int, Optional[int],
@@ -493,7 +553,8 @@ class TransferEngine:
     def submit_paged_writes(self, page_len: int, imm: Optional[int],
                             src: Tuple[MrHandle, Pages], dst: Tuple[MrDesc, Pages],
                             on_done: OnDone = None,
-                            on_error: Optional[Callable[[str], None]] = None
+                            on_error: Optional[Callable[[str], None]] = None,
+                            fence_epoch: Optional[int] = None
                             ) -> None:
         """One WRITE per page; pages rotate across NICs.  All pages are
         templated into a single ``WrBatch`` (one enqueue, per-WR posting
@@ -520,7 +581,8 @@ class TransferEngine:
         for k, (so, do) in enumerate(zip(src_offs, dst_offs)):
             self._add_logical_write(batch, batch_state,
                                     region.snapshot(so, page_len), desc, do,
-                                    imm, stripe=False, nic_rr=k % n_nics)
+                                    imm, stripe=False, nic_rr=k % n_nics,
+                                    fence_epoch=fence_epoch)
         self._enqueue_batch(batch)
 
     # -- peer groups: scatter / barrier ---------------------------------------
@@ -546,7 +608,9 @@ class TransferEngine:
         """Batched scatter submission: several ``(handle, dsts, imm,
         on_done)`` scatters templated into ONE WrBatch / event-loop entry.
         A group may carry an optional 5th element ``on_error`` — the
-        per-scatter terminal failure callback under fault injection.
+        per-scatter terminal failure callback under fault injection — and
+        an optional 6th element ``fence_epoch`` stamping the scatter's
+        WRITEs for the receiver's epoch fence (zombie-writer guard).
 
         Completion state stays per-scatter (each ``on_done`` fires when its
         own destinations have sender-side completions; each imm counts its
@@ -562,6 +626,7 @@ class TransferEngine:
         batch = WrBatch(src_group)
         for handle, dsts, imm, on_done, *rest in groups:
             on_error = rest[0] if rest else None
+            fence_epoch = rest[1] if len(rest) > 1 else None
             n = len(dsts)
             if n == 0:
                 _fire(on_done)
@@ -578,7 +643,8 @@ class TransferEngine:
                 self._add_logical_write(batch, batch_state, payload,
                                         desc, off, imm, stripe=False,
                                         nic_rr=k % n_nics,
-                                        extra_post_us=extra)
+                                        extra_post_us=extra,
+                                        fence_epoch=fence_epoch)
         if len(batch):
             self._enqueue_batch(batch)
 

@@ -18,9 +18,7 @@ mid-transfer; until this module the simulator only modeled *slowdowns*
 ImmCounter` increments exactly once per logical WRITE no matter how many
   replays raced a spurious timeout.
 
-Fault model (per (src, dst) *node* pair, WRITEs only — replaying a SEND is
-not idempotent, so SENDs are never retried; ``kill_peer`` blackholes them
-instead and lease expiry handles the fallout):
+Fault model (per (src, dst) *node* pair).  WRITE knobs:
 
 * ``drop_prob`` — the WR vanishes on the wire; detected by the delivery
   timeout, then retried with exponential backoff.
@@ -30,6 +28,23 @@ instead and lease expiry handles the fallout):
 * ``kill_peer(node)`` — NIC-down: all outstanding tracked WRs touching the
   node fail at once (channel-level error state) and every later WR or SEND
   to/from it fails immediately, skipping the retry budget.
+
+SENDs are never retried *by the transport* — replaying a SEND is not
+idempotent at this layer, so recovery lives one level up in ``repro.ctrl``
+(``(sender, seq)`` stamping + receiver dedup windows + bounded ack-tracked
+retransmission; see ``ctrl.retry``).  What the plan injects on SENDs is
+the loss itself, via :meth:`FaultPlan.inject_ctrl`:
+
+* ``drop_prob`` — the SEND vanishes (accounting stays clean, delivery
+  never comes);
+* ``dup_prob`` — it is delivered twice (the duplicate after ``delay_us``),
+  probing receiver idempotency;
+* ``delay_prob`` — delivery is delayed by ``delay_us`` (reordering probe).
+
+Ctrl verdicts draw from their own ``stable_hash`` streams (one per pair,
+distinct from the WRITE streams) and keep counters in ``ctrl_stats`` —
+WRITE-side ``stats`` and golden traces stay byte-identical when no ctrl
+knob is active.
 
 On retry exhaustion the WR takes its terminal ``on_error`` path (see
 ``WriteState.on_error`` / ``BatchState.note_error`` in ``core.engine``);
@@ -116,11 +131,16 @@ class FaultPlan:
         self.backoff_factor = float(backoff_factor)
         self._pair_cfg: Dict[Tuple[str, str], dict] = {}
         self._rngs: Dict[Tuple[str, str], np.random.Generator] = {}
+        # ctrl-SEND injection draws from its own streams so enabling it
+        # never perturbs the WRITE verdict sequence (and vice versa)
+        self._crngs: Dict[Tuple[str, str], np.random.Generator] = {}
         self.dead: set = set()
         self._tracked: Dict[int, _OpTrack] = {}
         self.stats: Dict[str, int] = {
             "drops": 0, "errors": 0, "retries": 0, "recovered": 0,
             "exhausted": 0, "killed": 0, "blackholed_sends": 0}
+        # separate dict: WRITE-side stats stay exactly the seed's shape
+        self.ctrl_stats: Dict[str, int] = {"drops": 0, "dups": 0, "delays": 0}
         fabric.attach_faults(self)
         fabric.register_auditable("faults", self)
 
@@ -150,6 +170,32 @@ class FaultPlan:
         cfg = self._pair_cfg.setdefault(key, {})
         cfg["drop"] = float(drop_prob)
         cfg["error"] = float(error_prob)
+
+    def inject_ctrl(self, src, dst, *, drop_prob: float = 0.0,
+                    dup_prob: float = 0.0, delay_prob: float = 0.0,
+                    delay_us: float = 200.0) -> None:
+        """Set probabilistic loss/duplication/delay on ctrl SENDs for the
+        (src, dst) node pair.
+
+        One uniform draw per SEND decides: ``u < drop`` => the SEND
+        vanishes; ``u < drop + dup`` => delivered twice (duplicate lands
+        ``delay_us`` later); ``u < drop + dup + delay`` => delivery delayed
+        by ``delay_us``.  Replaces any previous ctrl setting for the pair;
+        all-zero knobs restore the clean fast path (no RNG drawn).  SENDs
+        are not retried here — recovery is the ctrl layer's seq/dedup +
+        retransmission machinery, which these knobs exist to exercise.
+        """
+        if not (0.0 <= drop_prob <= 1.0 and 0.0 <= dup_prob <= 1.0
+                and 0.0 <= delay_prob <= 1.0
+                and drop_prob + dup_prob + delay_prob <= 1.0):
+            raise ValueError(f"invalid ctrl probabilities drop={drop_prob} "
+                             f"dup={dup_prob} delay={delay_prob}")
+        key = (self._node(src), self._node(dst))
+        cfg = self._pair_cfg.setdefault(key, {})
+        cfg["c_drop"] = float(drop_prob)
+        cfg["c_dup"] = float(dup_prob)
+        cfg["c_delay"] = float(delay_prob)
+        cfg["c_delay_us"] = float(delay_us)
 
     def burst(self, src, dst, n: int) -> None:
         """Drop the next ``n`` WRITEs on the pair unconditionally (adds to
@@ -196,13 +242,38 @@ class FaultPlan:
         src = group.addr.node
         dst = dst_group.addr.node
         if op.kind != "write":
-            # SENDs: never retried (replay is not idempotent). Dead peers
-            # blackhole them — accounting stays clean, delivery never comes,
-            # and the ctrl plane's lease expiry provides failure detection.
+            # SENDs: never retried by the transport (replay is not
+            # idempotent here — the ctrl layer's seq/dedup machinery owns
+            # recovery). Dead peers blackhole them: accounting stays clean,
+            # delivery never comes, lease expiry provides failure detection.
             if src in self.dead or dst in self.dead:
                 self.stats["blackholed_sends"] += 1
                 self._note("send_blackholed", src, dst, op)
                 self.fabric.inflight_sends -= 1
+                return
+            verdict = self._ctrl_verdict(src, dst)
+            if verdict == "drop":
+                self.ctrl_stats["drops"] += 1
+                self._note("ctrl_drop", src, dst, op)
+                self.fabric.inflight_sends -= 1
+                return
+            if verdict == "dup":
+                self.ctrl_stats["dups"] += 1
+                self._note("ctrl_dup", src, dst, op)
+                # second delivery: same op, fresh closures per post on the
+                # unordered channel — receiver idempotency is the probe
+                self.fabric.inflight_sends += 1
+                cfg = self._pair_cfg[(src, dst)]
+                self.loop.schedule(delay, lambda: ch.post(op))
+                self.loop.schedule(delay + cfg["c_delay_us"],
+                                   lambda: ch.post(op))
+                return
+            if verdict == "delay":
+                self.ctrl_stats["delays"] += 1
+                self._note("ctrl_delay", src, dst, op)
+                cfg = self._pair_cfg[(src, dst)]
+                self.loop.schedule(delay + cfg["c_delay_us"],
+                                   lambda: ch.post(op))
                 return
             self.loop.schedule(delay, lambda: ch.post(op))
             return
@@ -233,6 +304,35 @@ class FaultPlan:
         self.loop.schedule(delay, lambda: ch.post(op))
         track.timer = self.loop.schedule_cancelable(
             delay + self.timeout_us, lambda: self._timeout(track))
+
+    def _ctrl_verdict(self, src: str, dst: str) -> str:
+        """One fault verdict for a ctrl SEND: ok / drop / dup / delay.
+
+        Draws from the pair's dedicated "ctrl" RNG stream, and only when a
+        ctrl knob is active — pairs without ctrl injection stay on the
+        zero-RNG fast path (byte-identical to an un-injected plan)."""
+        cfg = self._pair_cfg.get((src, dst))
+        if cfg is None:
+            return "ok"
+        dp = cfg.get("c_drop", 0.0)
+        up = cfg.get("c_dup", 0.0)
+        lp = cfg.get("c_delay", 0.0)
+        if dp <= 0.0 and up <= 0.0 and lp <= 0.0:
+            return "ok"
+        key = (src, dst)
+        rng = self._crngs.get(key)
+        if rng is None:
+            rng = np.random.default_rng(
+                stable_hash(self.seed, "ctrl", src, dst))
+            self._crngs[key] = rng
+        u = float(rng.random())
+        if u < dp:
+            return "drop"
+        if u < dp + up:
+            return "dup"
+        if u < dp + up + lp:
+            return "delay"
+        return "ok"
 
     def _verdict(self, src: str, dst: str) -> str:
         """One fault verdict for a WRITE on the pair: ok / drop / error."""
@@ -280,6 +380,22 @@ class FaultPlan:
             orig_delivered(o, now)
 
         op.on_delivered = delivered
+        if op.on_fenced is not None:
+            orig_fenced = op.on_fenced
+
+            def fenced(o, now: float) -> None:
+                # epoch fence rejection is terminal: fences only tighten,
+                # so retrying the WR could never succeed — resolve the
+                # track (no retry timer, no exhaustion) and let the fence
+                # path's own on_error handle escalation
+                if track.done:
+                    return
+                track.done = True
+                self._cancel_timer(track)
+                self._tracked.pop(id(op), None)
+                orig_fenced(o, now)
+
+            op.on_fenced = fenced
         if op.on_sent is not None:
             orig_sent = op.on_sent
 

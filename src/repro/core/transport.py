@@ -50,6 +50,15 @@ class WireOp:
     # ``on_error(op, reason)`` when the retry budget is exhausted or the
     # peer dies; None on SENDs and on fabrics without a FaultPlan
     on_error: Optional[Callable[["WireOp", str], None]] = None
+    # epoch fencing (repro.ctrl zombie-writer guard): a WRITE stamped with
+    # the sender's view epoch is rejected — bytes never written, the
+    # ``on_fenced`` hook fires instead of ``on_delivered`` — when the
+    # receiving engine's fence table holds a higher epoch for ``src_node``.
+    # All None/default => the check compiles to one ``is not None`` test.
+    fence_epoch: Optional[int] = None
+    src_node: str = ""
+    fences: Optional[dict] = None   # live ref: receiving engine's fence table
+    on_fenced: Optional[Callable[["WireOp", float], None]] = None
 
 
 class Channel:
@@ -122,7 +131,14 @@ class Channel:
                         self.rng.random()) ** (1.0 / npkt)
 
             def land() -> None:
-                if payload is not None and op.dst_region is not None:
+                # Epoch fence (zombie-writer guard): evaluated per chunk —
+                # fences only tighten monotonically, so once any chunk sees
+                # the sender fenced, every later chunk does too and the
+                # terminal callback decision is consistent at the last one.
+                fenced = (op.fences is not None and op.fence_epoch
+                          < op.fences.get(op.src_node, op.fence_epoch))
+                if not fenced and payload is not None \
+                        and op.dst_region is not None:
                     lo = idx * per
                     hi = min(nbytes, lo + per)
                     if hi > lo:
@@ -132,7 +148,10 @@ class Channel:
                     # Entire payload visible => CQE/immediate may fire.
                     if op.span is not None:
                         op.span.t_deliver = self.loop.now
-                    op.on_delivered(op, self.loop.now)
+                    if fenced and op.on_fenced is not None:
+                        op.on_fenced(op, self.loop.now)
+                    else:
+                        op.on_delivered(op, self.loop.now)
 
             self.loop.schedule_at(arrive, land)
 
@@ -174,12 +193,19 @@ class Channel:
             self._last_delivery = arrive
 
             def land() -> None:
-                if op.payload is not None and op.dst_region is not None and nbytes:
+                # Epoch fence (zombie-writer guard) — see the unordered path
+                fenced = (op.fences is not None and op.fence_epoch
+                          < op.fences.get(op.src_node, op.fence_epoch))
+                if not fenced and op.payload is not None \
+                        and op.dst_region is not None and nbytes:
                     op.dst_region.write_bytes(op.dst_offset,
                                               memoryview(op.payload)[:nbytes])
                 if op.span is not None:
                     op.span.t_deliver = self.loop.now
-                op.on_delivered(op, self.loop.now)
+                if fenced and op.on_fenced is not None:
+                    op.on_fenced(op, self.loop.now)
+                else:
+                    op.on_delivered(op, self.loop.now)
 
             self.loop.schedule_at(arrive, land)
 

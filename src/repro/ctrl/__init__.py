@@ -13,9 +13,11 @@ from .client import ControlClient
 from .plane import ControlPlane
 from .registry import (DEAD, DRAINING, LEFT, LIVE, MembershipView,
                        PeerRegistry, PeerView)
+from .retry import CtrlRetryPolicy, DedupWindow
 
 __all__ = [
     "messages", "ControlPlane", "ControlClient", "PeerRegistry",
     "MembershipView", "PeerView", "Autoscaler", "ScalingPolicy",
+    "CtrlRetryPolicy", "DedupWindow",
     "LIVE", "DRAINING", "DEAD", "LEFT",
 ]

@@ -46,6 +46,12 @@ class ScalingPolicy:
     min_prefillers: int = 1
     max_prefillers: int = 8
     cooldown_us: float = 600.0     # min time between scaling actions
+    # churn guard: hold all scaling actions while membership epochs are
+    # churning (>= churn_guard_epochs changes inside the trailing window),
+    # so a failover storm's transient queue spikes / idle dips can't drive
+    # scale-up/scale-down oscillation.  0 disables the guard (seed default).
+    churn_guard_epochs: int = 0
+    churn_guard_window_us: float = 1_000.0
 
 
 class Autoscaler:
@@ -67,6 +73,10 @@ class Autoscaler:
         self._idle_ticks = 0
         self._next_index = next_index
         self._last_action_us = float("-inf")
+        # churn guard state: view epochs observed and when they changed
+        self._last_epoch: Optional[int] = None
+        self._epoch_events: List[float] = []
+        self.churn_holds = 0
         # (virtual time, action, detail) audit trail
         self.decisions: List[Tuple[float, str, str]] = []
         if auto:
@@ -90,6 +100,24 @@ class Autoscaler:
             ttft_sig = self.scheduler.ttft_ema
 
         self._idle_ticks = self._idle_ticks + 1 if depth == 0 else 0
+
+        # churn guard: track how often the membership epoch has moved in
+        # the trailing window; a storm of changes means the signals below
+        # (queue spikes from re-routes, idle dips from drains) are
+        # transient — hold rather than oscillate
+        if pol.churn_guard_epochs > 0:
+            if self._last_epoch is None:
+                self._last_epoch = view.epoch
+            elif view.epoch != self._last_epoch:
+                self._epoch_events.append(now)
+                self._last_epoch = view.epoch
+            self._epoch_events = [
+                t for t in self._epoch_events
+                if now - t <= pol.churn_guard_window_us]
+            if len(self._epoch_events) >= pol.churn_guard_epochs:
+                self.churn_holds += 1
+                return None
+
         if now - self._last_action_us < pol.cooldown_us:
             return None
 

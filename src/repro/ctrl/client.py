@@ -11,15 +11,28 @@ A crash is modeled by the owner's ``alive`` flag going False: the renew
 loop checks ``alive_fn`` before every beat, so a crashed peer simply stops
 renewing and its lease lapses at the control plane — no goodbye message,
 exactly like a real process death.
+
+Reliability (reliable-control-plane PR): constructed with a
+:class:`~repro.ctrl.retry.CtrlRetryPolicy`, the client stamps its JOINs
+and LEASE-RENEWs with a ``(sender, seq)`` identity and retransmits each on
+a bounded backoff chain until acked (JOIN-ACK / LEASE-ACK).  A renew chain
+that exhausts its budget is the client-side *partition detector*: the
+plane has (as far as this peer can tell) stopped acking, its lease has
+probably lapsed, so the client drops to un-joined and re-JOINs with
+``prior_epoch`` advertised — the plane reconciles with a fresh epoch and
+the peer resumes.  ``retry=None`` (default) is the fire-and-forget PR-9
+client, byte-identical on the wire.
 """
 
 from __future__ import annotations
 
+import itertools
 from typing import Any, Callable, Dict, Optional
 
 from ..core import Fabric, MrDesc, NetAddr, TransferEngine
 from . import messages as m
 from .registry import MembershipView
+from .retry import CtrlRetryPolicy, DedupWindow
 
 DEFAULT_RENEW_US = 500.0
 
@@ -35,7 +48,8 @@ class ControlClient:
                  inflight_fn: Callable[[], int] = lambda: 0,
                  free_pages_fn: Callable[[], int] = lambda: 0,
                  on_drain: Optional[Callable[[m.Drain], None]] = None,
-                 on_view: Optional[Callable[[MembershipView], None]] = None):
+                 on_view: Optional[Callable[[MembershipView], None]] = None,
+                 retry: Optional[CtrlRetryPolicy] = None):
         self.engine = engine
         self.fabric = fabric
         self.ctrl_addr = ctrl_addr
@@ -53,6 +67,17 @@ class ControlClient:
         self.epoch: Optional[int] = None
         self.lease_us: Optional[float] = None
         self._renewals = 0
+        # reliability: None => fire-and-forget PR-9 behaviour, bit-exact
+        self.retry = retry
+        self._seq = itertools.count(1)
+        self._dedup = DedupWindow()     # inbound stamped DRAINs
+        self._renew_ack = 0             # highest LEASE-ACKed renew seq
+        self._incarnation = 0           # bumped on every partition re-JOIN
+        self._join_kwargs: Optional[Dict[str, Any]] = None
+        self.rejoins = 0                # partition-detector firings
+        self.join_resends = 0
+        self.renew_resends = 0
+        self.join_exhausted = False     # JOIN chain spent with no ack
 
     # -- outbound ------------------------------------------------------------
     def join(self, *, nic: str, kv_desc: Optional[MrDesc],
@@ -70,30 +95,105 @@ class ControlClient:
             host = getattr(self.engine, "host", None)
         if nvlink is None:
             nvlink = bool(getattr(self.engine, "nvlink", False))
-        self.engine.submit_send(self.ctrl_addr, m.encode(m.Join(
-            peer_id=self.peer_id, role=self.role,
-            addr=self.engine.address(0), nic=nic, kv_desc=kv_desc,
-            geom=geom, n_pages=n_pages, lease_us=lease_us, schema=schema,
-            host=host, nvlink=nvlink)))
+        # kept for partition re-JOINs: the advertisement must be identical
+        # so the registry can recognise a pure retransmission
+        self._join_kwargs = dict(nic=nic, kv_desc=kv_desc, geom=geom,
+                                 n_pages=n_pages, lease_us=lease_us,
+                                 schema=schema, host=host, nvlink=nvlink)
+        self._send_join(prior_epoch=None)
         self._schedule_renew()
 
+    def _send_join(self, *, prior_epoch: Optional[int]) -> None:
+        msg = m.Join(peer_id=self.peer_id, role=self.role,
+                     addr=self.engine.address(0), prior_epoch=prior_epoch,
+                     **self._join_kwargs)
+        if self.retry is None:
+            self.engine.submit_send(self.ctrl_addr, m.encode(msg))
+            return
+        payload = m.encode(msg, sender=self.engine.address(0).node,
+                           seq=next(self._seq))
+        self.engine.submit_send(self.ctrl_addr, payload)
+        self._arm_join_retry(payload, 0)
+
+    def _arm_join_retry(self, payload: bytes, attempt: int) -> None:
+        pol = self.retry
+
+        def check() -> None:
+            if self.joined or self.left or not self.alive_fn():
+                return
+            if attempt >= pol.max_retries:
+                self.join_exhausted = True
+                recorder = getattr(self.fabric, "recorder", None)
+                if recorder is not None:
+                    recorder.dump("ctrl-retry-exhausted")
+                return
+            self.join_resends += 1
+            self.engine.submit_send(self.ctrl_addr, payload)
+            self._arm_join_retry(payload, attempt + 1)
+
+        self.fabric.loop.schedule(pol.timeout_us(attempt), check)
+
+    def _on_partition(self) -> None:
+        """A renew chain exhausted its budget: assume the lease lapsed.
+
+        Drops to un-joined and re-JOINs with ``prior_epoch`` advertised;
+        the plane reconciles (fresh epoch, old lease invalidated) and the
+        peer resumes under the new view.  Re-entrancy-safe: while a re-JOIN
+        is already in flight (``joined`` False) further exhaustions no-op."""
+        if self.left or not self.alive_fn() or not self.joined:
+            return
+        self.joined = False
+        self.rejoins += 1
+        # invalidate every renew chain armed under the old incarnation: a
+        # pre-partition renew whose exhaustion check lands *after* the
+        # re-JOIN completes must not re-trigger the detector
+        self._incarnation += 1
+        tr = self.fabric.tracer
+        if tr is not None:
+            tr.instant("ctrl", f"partition:{self.peer_id}",
+                       {"prior_epoch": self.epoch})
+        recorder = getattr(self.fabric, "recorder", None)
+        if recorder is not None:
+            recorder.dump("ctrl-retry-exhausted")
+        self._send_join(prior_epoch=self.epoch)
+
     def leave(self) -> None:
-        """Send LEAVE (clean departure); stops future renewals."""
+        """Send LEAVE (clean departure); stops future renewals.
+
+        Under a retry policy the LEAVE gets a couple of blind bounded
+        retransmits — processing is idempotent at the plane (a second
+        LEAVE for a departed peer is a no-op), so no ack is needed."""
         if self.left:
             return
         self.left = True
-        self.engine.submit_send(self.ctrl_addr,
-                                m.encode(m.Leave(self.peer_id)))
+        payload = m.encode(m.Leave(self.peer_id))
+        self.engine.submit_send(self.ctrl_addr, payload)
+        if self.retry is not None:
+            for k in range(min(2, self.retry.max_retries)):
+                self.fabric.loop.schedule(
+                    self.retry.timeout_us(k),
+                    lambda: self.engine.submit_send(self.ctrl_addr, payload))
 
     # -- inbound -------------------------------------------------------------
     def handle(self, msg: Any) -> bool:
         """Consume a decoded control message; False if it's not ours."""
         if isinstance(msg, m.JoinAck):
             self.joined = True
-            self.epoch = msg.epoch
+            # max(): a delayed duplicate ack from an *earlier* join must
+            # never roll the epoch back below what a re-JOIN granted
+            self.epoch = msg.epoch if self.epoch is None \
+                else max(self.epoch, msg.epoch)
             self.lease_us = msg.lease_us
             return True
+        if isinstance(msg, m.LeaseAck):
+            self._renew_ack = max(self._renew_ack, msg.seq)
+            return True
         if isinstance(msg, m.Drain):
+            # stamped DRAINs (retry-enabled plane) are retransmitted until
+            # we LEAVE — dedup so the owner's drain logic runs exactly once
+            if msg.wire_seq is not None and self._dedup.seen(
+                    msg.wire_sender, msg.wire_seq):
+                return True
             if self.on_drain is not None:
                 self.on_drain(msg)
             return True
@@ -112,9 +212,39 @@ class ControlClient:
         def renew() -> None:
             if self.left or not self.alive_fn():
                 return     # crashed or departed: lease lapses at the ctrl
-            self.engine.submit_send(self.ctrl_addr, m.encode(m.LeaseRenew(
-                self.peer_id, inflight=self.inflight_fn(),
-                free_pages=self.free_pages_fn())))
+            msg = m.LeaseRenew(self.peer_id, inflight=self.inflight_fn(),
+                               free_pages=self.free_pages_fn())
+            if self.retry is None:
+                self.engine.submit_send(self.ctrl_addr, m.encode(msg))
+            elif self.joined:
+                seq = next(self._seq)
+                payload = m.encode(msg, sender=self.engine.address(0).node,
+                                   seq=seq)
+                self.engine.submit_send(self.ctrl_addr, payload)
+                self._arm_renew_retry(payload, seq, 0)
+            # else: a (re-)JOIN is still in flight — skip this beat but
+            # keep beating so renewals resume once the ack lands
             self._schedule_renew()
 
         self.fabric.loop.schedule(self.renew_us, renew)
+
+    def _arm_renew_retry(self, payload: bytes, seq: int,
+                         attempt: int) -> None:
+        pol = self.retry
+        inc = self._incarnation
+
+        def check() -> None:
+            # a newer renew's ack also proves liveness (seqs are ordered);
+            # a chain from a previous join incarnation is void
+            if (self.left or not self.alive_fn() or not self.joined
+                    or self._renew_ack >= seq
+                    or self._incarnation != inc):
+                return
+            if attempt >= pol.max_retries:
+                self._on_partition()
+                return
+            self.renew_resends += 1
+            self.engine.submit_send(self.ctrl_addr, payload)
+            self._arm_renew_retry(payload, seq, attempt + 1)
+
+        self.fabric.loop.schedule(pol.timeout_us(attempt), check)

@@ -16,8 +16,19 @@ fabric's own two-sided ``submit_send``/``submit_recvs`` path:
   through explicit markers, so a ``MrDesc`` received over the wire is
   usable as a WRITE destination exactly like a locally constructed one.
 
+Reliability envelope (reliable-control-plane PR): ``encode`` can stamp a
+``(sender, seq)`` RPC identity into a reserved ``_rpc`` top-level key —
+receivers keep per-sender dedup windows keyed on it, which is what makes
+retransmitting a lost ctrl SEND safe.  Unstamped encodings are
+byte-identical to the pre-PR wire format.  ``decode`` is forward-
+compatible: unknown top-level keys are ignored (never a crash), and a
+message class may mark trailing fields ``_WIRE_OPTIONAL`` so they are
+omitted from the encoding while ``None`` — existing payloads stay
+bit-exact until a sender actually sets them.
+
 Control-plane verbs (paper §4 "dynamic scaling", Holmes-style capability
-registry): JOIN / JOIN-ACK / LEASE-RENEW / DRAIN / LEAVE / VIEW-UPDATE.
+registry): JOIN / JOIN-ACK / LEASE-RENEW / LEASE-ACK / DRAIN / LEAVE /
+VIEW-UPDATE.
 Data-plane verbs used by the elastic scheduler: SUBMIT / CANCEL / DONE.
 """
 
@@ -44,6 +55,13 @@ def wire(tag: str):
         if tag in _REGISTRY:
             raise ValueError(f"duplicate wire tag {tag!r}")
         cls._WIRE_TAG = tag
+        # known field names, for forward-compatible decoding (unknown
+        # trailing keys from newer senders are dropped, never a crash)
+        cls._WIRE_FIELDS = frozenset(f.name for f in dataclasses.fields(cls))
+        # RPC identity attached by decode() when the payload was stamped
+        # via encode(sender=..., seq=...); class-level None = unstamped
+        cls.wire_sender = None
+        cls.wire_seq = None
         _REGISTRY[tag] = cls
         return cls
 
@@ -91,25 +109,52 @@ def dec_value(v: Any) -> Any:
     return v
 
 
-def encode(msg: Any) -> bytes:
-    """Serialize a registered message: ``<tag>\\0<json fields>``."""
+def encode(msg: Any, *, sender: Optional[str] = None,
+           seq: Optional[int] = None) -> bytes:
+    """Serialize a registered message: ``<tag>\\0<json fields>``.
+
+    ``sender``/``seq`` (always together) stamp the payload with an RPC
+    identity in the reserved ``_rpc`` key — the retry machinery uses it so
+    receivers can dedup retransmissions.  Unstamped encodings carry no
+    extra bytes.  Fields listed in the class's ``_WIRE_OPTIONAL`` are
+    omitted while ``None`` (wire back-compat for late-added fields)."""
     tag = getattr(msg, "_WIRE_TAG", None)
     if tag is None:
         raise TypeError(f"{type(msg).__name__} is not a @wire message")
-    fields = {f.name: enc_value(getattr(msg, f.name))
-              for f in dataclasses.fields(msg)}
+    optional = getattr(msg, "_WIRE_OPTIONAL", ())
+    fields = {}
+    for f in dataclasses.fields(msg):
+        v = getattr(msg, f.name)
+        if v is None and f.name in optional:
+            continue
+        fields[f.name] = enc_value(v)
+    if sender is not None:
+        if seq is None:
+            raise ValueError("encode: sender stamped without a seq")
+        fields["_rpc"] = [sender, int(seq)]
     return tag.encode() + b"\0" + json.dumps(
         fields, separators=(",", ":")).encode()
 
 
 def decode(payload: bytes) -> Any:
-    """Parse a wire payload back into its registered message dataclass."""
+    """Parse a wire payload back into its registered message dataclass.
+
+    Forward-compatible: top-level keys the class does not declare are
+    ignored (a newer sender's trailing fields never crash an older
+    receiver).  A stamped ``_rpc`` identity is surfaced as the decoded
+    message's ``wire_sender``/``wire_seq`` attributes (None when absent)."""
     tag, _, body = bytes(payload).partition(b"\0")
     cls = _REGISTRY.get(tag.decode("ascii", "replace"))
     if cls is None:
         raise ValueError(f"unknown wire tag {tag!r}")
     raw = json.loads(body.decode())
-    return cls(**{k: dec_value(v) for k, v in raw.items()})
+    rpc = raw.pop("_rpc", None)
+    known = cls._WIRE_FIELDS
+    msg = cls(**{k: dec_value(v) for k, v in raw.items() if k in known})
+    if rpc is not None:
+        msg.wire_sender = str(rpc[0])
+        msg.wire_seq = int(rpc[1])
+    return msg
 
 
 # -- control-plane messages ---------------------------------------------------
@@ -142,6 +187,13 @@ class Join:
     # defaulted so pre-PR joiners stay wire-compatible
     host: Optional[str] = None
     nvlink: bool = False
+    # partition re-join: the view epoch this peer last held before its
+    # lease lapsed / it stopped hearing the plane.  Omitted from the wire
+    # while None (first JOIN), so pre-PR payloads stay bit-exact; the
+    # plane uses it to log the reconciliation.
+    prior_epoch: Optional[int] = None
+
+    _WIRE_OPTIONAL = ("prior_epoch",)
 
 
 @wire("JACK")
@@ -162,6 +214,20 @@ class LeaseRenew:
     peer_id: str
     inflight: int = 0
     free_pages: int = 0
+
+
+@wire("LACK")
+@dataclass
+class LeaseAck:
+    """Ctrl -> peer: one LEASE-RENEW landed (echoes the renew's seq).
+
+    Only sent for *stamped* renews (a retry-enabled client), so plain
+    fire-and-forget clients see no new traffic.  A client whose renews
+    stop being acked treats the plane as partitioned and re-JOINs once its
+    retry budget is spent."""
+
+    peer_id: str
+    seq: int
 
 
 @wire("DRAN")
@@ -215,10 +281,23 @@ class SubmitReq:
 @wire("CANC")
 @dataclass
 class CancelReq:
-    """Scheduler -> decoder: abandon one attempt; free its pages."""
+    """Scheduler -> decoder: abandon one attempt; free its pages.
+
+    ``fence_node``/``fence_epoch`` piggyback the zombie-writer guard: when
+    the cancel was triggered by a peer vanishing from the view (lease
+    expiry), the scheduler names the gone peer's node and the epoch at
+    which it vanished — the decoder installs an engine-level fence so any
+    WRITE that peer still has in flight (stamped with its stale join-time
+    epoch) is rejected before its bytes land in reallocated KV pages.
+    Both fields are omitted from the wire while None, so cancels that are
+    not fence-bearing stay byte-identical to the pre-PR encoding."""
 
     request_id: int
     attempt: int = 0
+    fence_node: Optional[str] = None
+    fence_epoch: Optional[int] = None
+
+    _WIRE_OPTIONAL = ("fence_node", "fence_epoch")
 
 
 @wire("DONE")

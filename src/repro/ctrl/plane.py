@@ -21,15 +21,27 @@ Responsibilities:
 The sweep loop is bounded (``max_sweeps``) so ``run_until_idle`` stays
 finite, exactly like the seed's bounded heartbeat train; ``stop()`` ends it
 early.
+
+Reliability (reliable-control-plane PR): constructed with a
+:class:`~repro.ctrl.retry.CtrlRetryPolicy`, the plane becomes safe under
+ctrl-SEND loss/duplication — stamped inbound RPCs are deduped per sender
+(duplicate JOIN/LEASE-RENEW re-send their ack instead of re-acting),
+outbound DRAINs are retransmitted on a bounded backoff chain until the peer
+leaves, and each lease sweep re-broadcasts the current view so a lost
+final VIEW-UPDATE heals (views are full snapshots, so any later broadcast
+subsumes a missed one).  With ``retry=None`` (the default) every byte on
+the wire is identical to the fire-and-forget plane.
 """
 
 from __future__ import annotations
 
-from typing import Callable, List
+import itertools
+from typing import Any, Callable, List, Optional
 
 from ..core import Fabric, NetAddr
 from . import messages as m
-from .registry import MembershipView, PeerRegistry
+from .registry import DRAINING, MembershipView, PeerRegistry
+from .retry import CtrlRetryPolicy, DedupWindow
 
 DEFAULT_LEASE_US = 2_000.0
 DEFAULT_SWEEP_US = 250.0
@@ -41,7 +53,8 @@ class ControlPlane:
 
     def __init__(self, fabric: Fabric, *, node: str = "ctrl",
                  nic: str = "efa", lease_us: float = DEFAULT_LEASE_US,
-                 sweep_us: float = DEFAULT_SWEEP_US, max_sweeps: int = 256):
+                 sweep_us: float = DEFAULT_SWEEP_US, max_sweeps: int = 256,
+                 retry: Optional[CtrlRetryPolicy] = None):
         self.fabric = fabric
         self.engine = fabric.add_engine(node, nic=nic)
         self.nic = nic
@@ -54,6 +67,12 @@ class ControlPlane:
         self._subs: List[NetAddr] = []
         # peer_id -> cb(record) invoked when a lease expiry kills the peer
         self.on_death: List[Callable] = []
+        # reliability: None => fire-and-forget PR-9 behaviour, bit-exact
+        self.retry = retry
+        self._dedup = DedupWindow()
+        self.stats = {"dup_dropped": 0, "acks_resent": 0,
+                      "drain_resends": 0, "rebroadcasts": 0}
+        self._seq = itertools.count(1)   # outbound RPC seqs (stamped sends)
         self.engine.submit_recvs(1 << 16, 32, self._on_msg)
         self._schedule_sweep()
 
@@ -86,26 +105,46 @@ class ControlPlane:
     def _on_msg(self, payload: bytes) -> None:
         msg = m.decode(payload)
         tr = self.fabric.tracer
+        if msg.wire_seq is not None and self._dedup.seen(
+                msg.wire_sender, msg.wire_seq):
+            # retransmission of an RPC we already acted on: re-send the ack
+            # (it may have been the lost half) but never re-apply the effect
+            self._on_dup(msg)
+            return
         if isinstance(msg, m.Join):
             # a peer may request a shorter lease; the server's is the cap
             lease = min(msg.lease_us, self.lease_us) if msg.lease_us \
                 else self.lease_us
+            before = self.registry.epoch
             self.registry.join(
                 peer_id=msg.peer_id, role=msg.role, addr=msg.addr,
                 nic=msg.nic, kv_desc=msg.kv_desc, geom=msg.geom,
                 n_pages=msg.n_pages, lease_us=lease, now=self.fabric.now,
-                schema=msg.schema, host=msg.host, nvlink=msg.nvlink)
+                schema=msg.schema, host=msg.host, nvlink=msg.nvlink,
+                rejoin=msg.prior_epoch is not None)
             if tr is not None:
-                tr.instant("ctrl", f"join:{msg.peer_id}",
-                           {"role": msg.role, "epoch": self.registry.epoch})
+                args = {"role": msg.role, "epoch": self.registry.epoch}
+                if msg.prior_epoch is not None:
+                    args["prior_epoch"] = msg.prior_epoch
+                tr.instant("ctrl", ("rejoin:" if msg.prior_epoch is not None
+                                    else "join:") + msg.peer_id, args)
             self.engine.submit_send(
                 msg.addr,
                 m.encode(m.JoinAck(msg.peer_id, self.registry.epoch, lease)))
-            self._broadcast()
+            if self.registry.epoch != before:
+                self._broadcast()
         elif isinstance(msg, m.LeaseRenew):
-            self.registry.renew(
+            ok = self.registry.renew(
                 msg.peer_id, now=self.fabric.now, lease_us=self.lease_us,
                 inflight=msg.inflight, free_pages=msg.free_pages)
+            # ack only *stamped* renews (retry-enabled client) and only on
+            # success — a client whose renews stop acking treats the plane
+            # as partitioned and re-JOINs once its budget is spent
+            if ok and msg.wire_seq is not None:
+                rec = self.registry.record(msg.peer_id)
+                if rec is not None:
+                    self.engine.submit_send(rec.addr, m.encode(
+                        m.LeaseAck(msg.peer_id, msg.wire_seq)))
         elif isinstance(msg, m.Leave):
             if self.registry.leave(msg.peer_id) is not None:
                 if tr is not None:
@@ -115,9 +154,35 @@ class ControlPlane:
         else:
             raise ValueError(f"control plane got unexpected {type(msg).__name__}")
 
+    def _on_dup(self, msg: Any) -> None:
+        """Handle a deduped retransmission: re-ack, never re-apply."""
+        if isinstance(msg, m.Join):
+            rec = self.registry.record(msg.peer_id)
+            if rec is not None:
+                lease = min(msg.lease_us, self.lease_us) if msg.lease_us \
+                    else self.lease_us
+                self.stats["acks_resent"] += 1
+                self.engine.submit_send(msg.addr, m.encode(
+                    m.JoinAck(msg.peer_id, self.registry.epoch, lease)))
+                return
+        elif isinstance(msg, m.LeaseRenew):
+            rec = self.registry.record(msg.peer_id)
+            if rec is not None:
+                self.stats["acks_resent"] += 1
+                self.engine.submit_send(rec.addr, m.encode(
+                    m.LeaseAck(msg.peer_id, msg.wire_seq)))
+                return
+        self.stats["dup_dropped"] += 1
+
     # -- scale-down orchestration -------------------------------------------
     def drain(self, peer_id: str, reason: str = "scale-down") -> bool:
-        """Start draining ``peer_id``: registry flip + DRAIN to the peer."""
+        """Start draining ``peer_id``: registry flip + DRAIN to the peer.
+
+        Under a retry policy the DRAIN is stamped (so the peer dedups
+        retransmissions) and retransmitted on the backoff chain until the
+        peer's record leaves the DRAINING state (it LEAVEd, or its lease
+        lapsed) or the budget is spent — a lost DRAIN no longer strands a
+        peer serving into a view that excludes it."""
         rec = self.registry.record(peer_id)
         if rec is None or self.registry.start_drain(peer_id) is None:
             return False
@@ -126,8 +191,33 @@ class ControlPlane:
             tr.instant("ctrl", f"drain:{peer_id}",
                        {"reason": reason, "epoch": self.registry.epoch})
         self._broadcast()
-        self.engine.submit_send(rec.addr, m.encode(m.Drain(peer_id, reason)))
+        if self.retry is None:
+            self.engine.submit_send(rec.addr, m.encode(m.Drain(peer_id, reason)))
+        else:
+            payload = m.encode(m.Drain(peer_id, reason),
+                               sender=self.engine.node, seq=next(self._seq))
+            self.engine.submit_send(rec.addr, payload)
+            self._arm_drain_retry(peer_id, rec.addr, payload, 0)
         return True
+
+    def _arm_drain_retry(self, peer_id: str, addr: NetAddr,
+                         payload: bytes, attempt: int) -> None:
+        pol = self.retry
+
+        def check() -> None:
+            rec = self.registry.record(peer_id)
+            if rec is None or rec.status != DRAINING:
+                return     # peer left (or died) — chain done
+            if attempt >= pol.max_retries:
+                recorder = getattr(self.fabric, "recorder", None)
+                if recorder is not None:
+                    recorder.dump("ctrl-retry-exhausted")
+                return
+            self.stats["drain_resends"] += 1
+            self.engine.submit_send(addr, payload)
+            self._arm_drain_retry(peer_id, addr, payload, attempt + 1)
+
+        self.fabric.loop.schedule(pol.timeout_us(attempt), check)
 
     # -- lease sweep ---------------------------------------------------------
     def stop(self) -> None:
@@ -149,6 +239,13 @@ class ControlPlane:
                                    {"epoch": self.registry.epoch})
                     for cb in self.on_death:
                         cb(rec)
+                self._broadcast()
+            elif self.retry is not None and self._subs:
+                # lossy-ctrl healing: views are full snapshots, so
+                # periodically re-pushing the current one subsumes any
+                # VIEW-UPDATE a subscriber missed (including the *last*
+                # one, which no later membership change would re-send)
+                self.stats["rebroadcasts"] += 1
                 self._broadcast()
             self._schedule_sweep()
 

@@ -145,15 +145,33 @@ class PeerRegistry:
              kv_desc: Optional[MrDesc], geom: Dict[str, Any], n_pages: int,
              lease_us: float, now: float,
              schema: Optional[Dict[str, Any]] = None,
-             host: Optional[str] = None, nvlink: bool = False) -> int:
-        """Admit (or re-admit) a peer; returns the new epoch."""
+             host: Optional[str] = None, nvlink: bool = False,
+             rejoin: bool = False) -> int:
+        """Admit (or re-admit) a peer; returns the current epoch.
+
+        Idempotent for retransmitted JOINs: if an *identical* LIVE record
+        already exists, the lease is refreshed and the current epoch is
+        returned without a bump — a duplicated JOIN SEND is a membership
+        no-op, so epochs bump exactly once per real change.  Any difference
+        (new addr, changed capability, non-LIVE status) is a real
+        (re-)registration and bumps.  ``rejoin=True`` labels the bump as a
+        partition re-join in the epoch log.
+        """
+        old = self._peers.get(peer_id)
+        if (old is not None and old.status == LIVE
+                and old.role == role and old.addr == addr and old.nic == nic
+                and old.kv_desc == kv_desc and old.geom == dict(geom)
+                and old.n_pages == n_pages and old.schema == schema
+                and old.host == host and old.nvlink == nvlink):
+            old.lease_expires_us = now + lease_us
+            return self._epoch
         self._peers[peer_id] = PeerRecord(
             peer_id=peer_id, role=role, addr=addr, nic=nic, kv_desc=kv_desc,
             geom=dict(geom), n_pages=n_pages, schema=schema,
             host=host, nvlink=nvlink, status=LIVE,
             lease_expires_us=now + lease_us, joined_us=now,
             free_pages=n_pages)
-        return self._bump(f"join:{peer_id}")
+        return self._bump(("rejoin:" if rejoin else "join:") + peer_id)
 
     def renew(self, peer_id: str, *, now: float, lease_us: float,
               inflight: int = 0, free_pages: int = 0) -> bool:

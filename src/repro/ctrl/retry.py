@@ -1,0 +1,83 @@
+"""Bounded retry policy + dedup window for ctrl RPCs over lossy SENDs.
+
+PR-9 made the data plane fault-tolerant but left the control plane
+fire-and-forget: ``core/faults.py`` never retries SENDs because replaying
+one is not idempotent *at the transport*.  This module supplies the two
+pieces that make replay safe one layer up:
+
+* :class:`CtrlRetryPolicy` — a frozen knob bundle (attempt budget,
+  ack timeout, exponential backoff) shared by ``ControlClient``,
+  ``ControlPlane``, and the serving ``Scheduler``.  ``None`` everywhere
+  means "PR-9 behaviour": no stamping, no retransmits, byte-identical
+  wire traffic.
+* :class:`DedupWindow` — a per-sender sliding window of recently seen
+  ``(sender, seq)`` RPC identities.  Receivers consult it before acting
+  on a stamped message, which turns at-least-once delivery (sender
+  retransmits until acked) into effectively-once processing.
+
+Both are pure bookkeeping: no RNG, no event scheduling — determinism
+guarantees are untouched.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, Set, Tuple
+
+
+@dataclass(frozen=True)
+class CtrlRetryPolicy:
+    """Knobs for the bounded exponential-backoff ctrl retransmit chain.
+
+    A retry-enabled sender transmits once, then re-checks for the ack at
+    ``ack_timeout_us``, ``ack_timeout_us * backoff_factor``, ... — one
+    retransmit per unacked check, at most ``max_retries`` retransmits
+    (so ``1 + max_retries`` sends total).  Exhaustion is terminal for
+    that RPC: the sender surfaces it (partition handling, recorder dump)
+    rather than retrying forever.
+    """
+
+    max_retries: int = 4
+    ack_timeout_us: float = 400.0
+    backoff_factor: float = 2.0
+
+    def timeout_us(self, attempt: int) -> float:
+        """Backoff delay before re-checking after send number ``attempt``."""
+        return self.ack_timeout_us * (self.backoff_factor ** attempt)
+
+
+class DedupWindow:
+    """Per-sender sliding window of recently processed RPC seqs.
+
+    ``seen(sender, seq)`` returns True when the identity was already
+    recorded (a retransmission of something this receiver acted on) and
+    records it otherwise.  The window keeps the last ``depth`` seqs per
+    sender — deep enough that a retransmit chain (a handful of sends)
+    can never outrun it, shallow enough that a long-lived plane doesn't
+    grow without bound.
+    """
+
+    def __init__(self, depth: int = 64):
+        self.depth = depth
+        self._seen: Dict[str, Set[int]] = {}
+        self._order: Dict[str, Deque[int]] = {}
+
+    def seen(self, sender: str, seq: int) -> bool:
+        """Record ``(sender, seq)``; True iff it was already in the window."""
+        seqs = self._seen.get(sender)
+        if seqs is None:
+            seqs = self._seen[sender] = set()
+            self._order[sender] = deque()
+        if seq in seqs:
+            return True
+        seqs.add(seq)
+        order = self._order[sender]
+        order.append(seq)
+        if len(order) > self.depth:
+            seqs.discard(order.popleft())
+        return False
+
+    def snapshot(self) -> Tuple[Tuple[str, int], ...]:
+        """Window sizes per sender (for tests / debugging)."""
+        return tuple(sorted((s, len(v)) for s, v in self._seen.items()))

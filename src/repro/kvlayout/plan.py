@@ -92,7 +92,8 @@ class TransferPlan:
                     dst_desc, dst_pages: Sequence[int], base_imm: int,
                     lo: int, hi: int,
                     on_sent: Optional[Callable[[int], None]] = None,
-                    on_error: Optional[Callable[[str], None]] = None) -> int:
+                    on_error: Optional[Callable[[str], None]] = None,
+                    fence_epoch: Optional[int] = None) -> int:
         """WRITE everything unlocked by layers [lo, hi): ONE WrBatch.
 
         ``src_pages``/``dst_pages`` are the two pools' page ids in canonical
@@ -101,8 +102,10 @@ class TransferPlan:
         group with its write count when that group has sender completions.
         ``on_error(reason)`` (fault injection) fires when a component
         group's WRITEs exhaust their retry budget — at most once per group;
-        the caller dedups across groups.  Returns the number of WRITEs
-        templated."""
+        the caller dedups across groups.  ``fence_epoch`` stamps every
+        WRITE with the sender's view epoch for the receiver's epoch fence
+        (zombie-writer guard); None posts unstamped.  Returns the number of
+        WRITEs templated."""
         stride = self.slot_bytes
         per_comp: Dict[int, List[ScatterDst]] = {}
         for ci, slot in self.span_writes(lo, hi):
@@ -117,7 +120,8 @@ class TransferPlan:
             dsts = per_comp[ci]
             cb = ((lambda n=len(dsts): on_sent(n))
                   if on_sent is not None else None)
-            groups.append((src_handle, dsts, base_imm + ci, cb, on_error))
+            groups.append((src_handle, dsts, base_imm + ci, cb, on_error,
+                           fence_epoch))
         engine.submit_scatters(groups)
         return sum(len(d) for d in per_comp.values())
 

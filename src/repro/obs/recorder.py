@@ -40,8 +40,11 @@ class FlightRecorder:
     fault plan exhausts hundreds of retries (reason ``retry-exhausted``)
     cannot crowd out the one ``update-abort`` dump that matters.
     First-class dump reasons: ``retry-exhausted`` (per-WR retry budget
-    spent), ``update-abort`` (rlweights update rolled back), plus the
-    PR-7/8 reasons (``commit-anomaly``, ``slo-breach``, ``health-flag``).
+    spent), ``update-abort`` (rlweights update rolled back), the PR-7/8
+    reasons (``commit-anomaly``, ``slo-breach``, ``health-flag``), plus
+    the control-plane reasons ``fence-rejected`` (a WRITE stamped with a
+    stale view epoch was refused at the receiver's engine fence) and
+    ``ctrl-retry-exhausted`` (a ctrl RPC retry chain ran out of budget).
     """
 
     def __init__(self, fabric, *, capacity: int = 2048, max_dumps: int = 8,

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import Fabric, MrDesc, NetAddr
-from ..ctrl import ControlClient, ControlPlane
+from ..ctrl import ControlClient, ControlPlane, CtrlRetryPolicy
 from ..ctrl import messages as m
 from ..kvlayout import (DECODE_MARGIN, KvSchema, TransferPlan, fill_cache,
                         schema_from_config, stage_cache)
@@ -128,7 +128,8 @@ class Prefiller:
                  layer_compute_us: float = 50.0,
                  ctrl: Optional[ControlPlane] = None,
                  peer_id: Optional[str] = None, renew_us: float = 500.0,
-                 max_renewals: int = 256, host: Optional[str] = None):
+                 max_renewals: int = 256, host: Optional[str] = None,
+                 ctrl_retry: Optional[CtrlRetryPolicy] = None):
         _check_supported(cfg)
         self.cfg = cfg
         self.params = params
@@ -166,13 +167,24 @@ class Prefiller:
                 # own slot-weighted outstanding ledger (same units)
                 inflight_fn=lambda: self.inflight_slots,
                 free_pages_fn=lambda: len(self.pool._free),
-                on_drain=self._on_drain)
+                on_drain=self._on_drain, retry=ctrl_retry)
             self.client.join(nic=nic, kv_desc=self.pool.desc,
                              geom=_geom_wire(cfg, self.schema),
                              n_pages=n_pages, schema=self.schema.to_wire())
 
     def _plan(self, seq_len: int) -> TransferPlan:
         return _cached_plan(self._plans, self.schema, seq_len)
+
+    def _fence_epoch(self) -> Optional[int]:
+        """View epoch stamped onto outbound KV WRITEs (zombie guard).
+
+        Read fresh at every span submission so a WRITE always carries the
+        epoch its sender currently believes in — a zombie that kept the
+        stale epoch of its lapsed lease is exactly what the receiving
+        engine's fence rejects.  None (no ctrl attachment, or JOIN-ACK not
+        yet received) posts unstamped, never-fenced WRITEs — pre-PR
+        behaviour."""
+        return self.client.epoch if self.client is not None else None
 
     def address(self) -> NetAddr:
         return self.engine.address(0)
@@ -304,7 +316,8 @@ class Prefiller:
                     self.engine, self.pool.handle, local_pages,
                     req.kv_desc, req.pages, req.imm, lo, hi,
                     on_sent=lambda n: cnt.__setitem__("done", cnt["done"] + n),
-                    on_error=on_xfer_error)
+                    on_error=on_xfer_error,
+                    fence_epoch=self._fence_epoch())
             if n:
                 self.span_log.append((req.request_id, lo, hi, n))
 
@@ -324,7 +337,8 @@ class Prefiller:
                     tail.size, req.imm + plan.n_imms, (tail_handle, 0),
                     (req.tail_desc, req.tail_idx * tail.size),
                     on_done=lambda: cnt.__setitem__("done", cnt["done"] + 1),
-                    on_error=on_xfer_error)
+                    on_error=on_xfer_error,
+                    fence_epoch=self._fence_epoch())
 
         self.fabric.loop.schedule(
             delay0 + cfg.n_layers * self.layer_compute_us + 1.0, send_tail)
@@ -365,7 +379,8 @@ class Decoder:
                  nic: str = "efa", page_tokens: int = 16, n_pages: int = 512,
                  max_tail: int = 16, ctrl: Optional[ControlPlane] = None,
                  peer_id: Optional[str] = None, renew_us: float = 500.0,
-                 max_renewals: int = 256, host: Optional[str] = None):
+                 max_renewals: int = 256, host: Optional[str] = None,
+                 ctrl_retry: Optional[CtrlRetryPolicy] = None):
         _check_supported(cfg)
         self.cfg = cfg
         self.params = params
@@ -387,6 +402,11 @@ class Decoder:
         self._attempt: Dict[int, int] = {}    # rid -> newest attempt seen
         # (rid, attempt, reason) per XferFail accepted — fault forensics
         self.xfer_failed: List[tuple] = []
+        # rid -> (attempt, reply_to, peer_id, reason): the last XferFail
+        # forwarded to the scheduler, kept for replay when a retransmitted
+        # SUBMIT shows the scheduler never saw it
+        self._xfail_sent: Dict[int, tuple] = {}
+        self.replayed_dones = 0               # ReqDone replays (lost-ack path)
         self.engine.submit_recvs(1 << 16, 32, self._on_msg)
         self.client: Optional[ControlClient] = None
         if ctrl is not None:
@@ -398,7 +418,7 @@ class Decoder:
                 inflight_fn=lambda: sum(st["plan"].n_slots
                                         for st in self._pending.values()),
                 free_pages_fn=lambda: len(self.pool._free),
-                on_drain=self._on_drain)
+                on_drain=self._on_drain, retry=ctrl_retry)
             self.client.join(nic=nic, kv_desc=self.pool.desc,
                              geom=_geom_wire(cfg, self.schema),
                              n_pages=n_pages, schema=self.schema.to_wire())
@@ -408,6 +428,14 @@ class Decoder:
 
     def address(self) -> NetAddr:
         return self.engine.address(0)
+
+    def crash(self) -> None:
+        """Simulated process death (mirror of :meth:`Prefiller.crash`):
+        stop decoding and stop renewing the lease — peers learn via lease
+        expiry, never via a goodbye message.  KV WRITEs already in flight
+        still land in this pool's memory (the NIC outlives the process in
+        the model), but no completion callback runs."""
+        self.alive = False
 
     # -- control-plane hooks ------------------------------------------------
     def _on_drain(self, msg: m.Drain) -> None:
@@ -432,8 +460,14 @@ class Decoder:
                 # scheduler re-routes every request still pointed at it
                 return
             cur = self._attempt.get(msg.request_id, -1)
-            if msg.attempt <= cur:
+            if msg.attempt < cur:
                 return      # stale duplicate of an attempt we've superseded
+            if msg.attempt == cur:
+                # retransmission of the attempt we're already serving: the
+                # scheduler didn't see our reply — replay it (lost-ack
+                # recovery), or stay silent while the attempt is in flight
+                self._replay_reply(msg)
+                return
             if msg.request_id in self._pending:
                 self.cancel(msg.request_id)   # superseded by a re-route
             self._attempt[msg.request_id] = msg.attempt
@@ -441,6 +475,11 @@ class Decoder:
                         n_decode=msg.n_decode, reply_to=msg.reply_to,
                         attempt=msg.attempt, vision_emb=msg.vision_emb)
         elif isinstance(msg, m.CancelReq):
+            # fence first, unconditionally: even a CANCEL stale by attempt
+            # number carries a valid zombie-writer fence (fences only
+            # tighten, so installing twice or out of order is harmless)
+            if msg.fence_node is not None and msg.fence_epoch is not None:
+                self.engine.set_fence(msg.fence_node, msg.fence_epoch)
             # only the newest attempt may be cancelled; an unordered SEND
             # can deliver a stale CANCEL after its re-route's SUBMIT
             if msg.attempt == self._attempt.get(msg.request_id):
@@ -465,9 +504,34 @@ class Decoder:
                 (msg.request_id, attempt, msg.reason))
             self.cancel(msg.request_id)
             if st["reply_to"] is not None:
+                self._xfail_sent[msg.request_id] = (
+                    attempt, st["reply_to"], msg.peer_id, msg.reason)
                 self.engine.submit_send(st["reply_to"], m.encode(m.XferFail(
                     request_id=msg.request_id, attempt=attempt,
                     peer_id=msg.peer_id, reason=msg.reason)))
+
+    def _replay_reply(self, msg: m.SubmitReq) -> None:
+        """Lost-ack recovery: the scheduler retransmitted a SUBMIT for the
+        attempt we already know about, meaning our terminal reply (REQ-DONE
+        or forwarded XFER-FAIL) may have been lost — re-send it.  While the
+        attempt is still in flight the retransmission is a pure duplicate
+        and is dropped (the reply will go out once, when it completes)."""
+        r = self.results.get(msg.request_id)
+        if r is not None and "tokens" in r and r.get("_attempt") == msg.attempt \
+                and r.get("_reply_to") is not None:
+            self.replayed_dones += 1
+            peer = self.client.peer_id if self.client else ""
+            self.engine.submit_send(r["_reply_to"], m.encode(m.ReqDone(
+                request_id=msg.request_id, attempt=r["_attempt"],
+                peer_id=peer, ttft_us=r["ttft_us"],
+                tokens=list(r["tokens"]))))
+            return
+        xf = self._xfail_sent.get(msg.request_id)
+        if xf is not None and xf[0] == msg.attempt:
+            attempt, reply_to, peer_id, reason = xf
+            self.engine.submit_send(reply_to, m.encode(m.XferFail(
+                request_id=msg.request_id, attempt=attempt,
+                peer_id=peer_id, reason=reason)))
 
     def cancel(self, request_id: int) -> bool:
         """Abandon an in-flight attempt: free pages + tail slot, drop every
@@ -525,6 +589,8 @@ class Decoder:
         remaining = {"n": len(expectations)}
 
         def part_done() -> None:
+            if not self.alive:
+                return      # crashed mid-handoff: never decode as a zombie
             st = self._pending.get(request_id)
             if st is None or st["imm"] != imm:
                 return      # attempt was cancelled / superseded
@@ -575,6 +641,10 @@ class Decoder:
         self._tail_free.append(r["tail_idx"])
         st = self._pending.pop(request_id, None)
         if st is not None and st["reply_to"] is not None:
+            # stash the reply identity so a retransmitted SUBMIT for this
+            # attempt can replay the REQ-DONE (lost-ack recovery)
+            r["_reply_to"] = st["reply_to"]
+            r["_attempt"] = st["attempt"]
             peer = self.client.peer_id if self.client else ""
             self.engine.submit_send(st["reply_to"], m.encode(m.ReqDone(
                 request_id=request_id, attempt=st["attempt"], peer_id=peer,

@@ -41,7 +41,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core import Fabric
-from ..ctrl import ControlPlane, MembershipView
+from ..ctrl import ControlPlane, CtrlRetryPolicy, MembershipView
 from ..ctrl import messages as m
 from ..kvlayout import DECODE_MARGIN, KvSchema, TransferPlan
 
@@ -53,7 +53,8 @@ POLICIES = ("round-robin", "least-loaded")
 class Scheduler:
     def __init__(self, fabric: Fabric, ctrl: ControlPlane, *,
                  node: str = "sched", policy: str = "round-robin",
-                 slo=None, max_attempts: int = 4):
+                 slo=None, max_attempts: int = 4,
+                 retry: Optional[CtrlRetryPolicy] = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.fabric = fabric
@@ -89,6 +90,17 @@ class Scheduler:
         self.ttft_ema: Optional[float] = None
         self.rerouted: List[int] = []
         self.routing_log: List[Tuple[int, int, str, str]] = []
+        # ctrl reliability (PR 10): when a CtrlRetryPolicy is attached every
+        # SubmitReq is stamped with (node, seq) and retransmitted on a
+        # bounded backoff chain until the attempt resolves — the decoder
+        # dedups/replays by attempt, so retransmits are safe.  None keeps
+        # the wire bytes bit-identical to the retry-less scheduler.
+        self.retry = retry
+        self._seq = itertools.count(1)
+        self.submit_resends = 0
+        self.cancel_resends = 0
+        # rids whose SubmitReq retry chain exhausted without resolution
+        self.ctrl_retry_exhausted: List[int] = []
         ctrl.subscribe(self.engine.address(0))
 
     # -- signals (read by the Autoscaler) -----------------------------------
@@ -199,10 +211,43 @@ class Scheduler:
                 self._outstanding[pid] = self._outstanding.get(pid, 0) + slots
             self.routing_log.append((rid, self.view.epoch,
                                      pf.peer_id, dc.peer_id))
-            self.engine.submit_send(dc.addr, m.encode(m.SubmitReq(
+            msg = m.SubmitReq(
                 request_id=rid, input_ids=ids, prefiller=pf.addr,
                 n_decode=n_decode, reply_to=self.engine.address(0),
-                attempt=attempt, vision_emb=vis)))
+                attempt=attempt, vision_emb=vis)
+            if self.retry is None:
+                self.engine.submit_send(dc.addr, m.encode(msg))
+            else:
+                payload = m.encode(msg, sender=self.engine.node,
+                                   seq=next(self._seq))
+                self.engine.submit_send(dc.addr, payload)
+                self._arm_submit_retry(rid, attempt, dc.addr, payload, 0)
+
+    def _arm_submit_retry(self, rid: int, attempt: int, addr, payload: bytes,
+                          k: int) -> None:
+        """Retransmit a SubmitReq until its attempt resolves (done, failed,
+        or re-routed) or the retry budget is spent.  The decoder replays
+        the terminal ReqDone/XferFail for an already-resolved attempt, so a
+        lost *reply* is recovered by the same chain as a lost request."""
+        pol = self.retry
+
+        def check() -> None:
+            st = self.inflight.get(rid)
+            if st is None or st["attempt"] != attempt:
+                return      # resolved or re-routed under a newer attempt
+            if k >= pol.max_retries:
+                self.ctrl_retry_exhausted.append(rid)
+                rec = getattr(self.fabric, "recorder", None)
+                if rec is not None:
+                    rec.note("ctrl", f"submit-retry-exhausted:req{rid}",
+                             {"attempt": attempt, "retries": k})
+                    rec.dump("ctrl-retry-exhausted")
+                return
+            self.submit_resends += 1
+            self.engine.submit_send(addr, payload)
+            self._arm_submit_retry(rid, attempt, addr, payload, k + 1)
+
+        self.fabric.loop.schedule(pol.timeout_us(k), check)
 
     def _release(self, st: Dict) -> None:
         for pid in (st["prefiller"], st["decoder"]):
@@ -222,10 +267,11 @@ class Scheduler:
             self._slot_cache.clear()
             new = MembershipView.from_wire(msg.epoch, msg.peers)
             self.view_epochs.append(new.epoch)
+            old_view = self.view
             gone = set(self.view.ids()) - set(new.ids())
             self.view = new
             if gone:
-                self._reroute(gone)
+                self._reroute(gone, old_view)
             self._pump()
         elif isinstance(msg, m.ReqDone):
             st = self.inflight.get(msg.request_id)
@@ -272,18 +318,48 @@ class Scheduler:
                      msg.attempt + 1, st["vision_emb"]))
             self._pump()
 
-    def _reroute(self, gone: set) -> None:
-        """Cancel + re-queue every in-flight request touching a gone peer."""
+    def _reroute(self, gone: set,
+                 old_view: Optional[MembershipView] = None) -> None:
+        """Cancel + re-queue every in-flight request touching a gone peer.
+
+        When the gone peer is the request's *prefiller*, the CancelReq
+        piggybacks an epoch fence ``(fence_node, fence_epoch)`` naming the
+        dead prefiller's fabric node and the new view's epoch: the decoder
+        installs it on its engine before freeing the attempt's pages, so a
+        zombie prefiller (expired lease, still computing) cannot land late
+        WRITEs into reallocated KV pages."""
         for rid, st in list(self.inflight.items()):
             if st["prefiller"] not in gone and st["decoder"] not in gone:
                 continue
             del self.inflight[rid]
             self._release(st)
             if st["decoder"] not in gone:
+                fence_node = None
+                if old_view is not None and st["prefiller"] in gone:
+                    p = old_view.peer(st["prefiller"])
+                    fence_node = p.addr.node if p is not None else None
                 # free the dead attempt's pages at the (live) decoder
-                self.engine.submit_send(st["decoder_addr"], m.encode(
-                    m.CancelReq(rid, st["attempt"])))
+                payload = m.encode(m.CancelReq(
+                    rid, st["attempt"], fence_node=fence_node,
+                    fence_epoch=(self.view.epoch
+                                 if fence_node is not None else None)))
+                self.engine.submit_send(st["decoder_addr"], payload)
+                if self.retry is not None:
+                    # CancelReq is idempotent at the decoder (pop of an
+                    # absent attempt is a no-op; fences only tighten), so
+                    # blind bounded retransmits cover ctrl-SEND loss
+                    self._blind_resend(st["decoder_addr"], payload,
+                                       "cancel_resends")
             self.rerouted.append(rid)
             self.backlog.appendleft(
                 (rid, st["ids"], st["n_decode"], st["attempt"] + 1,
                  st["vision_emb"]))
+
+    def _blind_resend(self, addr, payload: bytes, counter: str) -> None:
+        """Schedule bounded blind retransmits of an idempotent ctrl SEND."""
+        pol = self.retry
+        for k in range(min(2, pol.max_retries)):
+            def resend(addr=addr, payload=payload, counter=counter) -> None:
+                setattr(self, counter, getattr(self, counter) + 1)
+                self.engine.submit_send(addr, payload)
+            self.fabric.loop.schedule(pol.timeout_us(k), resend)

@@ -1,0 +1,402 @@
+"""Reliable-control-plane tests: idempotent ctrl RPCs under SEND loss,
+epoch-fenced data writes, and partition/re-join reconciliation.
+
+Covers the PR's three pillars end to end:
+
+* **retryable ctrl RPCs** — golden unstamped wire bytes (the reliability
+  envelope adds zero bytes until a sender opts in), the ``_rpc`` stamp
+  round-trip, receiver-side dedup windows, JOIN-ack-loss recovery, and
+  registry idempotency (epoch bumps exactly once per membership change,
+  no matter how SENDs are duplicated);
+* **epoch fencing** — a zombie prefiller (lease lapsed, process still
+  computing) keeps WRITing after the scheduler re-routes; every late WRITE
+  is rejected at the decoder's engine fence, the flight recorder dumps the
+  fenced WR, and the re-routed request still produces monolithic-exact
+  tokens;
+* **partition re-join** — a peer cut off from the plane exhausts its renew
+  retry budget, re-JOINs with ``prior_epoch`` advertised, and the registry
+  reconciles under a fresh epoch; plus the full membership-churn storm
+  (join + drain + crash + partition) under 10% ctrl-SEND loss with zero
+  leaked pages and exactly-once adoption.
+
+Property tests ride the optional-hypothesis shim (CI sets
+``REQUIRE_HYPOTHESIS=1``; without the dev extra they skip-clean).
+"""
+
+import json
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import Fabric, FaultPlan, NetAddr
+from repro.ctrl import (Autoscaler, ControlClient, ControlPlane,
+                        CtrlRetryPolicy, DedupWindow, MembershipView,
+                        PeerRegistry, ScalingPolicy)
+from repro.ctrl import messages as m
+from test_ctrl import WirePeer as _Peer
+from test_ctrl import _FakeCtrl, _FakeSched, _pf
+
+
+@pytest.fixture(scope="module")
+def model():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("stablelm-3b").reduced()
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# wire codec: golden bytes, RPC envelope, forward compatibility
+# ---------------------------------------------------------------------------
+
+def test_unstamped_wire_bytes_golden():
+    """The reliability envelope is pay-for-what-you-use: unstamped
+    encodings are bit-exact with the pre-PR wire format (literal bytes
+    pinned here so a codec change cannot slip through)."""
+    assert m.encode(m.LeaseRenew("p0", 3, 12)) == (
+        b'LEAS\x00{"peer_id":"p0","inflight":3,"free_pages":12}')
+    assert m.encode(m.Leave("p0")) == b'LEAV\x00{"peer_id":"p0"}'
+    assert m.encode(m.Drain("p0")) == (
+        b'DRAN\x00{"peer_id":"p0","reason":"scale-down"}')
+    # CANCEL omits its optional fence fields while None
+    assert m.encode(m.CancelReq(9, 1)) == (
+        b'CANC\x00{"request_id":9,"attempt":1}')
+
+
+def test_rpc_envelope_roundtrip():
+    msg = m.LeaseRenew("p0", 1, 2)
+    raw = m.encode(msg, sender="p0", seq=7)
+    assert b'"_rpc":["p0",7]' in raw
+    back = m.decode(raw)
+    assert back == msg                       # identity, not payload, differs
+    assert back.wire_sender == "p0" and back.wire_seq == 7
+    plain = m.decode(m.encode(msg))
+    assert plain.wire_sender is None and plain.wire_seq is None
+    with pytest.raises(ValueError, match="sender"):
+        m.encode(msg, sender="p0")
+
+
+def test_unknown_trailing_fields_tolerated():
+    raw = b'LEAV\x00{"peer_id":"p0","future_field":{"x":1},"_rpc":["q",3]}'
+    got = m.decode(raw)
+    assert got == m.Leave("p0")
+    assert got.wire_sender == "q" and got.wire_seq == 3
+
+
+def test_cancel_fence_fields_roundtrip():
+    c = m.CancelReq(4, 2, fence_node="p0", fence_epoch=9)
+    assert m.decode(m.encode(c)) == c
+
+
+def test_dedup_window_slides_per_sender():
+    w = DedupWindow(depth=4)
+    assert not w.seen("a", 1)
+    assert w.seen("a", 1)                    # duplicate caught
+    for s in range(2, 7):
+        assert not w.seen("a", s)            # fresh seqs admitted
+    assert not w.seen("a", 1)                # evicted past the window depth
+    assert not w.seen("b", 6)                # windows are per-sender
+
+
+# ---------------------------------------------------------------------------
+# registry: duplicated/re-joined membership changes bump exactly once
+# ---------------------------------------------------------------------------
+
+_REG_KW = dict(role="prefill", addr=NetAddr("x", 0), nic="efa", kv_desc=None,
+               geom={}, n_pages=4, lease_us=100.0)
+
+
+def test_registry_duplicate_join_is_idempotent():
+    reg = PeerRegistry()
+    assert reg.join(peer_id="a", now=0.0, **_REG_KW) == 1
+    # byte-identical retransmitted JOIN: lease refreshed, NO epoch bump
+    assert reg.join(peer_id="a", now=10.0, **_REG_KW) == 1
+    assert reg.epoch == 1
+    assert reg.record("a").lease_expires_us == 110.0
+    # a changed advertisement is a real membership change
+    assert reg.join(peer_id="a", now=20.0, rejoin=True,
+                    **dict(_REG_KW, n_pages=8)) == 2
+    assert any(e == "rejoin:a" for _, e in reg.epoch_log)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seqn=st.lists(st.sampled_from(["a", "b", "c"]), min_size=1,
+                     max_size=10),
+       dups=st.lists(st.integers(0, 2), min_size=10, max_size=10))
+def test_fuzz_duplicated_joins_bump_epoch_once(seqn, dups):
+    """For ANY join order with ANY duplication, the epoch advances exactly
+    once per *distinct* membership change — retransmissions never bump."""
+    reg = PeerRegistry()
+    seen = set()
+    for i, pid in enumerate(seqn):
+        for _ in range(1 + dups[i]):
+            reg.join(peer_id=pid, now=float(i), **_REG_KW)
+        seen.add(pid)
+        assert reg.epoch == len(seen)
+
+
+@settings(max_examples=40, deadline=None)
+@given(peer=st.text(max_size=12), inflight=st.integers(0, 2 ** 31 - 1),
+       free=st.integers(0, 2 ** 31 - 1), sender=st.text(max_size=12),
+       seq=st.integers(0, 2 ** 62))
+def test_fuzz_codec_roundtrip_with_rpc_stamp(peer, inflight, free, sender,
+                                             seq):
+    msg = m.LeaseRenew(peer, inflight, free)
+    back = m.decode(m.encode(msg, sender=sender, seq=seq))
+    assert back == msg
+    assert back.wire_sender == sender and back.wire_seq == seq
+
+
+@settings(max_examples=40, deadline=None)
+@given(extra=st.dictionaries(st.text(min_size=1, max_size=6),
+                             st.integers(), max_size=4))
+def test_fuzz_unknown_fields_never_crash_decode(extra):
+    base = json.loads(m.encode(m.Leave("p0")).split(b"\0", 1)[1])
+    base.update({"z_" + k: v for k, v in extra.items()})
+    assert m.decode(b"LEAV\x00" + json.dumps(base).encode()) == m.Leave("p0")
+
+
+# ---------------------------------------------------------------------------
+# retry over the wire: JOIN-ack loss, partition detection, re-join
+# ---------------------------------------------------------------------------
+
+def test_join_ack_loss_recovered_by_retry(audited_fabrics):
+    """Every JACK to pf0 is dropped for the first 500us: the client's JOIN
+    chain retransmits, the plane dedups the duplicate JOINs (epoch bumps
+    once) and re-acks, and the peer ends up joined."""
+    fab = Fabric(seed=31)
+    pol = CtrlRetryPolicy(max_retries=3, ack_timeout_us=200.0)
+    ctrl = ControlPlane(fab, nic="efa", max_sweeps=30, retry=pol)
+    plan = FaultPlan(fab, seed=5)
+    plan.inject_ctrl("ctrl", "pf0", drop_prob=1.0)
+    fab.loop.schedule(500.0, lambda: plan.clear("ctrl", "pf0"))
+    a = _Peer(fab, ctrl, "pf0", "prefill", retry=pol, max_renewals=12)
+    fab.run()
+    assert a.client.joined and not a.client.join_exhausted
+    assert a.client.join_resends >= 1
+    assert ctrl.stats["acks_resent"] >= 1      # dup JOIN re-acked, not re-run
+    assert plan.ctrl_stats["drops"] >= 1
+    assert ctrl.registry.epoch == 1            # bumped exactly once
+
+
+def test_partition_rejoin_reconciles(audited_fabrics):
+    """pf0 is fully cut off from the plane: its lease lapses (epoch bump,
+    scheduler-side eviction), its renew chain exhausts (client-side
+    partition detector), and once healed it re-JOINs with ``prior_epoch``
+    — fresh epoch, LIVE record, renewals resumed."""
+    fab = Fabric(seed=32)
+    pol = CtrlRetryPolicy(max_retries=2, ack_timeout_us=150.0)
+    ctrl = ControlPlane(fab, nic="efa", lease_us=500.0, sweep_us=100.0,
+                        max_sweeps=80, retry=pol)
+    a = _Peer(fab, ctrl, "pf0", "prefill", retry=pol, renew_us=100.0,
+              max_renewals=80)
+    _Peer(fab, ctrl, "pf1", "prefill", retry=pol, renew_us=100.0,
+          max_renewals=80)
+    plan = FaultPlan(fab, seed=6)
+
+    def partition():
+        plan.inject_ctrl("pf0", "ctrl", drop_prob=1.0)
+        plan.inject_ctrl("ctrl", "pf0", drop_prob=1.0)
+
+    def heal():
+        plan.clear("pf0", "ctrl")
+        plan.clear("ctrl", "pf0")
+
+    fab.loop.schedule(250.0, partition)
+    fab.loop.schedule(1_700.0, heal)
+    fab.run()
+    assert a.client.rejoins == 1 and a.client.joined
+    events = [e for _, e in ctrl.registry.epoch_log]
+    assert "dead:pf0" in events and "rejoin:pf0" in events
+    assert events.index("dead:pf0") < events.index("rejoin:pf0")
+    rec = ctrl.registry.record("pf0")
+    assert rec is not None and rec.status == "live"
+    assert a.client.epoch == ctrl.registry.epoch
+    assert a.client.renew_resends >= 1
+
+
+def test_ctrl_faultplan_attached_inactive_is_byte_identical():
+    """A FaultPlan with no ctrl knobs must not perturb the control plane:
+    identical view payload bytes, identical virtual end time."""
+
+    def scenario(with_plan):
+        import itertools
+
+        from repro.core.domain import MemoryRegion
+
+        # region ids are process-global and leak into MrDesc wire bytes;
+        # pin them so the two runs are comparable byte-for-byte
+        MemoryRegion._ids = itertools.count()
+        fab = Fabric(seed=33)
+        ctrl = ControlPlane(fab, nic="efa", max_sweeps=12)
+        if with_plan:
+            FaultPlan(fab, seed=9)
+        tap = []
+        eng = fab.add_engine("tap", nic="efa")
+        eng.submit_recvs(1 << 14, 16, lambda p: tap.append(bytes(p)))
+        ctrl.subscribe(eng.address(0))
+        _Peer(fab, ctrl, "pf0", "prefill", max_renewals=6)
+        _Peer(fab, ctrl, "dc0", "decode", max_renewals=6)
+        fab.run()
+        return tap, fab.now
+
+    bytes_a, end_a = scenario(False)
+    bytes_b, end_b = scenario(True)
+    assert bytes_a == bytes_b and end_a == end_b
+
+
+# ---------------------------------------------------------------------------
+# serving: lost REQ-DONE replayed, zombie writes fenced, churn storm
+# ---------------------------------------------------------------------------
+
+def test_lost_reqdone_replayed_by_submit_retry(model, audited_fabrics):
+    """Every decoder->scheduler SEND is dropped until t=2.5ms: the DONE for
+    the only request is lost, the scheduler's SUBMIT retry chain keeps
+    retransmitting, and the decoder replays the terminal reply once the
+    path heals — no request is ever re-executed."""
+    from repro.serving import Decoder, Prefiller, Scheduler
+    cfg, params = model
+    fab = Fabric(seed=34)
+    pol = CtrlRetryPolicy()
+    ctrl = ControlPlane(fab, nic="efa", max_sweeps=80, retry=pol)
+    Prefiller(fab, "p0", cfg, params, nic="efa", ctrl=ctrl, max_renewals=80,
+              ctrl_retry=pol)
+    d0 = Decoder(fab, "d0", cfg, params, nic="efa", ctrl=ctrl,
+                 max_renewals=80, ctrl_retry=pol)
+    sched = Scheduler(fab, ctrl, retry=pol)
+    plan = FaultPlan(fab, seed=7)
+    plan.inject_ctrl("d0", "sched", drop_prob=1.0)
+    fab.loop.schedule(2_500.0, lambda: plan.clear("d0", "sched"))
+    rng = np.random.default_rng(2)
+    rid = sched.submit(rng.integers(0, cfg.vocab, size=24), n_decode=2)
+    fab.run()
+    assert rid in sched.completed and len(sched.completed) == 1
+    assert sched.submit_resends >= 1
+    assert d0.replayed_dones >= 1
+    assert not sched.ctrl_retry_exhausted
+    assert len(d0.pool._free) == d0.pool.n_pages and not d0._pending
+
+
+def test_zombie_prefiller_writes_are_fenced(model, audited_fabrics,
+                                            tmp_path):
+    """q0's lease lapses while its process keeps computing and WRITing (a
+    zombie, not a crash).  The scheduler re-routes with a fence-bearing
+    CANCEL; every late WRITE from q0 is rejected at d0's engine fence
+    (health ``fenced`` count, flight dump carrying the fenced WR and its
+    stale epoch), and the re-routed requests produce monolithic-exact
+    tokens from reallocated pages."""
+    import jax.numpy as jnp
+
+    from repro.models import decode_step, prefill
+    from repro.serving import Decoder, Prefiller, Scheduler
+    cfg, params = model
+    fab = Fabric(seed=9)
+    ctrl = ControlPlane(fab, nic="efa", lease_us=800.0, sweep_us=200.0,
+                        max_sweeps=60)
+    # slow layers: the handoff straddles the lease expiry, so q0 is still
+    # WRITing when the fence goes up
+    q0 = Prefiller(fab, "q0", cfg, params, nic="efa", ctrl=ctrl,
+                   renew_us=200.0, max_renewals=60, layer_compute_us=400.0)
+    d0 = Decoder(fab, "d0", cfg, params, nic="efa", ctrl=ctrl,
+                 renew_us=200.0, max_renewals=60)
+    sched = Scheduler(fab, ctrl)
+    rng = np.random.default_rng(2)
+    ids = [rng.integers(0, cfg.vocab, size=24) for _ in range(2)]
+    rids = [sched.submit(i, n_decode=2) for i in ids]
+    # zombie: stop the lease heartbeat only — q0.alive stays True, so it
+    # keeps serving the DispatchReqs it already accepted
+    fab.loop.schedule(130.0,
+                      lambda: setattr(q0.client, "alive_fn", lambda: False))
+    spare = []
+    fab.loop.schedule_at(500.0, lambda: spare.append(Prefiller(
+        fab, "q1", cfg, params, nic="efa", ctrl=ctrl, renew_us=200.0,
+        max_renewals=60)))
+    fab.run()
+
+    # eviction happened via lease expiry; q0 never re-joined (no retry
+    # policy => no partition detector) and stayed a zombie
+    assert ctrl.registry.record("q0") is None
+    assert q0.alive and q0.client.rejoins == 0  # a zombie, not a re-joiner
+    # every late WRITE was fenced, observable end to end
+    assert fab.health.fault_counts.get("fenced", 0) > 0
+    assert d0.engine.fences.get("q0", 0) >= 2
+    dump = next(p for p in fab.recorder.dumps if "fence-rejected" in p)
+    doc = json.load(open(dump))
+    fenced_notes = [e for e in doc["events"]
+                    if isinstance(e[2], str) and e[2] == "fenced:q0"]
+    assert fenced_notes
+    args = fenced_notes[0][3]
+    assert args["epoch"] < args["fence"]       # the WR's stamp was stale
+    # every request completed exactly once: work the zombie finished
+    # *before* its lease lapsed stands (attempt 0 on q0); work that
+    # straddled the eviction was fenced, cancelled, and re-ran on q1
+    assert len(sched.completed) == 2 and not sched.inflight
+    assert 1 <= len(sched.rerouted) <= 2
+    for rid, seq in zip(rids, ids):
+        r = sched.completed[rid]
+        if rid in sched.rerouted:
+            assert r["prefiller"] == "q1" and r["attempt"] >= 1
+        else:
+            assert r["prefiller"] == "q0" and r["attempt"] == 0
+        # tokens are monolithic-exact either way — fenced WRs never
+        # corrupted the pages the re-routed attempt decoded from
+        lg, cache = prefill(params, jnp.asarray(seq)[None], cfg,
+                            max_len=len(seq) + 64, moe_mode="dense")
+        toks = [int(jnp.argmax(lg[0]))]
+        lg, _ = decode_step(params, jnp.asarray([[toks[-1]]]),
+                            jnp.asarray([len(seq)], jnp.int32), cache, cfg,
+                            moe_mode="dense")
+        toks.append(int(jnp.argmax(lg[0])))
+        assert r["tokens"] == toks
+    # nothing leaked on the surviving fleet
+    assert len(d0.pool._free) == d0.pool.n_pages and not d0._pending
+    assert len(spare[0].pool._free) == spare[0].pool.n_pages
+
+
+@pytest.mark.slow
+def test_churn_storm_zero_leaks_exactly_once(model):
+    """Acceptance: the full membership-churn storm (join + drain + crash +
+    partition/re-join) under 10% ctrl-SEND loss completes every request
+    exactly once with zero leaked pages on every live peer."""
+    from benchmarks.bench_chaos import ctrl_churn
+    cfg, params = model
+    row = ctrl_churn(0.10, cfg, params)
+    assert row["n_completed"] == row["n_reqs"]
+    assert row["n_failed"] == 0
+    assert row["zero_leaked_pages"] is True
+    assert row["exactly_once_adoption"] is True
+    assert row["rejoins"] == 1                 # partition detector fired once
+    assert row["recovery_us"] > 0              # p0 left and re-entered view
+    assert row["ctrl_drops"] > 0               # faults actually fired
+
+
+# ---------------------------------------------------------------------------
+# autoscaler churn guard
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_churn_guard_holds_during_epoch_churn():
+    """Scale decisions are rate-limited while the view epoch churns: with
+    ``churn_guard_epochs`` bumps inside ``churn_guard_window_us`` the step
+    returns None (``churn_holds`` counts them); once the window drains the
+    policy acts again.  Disabled by default."""
+    assert ScalingPolicy().churn_guard_epochs == 0
+    ctrl, sched = _FakeCtrl(MembershipView(1, (_pf("a"),))), _FakeSched()
+    pol = ScalingPolicy(queue_high=3, cooldown_us=0.0, max_prefillers=5,
+                        churn_guard_epochs=2, churn_guard_window_us=1_000.0)
+    spawned = []
+    sc = Autoscaler(ctrl, sched, spawned.append, policy=pol, auto=False,
+                    next_index=1)
+    sched.depth = 10                           # overloaded throughout
+    assert sc.step(0.0) == "up"                # stable view: acts
+    ctrl._view = MembershipView(2, (_pf("a"),))
+    assert sc.step(100.0) == "up"              # 1 bump in window: still acts
+    ctrl._view = MembershipView(3, (_pf("a"),))
+    assert sc.step(200.0) is None              # 2 bumps in window: held
+    assert sc.churn_holds == 1
+    ctrl._view = MembershipView(4, (_pf("a"),))
+    assert sc.step(300.0) is None and sc.churn_holds == 2
+    assert sc.step(1_400.0) == "up"            # window drained: acts again
+    assert spawned == [1, 2, 3]
